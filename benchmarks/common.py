@@ -1,0 +1,47 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "emit", "jit_masker"]
+
+
+def jit_masker(baseline, step: int):
+    """Jit ``baseline.mask(lp, prefixes, step)`` with the baseline's device
+    arrays passed as runtime ARGUMENTS (closed-over jax.Arrays become HLO
+    literals, which sends XLA constant-folding into minutes-long spirals on
+    multi-MB tries)."""
+    import copy
+
+    import jax as _jax
+
+    arrays = {k: v for k, v in baseline.__dict__.items()
+              if isinstance(v, _jax.Array)}
+
+    def f(lp, pf, arrs):
+        b = copy.copy(baseline)
+        b.__dict__.update(arrs)
+        return b.mask(lp, pf, step)
+
+    jf = _jax.jit(f)
+    return lambda lp, pf: jf(lp, pf, arrays)
+
+
+def time_fn(fn, *args, trials: int = 30, warmup: int = 3) -> tuple[float, float]:
+    """Median and std of wall-time (seconds) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), float(np.std(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV contract of benchmarks.run: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")

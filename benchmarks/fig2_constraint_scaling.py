@@ -1,0 +1,36 @@
+"""Figure 2 / Table 4a — per-step overhead vs constraint-set size |C|.
+
+|V|=2048, L=8 fixed; |C| swept (paper: 1e5..1e8; CPU container: 1e4..1e7,
+CPU-trie capped at 1e6 — the paper's own CPU trie OOMs at 1e8)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks import table1_latency as t1
+
+
+def run(quick: bool = False):
+    sizes = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+    out = {}
+    for c in sizes:
+        res = t1.run(
+            n_constraints=c,
+            trials=6 if c >= 10_000_000 else 12,
+            with_cpu_trie=c <= 1_000_000,
+            quick=False,
+        )
+        for name, secs in res.items():
+            emit(f"fig2/{name}/C={c}", secs * 1e6, "")
+        out[c] = res
+    # scaling claim: STATIC stays ~flat while PPV grows with log|C|
+    cs = sorted(out)
+    static_growth = out[cs[-1]]["static"] / max(out[cs[0]]["static"], 1e-9)
+    ppv_growth = out[cs[-1]]["ppv_exact"] / max(out[cs[0]]["ppv_exact"], 1e-9)
+    emit("fig2/static_growth_ratio", static_growth * 100,
+         f"ppv_growth={ppv_growth:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

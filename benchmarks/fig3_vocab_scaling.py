@@ -1,0 +1,69 @@
+"""Figure 3 / Table 4b — per-step overhead vs SID vocabulary size |V|.
+
+|C|=10^6 fixed (paper: 10^7), L=8; |V| swept 256..32768."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, jit_masker, time_fn
+from repro.core import TransitionMatrix, constrain_log_probs
+from repro.core.baselines import HashBitmapBaseline, PPVBaseline
+from repro.core.trie import random_constraint_set
+
+LENGTH, BEAMS = 8, 140
+
+
+def run(n_constraints: int = 1_000_000, quick: bool = False):
+    vocabs = [256, 2048] if quick else [256, 1024, 2048, 8192, 32768]
+    trials = 8 if quick else 12
+    results = {}
+    for V in vocabs:
+        rng = np.random.default_rng(0)
+        sids = random_constraint_set(rng, n_constraints, V, LENGTH)
+        tm = TransitionMatrix.from_sids(sids, V, dense_d=2)
+        prefixes = jnp.asarray(
+            sids[rng.integers(0, sids.shape[0], BEAMS)].astype(np.int32))
+        logits = jnp.asarray(rng.normal(size=(BEAMS, V)).astype(np.float32))
+        base = jax.jit(lambda x: jax.nn.log_softmax(x, axis=-1))
+        t_base, _ = time_fn(base, logits, trials=trials)
+
+        # mid-depth step 4 states (representative sparse level)
+        nodes = jnp.ones((BEAMS,), jnp.int32)
+        for t in range(4):
+            lp = jnp.zeros((BEAMS, V), jnp.float32)
+            _, nxt = constrain_log_probs(lp, nodes, tm, t)
+            nodes = nxt[jnp.arange(BEAMS), prefixes[:, t]]
+
+        f_static = jax.jit(
+            lambda lp, n, tmat: constrain_log_probs(
+                jax.nn.log_softmax(lp, -1), n, tmat, 4)
+        )
+        t_static, _ = time_fn(lambda: f_static(logits, nodes, tm), trials=trials)
+
+        lsm = jax.jit(lambda lp: jax.nn.log_softmax(lp, -1))
+        ppv = PPVBaseline(sids, V, exact=True)
+        f_ppv = jit_masker(ppv, 4)
+        t_ppv, _ = time_fn(lambda: f_ppv(lsm(logits), prefixes), trials=trials)
+
+        bmp = HashBitmapBaseline(sids, V, log2_bits=25)
+        f_bmp = jit_masker(bmp, 4)
+        t_bmp, _ = time_fn(lambda: f_bmp(lsm(logits), prefixes), trials=trials)
+
+        results[V] = {
+            "static": max(t_static - t_base, 0),
+            "ppv_exact": max(t_ppv - t_base, 0),
+            "hash_bitmap": max(t_bmp - t_base, 0),
+        }
+        for k, v in results[V].items():
+            emit(f"fig3/{k}/V={V}", v * 1e6, "")
+    vs = sorted(results)
+    growth = results[vs[-1]]["static"] / max(results[vs[0]]["static"], 1e-9)
+    emit("fig3/static_growth_ratio", growth * 100,
+         f"V {vs[0]}->{vs[-1]}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

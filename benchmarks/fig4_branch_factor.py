@@ -1,0 +1,53 @@
+"""Figure 4 / Appendix D — VNTK masking-kernel scaling with max branch factor.
+
+For each B in {2^1..2^k}: |V| = B, |C| = 10^5 random SIDs (paper 10^6), trie
+flattened to CSR, the jitted masking kernel timed alone.  Claim: constant
+runtime until the burst read saturates bandwidth, then asymptotically linear
+O(B)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import TransitionMatrix
+from repro.core.trie import random_constraint_set
+from repro.kernels import ops
+
+LENGTH, BEAMS = 8, 140
+
+
+def run(n_constraints: int = 100_000, quick: bool = False):
+    powers = [1, 3, 5, 7] if quick else [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    trials = 8 if quick else 15
+    results = {}
+    for p in powers:
+        B = 2 ** p
+        V = B
+        rng = np.random.default_rng(0)
+        sids = random_constraint_set(rng, n_constraints, V, LENGTH)
+        tm = TransitionMatrix.from_sids(sids, V, dense_d=0)
+        # paper protocol: |V| = B, so the ROOT's branch factor == B — time
+        # the masking kernel against the root state.
+        bmax = max(tm.bmax_for_step(0), 1)
+        nodes = jnp.ones((BEAMS,), jnp.int32)
+        lp = jnp.asarray(rng.normal(size=(BEAMS, V)).astype(np.float32))
+
+        def f():
+            return ops.vntk(lp, nodes, tm.row_pointers, tm.edges, bmax, V,
+                            impl="xla")
+
+        t, s = time_fn(f, trials=trials)
+        results[B] = t
+        emit(f"fig4/B={B}", t * 1e6, f"bmax={bmax}")
+    bs = sorted(results)
+    if len(bs) >= 3:
+        lin = results[bs[-1]] / max(results[bs[-2]], 1e-9)
+        emit("fig4/tail_doubling_ratio", lin * 100,
+             "≈200 => linear regime (paper Fig. 4)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""§5.3 + Appendix B — memory model vs actual structure bytes.
+
+Builds real tries at growing |C| and compares measured bytes against the
+U_max bound; also reproduces the paper's closed-form YouTube numbers
+(|C|=2x10^7 -> ~1.46 GB; ~90 MB per 1M constraints)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import TransitionMatrix
+from repro.core.memory_model import capacity_rule_of_thumb, measure, u_max
+from repro.core.trie import random_constraint_set
+
+
+def run(quick: bool = False):
+    sizes = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+    results = {}
+    for c in sizes:
+        rng = np.random.default_rng(0)
+        sids = random_constraint_set(rng, c, 2048, 8)
+        tm = TransitionMatrix.from_sids(sids, 2048, dense_d=2)
+        m = measure(tm)
+        results[c] = m
+        emit(f"memory/C={c}", m["total_bytes"] / 1e6,
+             f"MB;bound={m['u_max_bytes']/1e6:.1f}MB;util={m['utilization']:.2f}")
+    # paper closed-form checkpoints
+    yt = u_max(2048, 20_000_000, 8, dense_d=2)
+    emit("memory/paper_youtube_bound", yt / 1e9, "GB (paper: ~1.46 GB)")
+    per_m = capacity_rule_of_thumb(1_000_000)
+    emit("memory/per_million_rule", per_m / 1e6, "MB (paper: ~90 MB)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,180 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ^ must precede jax import (the re-lowering needs the production mesh).
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+"""Roofline analysis (deliverable g).
+
+Derives the three roofline terms per (arch x shape) on the single-pod mesh:
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (197 TF/s bf16, per chip)
+    memory     = HLO_bytes / HBM_bw               (819 GB/s, per chip)
+    collective = link_bytes / link_bw             (~50 GB/s/link ICI)
+
+cost_analysis() counts while-loop bodies ONCE, so for scanned families every
+metric is corrected by 2-point extrapolation: lower the cell with
+layer_unroll=1 and layer_unroll=2 (inner scans fully unrolled in both), then
+
+    corrected = f(u1) + (L_eff - 1) * (f(u2) - f(u1)).
+
+MODEL_FLOPS is the analytic useful-work term (6*N*D dense / 6*N_active*D
+MoE + exact attention flops); the reported roofline fraction is
+(MODEL_FLOPS / peak) / max(three terms) — i.e. the fraction of the dominant
+roofline bound spent on useful math.
+"""
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e-class target)
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+SCANNED = {"lm", "gr", "gnn"}
+
+
+def _l_eff(bundle):
+    cfg = bundle.config
+    if bundle.family == "gnn":
+        return cfg.n_layers
+    if getattr(cfg, "moe", None) is not None:
+        return cfg.n_layers - cfg.moe.first_dense_layers
+    return cfg.n_layers
+
+
+def _measure(arch, shape, overrides):
+    from repro.distributed.collectives import parse_collective_bytes
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=False)
+    cell = build_cell(arch, shape, mesh, cfg_overrides=overrides)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(
+            cell.fn, in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        ).lower(*cell.args).compile()
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "link_bytes": float(coll["link_bytes"]),
+        "model_flops": float(cell.model_flops_per_chip),
+    }
+
+
+def corrected_cell(arch, shape, bundle, verbose=True):
+    fam = bundle.family
+    # Huge chunk sizes collapse every inner scan (attention q/kv chunks, CE
+    # chunks) to a SINGLE iteration, so cost_analysis counts their body
+    # exactly — without the compile-time blowup of fully unrolled scans.
+    # Chunking does not change the math, only the schedule.
+    overrides = {}
+    if fam in ("lm", "gr"):
+        overrides.update({"attn_chunk_q": 1 << 20, "attn_chunk_kv": 1 << 20,
+                          "ce_chunk": 1 << 20})
+    u1 = _measure(arch, shape, {**overrides, "layer_unroll": 1})
+    u2 = _measure(arch, shape, {**overrides, "layer_unroll": 2})
+    L = _l_eff(bundle)
+    out = {}
+    for k in ("flops", "bytes", "link_bytes"):
+        body = max(u2[k] - u1[k], 0.0)
+        out[k] = u1[k] + (L - 1) * body
+    out["model_flops"] = u1["model_flops"]
+    out["per_layer_flops"] = max(u2["flops"] - u1["flops"], 0.0)
+    if verbose:
+        print(f"  {arch} x {shape}: u1 {u1['flops']/1e9:.0f} GF, "
+              f"body {(u2['flops']-u1['flops'])/1e9:.0f} GF x{L}, "
+              f"corrected {out['flops']/1e9:.0f} GF")
+    return out
+
+
+def analyse(rec: dict) -> dict:
+    t_comp = rec["flops"] / PEAK_FLOPS
+    t_mem = rec["bytes"] / HBM_BW
+    t_coll = rec["link_bytes"] / LINK_BW
+    dominant = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )
+    useful = rec["model_flops"] / PEAK_FLOPS
+    frac = useful / max(dominant[1], 1e-30)
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": dominant[0],
+        "roofline_fraction": frac,
+        "model_over_hlo_flops": rec["model_flops"] / max(rec["flops"], 1e-30),
+    }
+
+
+def main():
+    from repro.configs import get_bundle
+    from repro.launch.steps import list_cells
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="reports/dryrun.jsonl")
+    ap.add_argument("--out", default="reports/roofline.json")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    base = {}
+    with open(args.dryrun) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("ok") and r["mesh"] == "16x16":
+                base[(r["arch"], r["shape"])] = r
+
+    results = {}
+    if args.resume and os.path.exists(args.out):
+        results = json.load(open(args.out))
+
+    runnable, _ = list_cells()
+    for arch, shape, _why in runnable:
+        if args.arch != "all" and arch != args.arch:
+            continue
+        if args.shape != "all" and shape != args.shape:
+            continue
+        key = f"{arch}|{shape}"
+        if key in results:
+            continue
+        b = base.get((arch, shape))
+        if b is None:
+            continue
+        bundle = get_bundle(arch)
+        if bundle.family in SCANNED:
+            rec = corrected_cell(arch, shape, bundle)
+        else:
+            rec = {
+                "flops": b["hlo_flops_per_chip"],
+                "bytes": b["hlo_bytes_per_chip"],
+                "link_bytes": b["collectives"]["link_bytes"],
+                "model_flops": b["model_flops_per_chip"],
+            }
+        entry = {
+            **rec,
+            **analyse(rec),
+            "kind": b["kind"],
+            "temp_gb": b["temp_bytes_per_chip"] / 1e9,
+            "args_gb": b["arg_bytes_per_chip"] / 1e9,
+        }
+        results[key] = entry
+        print(f"{arch:24s} {shape:18s} bottleneck={entry['bottleneck']:10s} "
+              f"frac={entry['roofline_fraction']:.3f} "
+              f"[{entry['t_compute_s']*1e3:.2f} / {entry['t_memory_s']*1e3:.2f} "
+              f"/ {entry['t_collective_s']*1e3:.2f} ms]")
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"wrote {args.out} ({len(results)} cells)")
+
+
+if __name__ == "__main__":
+    main()

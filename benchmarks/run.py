@@ -1,0 +1,68 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+The roofline section summarizes reports/roofline.json if present (it is
+produced by ``python -m benchmarks.roofline``, which needs the 512-device
+dry-run environment and is therefore a separate entry point).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig2,fig3,fig4,table3,memory")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        fig2_constraint_scaling,
+        fig3_vocab_scaling,
+        fig4_branch_factor,
+        memory_table,
+        table1_latency,
+        table3_coldstart,
+    )
+
+    sections = {
+        "table1": lambda: table1_latency.run(quick=args.quick),
+        "fig2": lambda: fig2_constraint_scaling.run(quick=args.quick),
+        "fig3": lambda: fig3_vocab_scaling.run(quick=args.quick),
+        "fig4": lambda: fig4_branch_factor.run(quick=args.quick),
+        "memory": lambda: memory_table.run(quick=args.quick),
+        "table3": lambda: table3_coldstart.run(quick=args.quick),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in sections.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            print(f"{name}/ERROR,0,")
+            traceback.print_exc()
+        print(f"# {name} took {time.time()-t0:.1f}s")
+
+    # roofline summary (from the separate 512-device run)
+    path = "reports/roofline.json"
+    if os.path.exists(path) and (only is None or "roofline" in only):
+        print("# --- roofline (from reports/roofline.json) ---")
+        data = json.load(open(path))
+        for key, e in sorted(data.items()):
+            print(f"roofline/{key},{e['t_compute_s']*1e6:.1f},"
+                  f"bottleneck={e['bottleneck']};frac={e['roofline_fraction']:.3f};"
+                  f"mem_us={e['t_memory_s']*1e6:.1f};coll_us={e['t_collective_s']*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

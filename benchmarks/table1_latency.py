@@ -1,0 +1,103 @@
+"""Table 1 — per-decoding-step latency overhead of constraint enforcement.
+
+Paper setting scaled to this CPU container: |V|=2048, L=8, 140 beams (batch
+2 x beam 70), restricted vocabulary of |C| items (default 10^6 here vs the
+paper's 2x10^7 — the *relative ordering* across methods is the reproduction
+claim; absolute TPU-v6e milliseconds are not reproducible on CPU).
+
+Overhead = median(step latency with method) - median(unconstrained step),
+averaged over the L=8 decode levels, exactly as in Appendix C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, jit_masker, time_fn
+from repro.core import TransitionMatrix, constrain_log_probs
+from repro.core.baselines import CpuTrieBaseline, HashBitmapBaseline, PPVBaseline
+from repro.core.trie import random_constraint_set
+
+VOCAB, LENGTH, BEAMS = 2048, 8, 140
+
+
+def _walk_nodes_and_prefixes(tm, sids, rng, nb):
+    """Valid mid-trie states + matching prefixes for a fair per-step timing."""
+    prefixes = sids[rng.integers(0, sids.shape[0], nb)].astype(np.int32)
+    nodes_by_step = {0: jnp.ones((nb,), jnp.int32)}
+    nodes = nodes_by_step[0]
+    for t in range(LENGTH - 1):
+        lp = jnp.zeros((nb, VOCAB), jnp.float32)
+        _, nxt = constrain_log_probs(lp, nodes, tm, t)
+        nodes = nxt[jnp.arange(nb), prefixes[:, t]]
+        nodes_by_step[t + 1] = nodes
+    return prefixes, nodes_by_step
+
+
+def run(n_constraints: int = 1_000_000, trials: int = 20, with_cpu_trie=True,
+        quick: bool = False):
+    if quick:
+        n_constraints, trials = 100_000, 8
+    rng = np.random.default_rng(0)
+    sids = random_constraint_set(rng, n_constraints, VOCAB, LENGTH)
+    tm = TransitionMatrix.from_sids(sids, VOCAB, dense_d=2)
+    prefixes, nodes_by_step = _walk_nodes_and_prefixes(tm, sids, rng, BEAMS)
+    logits = jnp.asarray(rng.normal(size=(BEAMS, VOCAB)).astype(np.float32))
+
+    base = jax.jit(lambda x: jax.nn.log_softmax(x, axis=-1))
+    t_base, _ = time_fn(base, logits, trials=trials)
+
+    methods = {}
+
+    def static_step(step):
+        f = jax.jit(
+            lambda lp, nodes, tmat: constrain_log_probs(
+                jax.nn.log_softmax(lp, -1), nodes, tmat, step
+            )
+        )
+        return lambda: f(logits, nodes_by_step[step], tm)
+
+    methods["static"] = static_step
+
+    ppv_e = PPVBaseline(sids, VOCAB, exact=True)
+    ppv_a = PPVBaseline(sids, VOCAB, exact=False, top_k=50)
+    bmp = HashBitmapBaseline(sids, VOCAB, log2_bits=27)
+    pf = jnp.asarray(prefixes)
+
+    def make(m):
+        def per_step(step):
+            f = jit_masker(m, step)
+            lsm = jax.jit(lambda lp: jax.nn.log_softmax(lp, -1))
+            return lambda: f(lsm(logits), pf)
+        return per_step
+
+    methods["ppv_exact"] = make(ppv_e)
+    methods["ppv_approx"] = make(ppv_a)
+    methods["hash_bitmap"] = make(bmp)
+    if with_cpu_trie:
+        cpu = CpuTrieBaseline(sids[: min(n_constraints, 200_000)], VOCAB)
+
+        def cpu_step(step):
+            f = jax.jit(
+                lambda lp, p: cpu.mask(jax.nn.log_softmax(lp, -1), p, step)
+            )
+            return lambda: f(logits, pf)
+
+        methods["cpu_trie"] = cpu_step
+
+    results = {}
+    for name, per_step in methods.items():
+        overheads = []
+        for step in range(LENGTH):
+            t, _ = time_fn(per_step(step), trials=trials)
+            overheads.append(max(t - t_base, 0.0))
+        results[name] = float(np.mean(overheads))
+        emit(f"table1/{name}", results[name] * 1e6,
+             f"overhead_ms={results[name]*1e3:.4f};C={n_constraints}")
+    emit("table1/unconstrained", t_base * 1e6, "baseline")
+    return results
+
+
+if __name__ == "__main__":
+    run()

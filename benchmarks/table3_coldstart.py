@@ -1,0 +1,30 @@
+"""Table 3 — cold-start Recall@1: unconstrained vs constrained-random vs
+STATIC, at 2% and 5% cold-start fractions (paper §6 protocol on synthetic
+Amazon-like data; see repro/data/amazon.py)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.pipelines import run_cold_start_experiment
+
+
+def run(quick: bool = False):
+    fracs = [0.02] if quick else [0.02, 0.05]
+    steps = 200 if quick else 300
+    out = {}
+    for frac in fracs:
+        res = run_cold_start_experiment(
+            cold_frac=frac, train_steps=steps, log=lambda *a: None
+        )
+        out[frac] = res
+        tag = f"{int(frac*100)}pct"
+        emit(f"table3/unconstrained/{tag}",
+             res["recall@1_unconstrained"] * 100, "recall@1 %")
+        emit(f"table3/const_random/{tag}",
+             res["recall@1_constrained_random"] * 100, "recall@1 %")
+        emit(f"table3/static/{tag}", res["recall@1_static"] * 100,
+             "recall@1 %")
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,35 @@
+"""End-to-end driver (paper §6): cold-start generative retrieval.
+
+Trains the full stack on CPU in a few minutes:
+  synthetic Amazon-like corpus -> RQ-VAE Semantic IDs -> generative-retrieval
+  transformer (several hundred steps) -> Recall@1 with
+  {unconstrained, constrained-random, STATIC} decoding.
+
+    PYTHONPATH=src python examples/cold_start_amazon.py [--quick]
+"""
+import argparse
+
+from repro.pipelines import run_cold_start_experiment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--cold-frac", type=float, default=0.02)
+    args = ap.parse_args()
+
+    res = run_cold_start_experiment(
+        cold_frac=args.cold_frac,
+        train_steps=150 if args.quick else 500,
+        log=print,
+    )
+    print("\n=== Table 3 (reproduced on synthetic Amazon-like data) ===")
+    print(f"cold-start fraction : {res['cold_frac']*100:.0f}% "
+          f"({res['n_cold']} items, {res['n_test']} test sequences)")
+    print(f"Unconstrained        Recall@1: {res['recall@1_unconstrained']*100:6.2f}%")
+    print(f"Constrained Random   Recall@1: {res['recall@1_constrained_random']*100:6.2f}%")
+    print(f"STATIC (ours)        Recall@1: {res['recall@1_static']*100:6.2f}%")
+
+
+if __name__ == "__main__":
+    main()

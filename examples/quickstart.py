@@ -1,0 +1,55 @@
+"""Quickstart: build a STATIC constraint index and run constrained decoding.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    NEG_INF, TransitionMatrix, beam_search, constrained_decoding_step,
+)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    vocab, length = 64, 4
+
+    # 1. The restricted vocabulary C: 200 Semantic IDs (e.g. "fresh items").
+    sids = rng.integers(0, vocab, size=(200, length))
+    print(f"|C| = {len(np.unique(sids, axis=0))} SIDs, |V| = {vocab}, L = {length}")
+
+    # 2. Offline: flatten the prefix tree into the CSR transition matrix.
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=2)
+    print(f"trie: {tm.n_states} states, {tm.n_edges} edges, "
+          f"per-level max branch factors B = {tm.level_bmax}")
+
+    # 3. One constrained decoding step (Algorithm 1): mask model logits.
+    logits = jnp.asarray(rng.normal(size=(2, 3, vocab)).astype(np.float32))
+    nodes = jnp.ones((2, 3), jnp.int32)  # all beams at the trie root
+    masked, next_nodes = constrained_decoding_step(logits, nodes, tm, step=0)
+    n_valid = int((np.asarray(masked[0, 0]) > NEG_INF / 2).sum())
+    print(f"step 0: {n_valid} valid first tokens out of {vocab}")
+
+    # 4. Full constrained beam search with a toy scorer.
+    table = jnp.asarray(rng.normal(size=(length, vocab)).astype(np.float32))
+
+    def logits_fn(carry, last, step):
+        B, M = last.shape
+        return jnp.broadcast_to(table[step], (B, M, vocab)), carry
+
+    state, _ = beam_search(logits_fn, None, batch_size=2, beam_size=8,
+                           length=length, tm=tm)
+    valid = {tuple(r) for r in sids}
+    beams = np.asarray(state.tokens)
+    ok = all(
+        tuple(beams[b, m]) in valid
+        for b in range(2) for m in range(8)
+        if state.scores[b, m] > NEG_INF / 2
+    )
+    print(f"top beam: {beams[0, 0].tolist()}  score {float(state.scores[0,0]):.3f}")
+    print(f"100% compliance with C: {ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Constrained generative-retrieval serving with batched requests.
+
+Builds a small GR model, a 50k-item restricted corpus, and serves batched
+retrieval requests through the ServingEngine / GenerativeRetriever stack,
+reporting per-request latency and constraint compliance.
+
+    PYTHONPATH=src python examples/serve_constrained.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core import TransitionMatrix
+from repro.core.vntk import NEG_INF
+from repro.models import transformer
+from repro.pipelines import gr_model_config
+from repro.serving.engine import RequestQueue, ServingEngine
+from repro.serving.generative_retrieval import GenerativeRetriever
+
+
+def main():
+    rng = np.random.default_rng(0)
+    V, L, M = 256, 4, 8
+    cfg = gr_model_config(V)
+    params = transformer.init_params(cfg, jax.random.key(0))
+
+    # Restricted corpus ("in-stock items"): 50k SIDs.
+    sids = rng.integers(0, V, size=(50_000, L))
+    t0 = time.time()
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=2)
+    print(f"built CSR constraint index for |C|=50k in {time.time()-t0:.2f}s "
+          f"({tm.n_states} states)")
+
+    retriever = GenerativeRetriever(params, cfg, tm, sid_length=L,
+                                    sid_vocab=V, beam_size=M)
+    B = 4
+    hist = rng.integers(0, V, size=(B, 16)).astype(np.int32)
+    t0 = time.time()
+    beams, scores = retriever.retrieve(hist)  # includes jit compile
+    print(f"first batch (compile) {time.time()-t0:.2f}s")
+    t0 = time.time()
+    n = 5
+    for _ in range(n):
+        beams, scores = retriever.retrieve(hist)
+    dt = (time.time() - t0) / n
+    valid = {tuple(r) for r in sids}
+    ok = all(
+        tuple(beams[b, m]) in valid
+        for b in range(B) for m in range(M)
+        if scores[b, m] > NEG_INF / 2
+    )
+    print(f"batched retrieval: {dt*1e3:.1f} ms/batch of {B} "
+          f"({M} beams x {L} SID levels); 100% compliance: {ok}")
+
+    # plain token serving through the continuous-batching engine
+    eng = ServingEngine(params, cfg, batch_size=4, max_len=64)
+    q = RequestQueue()
+    for _ in range(8):
+        q.submit(rng.integers(0, V, size=(12,)), n_tokens=6)
+    t0 = time.time()
+    results = eng.serve(q)
+    print(f"continuous batching drained 8 requests in {time.time()-t0:.2f}s; "
+          f"lengths: {sorted(len(v) for v in results.values())}")
+
+
+if __name__ == "__main__":
+    main()

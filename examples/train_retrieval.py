@@ -1,0 +1,71 @@
+"""Train a generative-retrieval model with the fault-tolerant trainer.
+
+Demonstrates the full training substrate: sharded deterministic loader,
+microbatch accumulation, int8 error-feedback gradient compression, atomic
+async checkpointing, and exact resume after a simulated crash.
+
+    PYTHONPATH=src python examples/train_retrieval.py
+"""
+import os
+import shutil
+
+import numpy as np
+
+import jax
+from repro.data.loader import ShardedBatcher
+from repro.data.synthetic import make_item_corpus, make_user_sequences
+from repro.models import transformer
+from repro.pipelines import gr_model_config, train_rqvae
+from repro.configs.base import RQVAEConfig
+from repro.models import rqvae
+from repro.training.optimizer import adamw
+from repro.training.trainer import Trainer, TrainerConfig
+
+CKPT = "/tmp/repro_train_retrieval_ckpt"
+
+
+def main():
+    rng = np.random.default_rng(0)
+    feats, cid = make_item_corpus(rng, 1_000, 32, 64)
+    seqs = make_user_sequences(rng, 3_000, 10, cid)
+
+    rq_cfg = RQVAEConfig(feat_dim=64, n_levels=4, codebook_size=256)
+    rq = train_rqvae(feats, rq_cfg, steps=200, log=print)
+    sids = np.asarray(rqvae.encode_to_sids(rq, feats, rq_cfg))
+    tokens = sids[seqs].reshape(seqs.shape[0], -1).astype(np.int32)
+
+    cfg = gr_model_config(256)
+    params = transformer.init_params(cfg, jax.random.key(0))
+
+    def loss_fn(p, batch):
+        return transformer.lm_loss(p, batch["tokens"], cfg)
+
+    shutil.rmtree(CKPT, ignore_errors=True)
+    tcfg = TrainerConfig(
+        n_steps=120, microbatches=2, ckpt_dir=CKPT, ckpt_every=40,
+        ckpt_async=True, grad_compression=True, log_every=20,
+    )
+    trainer = Trainer(loss_fn, adamw(lr=1e-3), params, tcfg)
+    batches = ShardedBatcher({"tokens": tokens}, global_batch=64, seed=0)
+
+    print("--- phase 1: train to step 80, then simulate a crash ---")
+    trainer.cfg.n_steps = 80
+    trainer.fit(batches, log=print)
+    trainer.maybe_checkpoint(data_state=batches.state(), force=True)
+    print(f"'crash' at step {trainer.step}; straggler events: "
+          f"{trainer.straggler_events}")
+
+    print("--- phase 2: fresh trainer, resume from checkpoint ---")
+    t2 = Trainer(loss_fn, adamw(lr=1e-3), params, tcfg)
+    assert t2.resume(), "no checkpoint found"
+    print(f"resumed at step {t2.step}")
+    b2 = ShardedBatcher({"tokens": tokens}, global_batch=64, seed=0)
+    b2.restore(batches.state())
+    t2.cfg.n_steps = 120
+    losses = t2.fit(b2, log=print)
+    print(f"final loss {losses[-1]:.4f} after exact resume "
+          f"(ckpts in {CKPT}: {sorted(os.listdir(CKPT))[-2:]})")
+
+
+if __name__ == "__main__":
+    main()

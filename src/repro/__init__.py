@@ -1,0 +1,17 @@
+"""repro — STATIC (Sparse Transition Matrix-Accelerated Trie Index for
+Constrained Decoding) as a first-class feature of a multi-pod JAX
+training/serving framework.
+
+Subpackages:
+  core         the paper's contribution (trie->CSR, VNTK, Alg. 1, beam search)
+  kernels      Pallas TPU kernels + XLA oracles
+  models       transformer LM family / GNN / recsys / RQ-VAE
+  configs      assigned architectures + registry
+  data         synthetic corpora, loaders, samplers
+  training     optimizers, fault-tolerant trainer, checkpointing
+  serving      batched engine, constrained generative retrieval
+  distributed  sharding rules, collective accounting
+  launch       mesh, multi-pod dry-run, train/serve CLIs
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,32 @@
+"""STATIC — the paper's primary contribution as a composable JAX module.
+
+Public surface:
+  * ``build_flat_trie`` / ``FlatTrie``      — offline trie -> stacked CSR
+  * ``TransitionMatrix``                    — device-resident constraint index
+  * ``constrain_log_probs``                 — Alg. 1 Phase 2 (dense + VNTK)
+  * ``constrained_decoding_step``           — Alg. 1 Phases 1-2
+  * ``beam_search`` / ``BeamState``         — Alg. 1 Phases 3-4 driver
+  * ``baselines``                           — CPU trie / PPV / hash bitmap
+  * ``memory_model``                        — Appendix B capacity model
+"""
+from repro.core.beam_search import BeamState, beam_search, recall_at_k
+from repro.core.constrained import constrain_log_probs, constrained_decoding_step
+from repro.core.transition_matrix import ROOT_STATE, SINK_STATE, TransitionMatrix
+from repro.core.trie import FlatTrie, build_flat_trie, random_constraint_set
+from repro.core.vntk import NEG_INF, vntk_xla
+
+__all__ = [
+    "BeamState",
+    "beam_search",
+    "recall_at_k",
+    "constrain_log_probs",
+    "constrained_decoding_step",
+    "ROOT_STATE",
+    "SINK_STATE",
+    "TransitionMatrix",
+    "FlatTrie",
+    "build_flat_trie",
+    "random_constraint_set",
+    "NEG_INF",
+    "vntk_xla",
+]

@@ -1,0 +1,279 @@
+"""Constrained-decoding baselines reproduced from the paper (§5.2).
+
+All baselines expose the same interface as STATIC's ``constrain_log_probs``:
+``mask(log_probs, prefix_tokens, step) -> masked_log_probs`` so the Table 1
+benchmark times them interchangeably.
+
+  * ``CpuTrieBaseline``   — pointer-chasing host trie; every decode step does a
+    device->host->device round-trip (``io_callback``), reproducing the
+    "TPU halts, sends partial beams to the CPU" flow.
+  * ``PPVBaseline``        — DISC-PPV [32]: on-device binary search over the
+    lexicographically sorted SID matrix; O(log|C|) dependent fetches per
+    candidate.  ``exact=True`` verifies all |V| logits, ``exact=False`` only
+    the top-50 (the paper's approximate variant).
+  * ``HashBitmapBaseline`` — Bloom-style bit table over hashed prefixes;
+    constant time but admits false positives.
+
+Key packing uses 4x uint32 lanes (2 tokens of <=16 bits each) so nothing here
+requires jax_enable_x64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vntk import NEG_INF
+
+__all__ = [
+    "CpuTrieBaseline",
+    "PPVBaseline",
+    "HashBitmapBaseline",
+    "unconstrained_mask",
+]
+
+_MAX_L = 8  # key packing supports SIDs up to length 8 (paper: L=8)
+
+
+def unconstrained_mask(log_probs, prefix_tokens, step):
+    """Latency lower bound: no validity check at all."""
+    del prefix_tokens, step
+    return log_probs
+
+
+# ---------------------------------------------------------------------------
+# Key packing: tokens (..., L) -> 4 lanes of uint32, lexicographic order
+# preserved (token t occupies bits [16*(1 - t%2), ...) of lane t//2).
+# ---------------------------------------------------------------------------
+def _pack_keys_np(tokens: np.ndarray, length: int) -> np.ndarray:
+    """(..., length) -> (..., 4) uint32; positions >= length are zero-padded."""
+    if length > _MAX_L:
+        raise ValueError(f"key packing supports L<={_MAX_L}")
+    out = np.zeros(tokens.shape[:-1] + (4,), np.uint32)
+    for t in range(min(length, tokens.shape[-1])):
+        lane, hi = t // 2, (t % 2 == 0)
+        shift = 16 if hi else 0
+        out[..., lane] |= tokens[..., t].astype(np.uint32) << shift
+    return out
+
+
+def _pack_keys_jnp(tokens: jax.Array, length: int) -> jax.Array:
+    out = jnp.zeros(tokens.shape[:-1] + (4,), jnp.uint32)
+    for t in range(min(length, tokens.shape[-1])):
+        lane, shift = t // 2, 16 if t % 2 == 0 else 0
+        out = out.at[..., lane].add(tokens[..., t].astype(jnp.uint32) << shift)
+    return out
+
+
+def _lex_less(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Lexicographic a < b over trailing 4-lane uint32 keys."""
+    less = jnp.zeros(a.shape[:-1], bool)
+    eq = jnp.ones(a.shape[:-1], bool)
+    for lane in range(4):
+        less = less | (eq & (a[..., lane] < b[..., lane]))
+        eq = eq & (a[..., lane] == b[..., lane])
+    return less
+
+
+# ---------------------------------------------------------------------------
+# CPU trie (pointer-chasing, host-offloaded)
+# ---------------------------------------------------------------------------
+class CpuTrieBaseline:
+    """Nested-dict prefix tree on the host; queried through io_callback."""
+
+    def __init__(self, sids: np.ndarray, vocab_size: int):
+        self.vocab_size = int(vocab_size)
+        self.sid_length = int(sids.shape[1])
+        self.root: dict = {}
+        for row in np.asarray(sids):
+            node = self.root
+            for tok in row:
+                node = node.setdefault(int(tok), {})
+
+    def _host_mask(self, prefixes: np.ndarray, step: int) -> np.ndarray:
+        prefixes = np.asarray(prefixes)
+        nb = prefixes.shape[0]
+        out = np.zeros((nb, self.vocab_size), dtype=bool)
+        for i in range(nb):
+            node = self.root
+            ok = True
+            for t in range(step):
+                node = node.get(int(prefixes[i, t]))
+                if node is None:
+                    ok = False
+                    break
+            if ok and node:
+                out[i, list(node.keys())] = True
+        return out
+
+    def mask(self, log_probs: jax.Array, prefix_tokens: jax.Array, step: int):
+        shape = log_probs.shape
+        lp = log_probs.reshape(-1, self.vocab_size)
+        pf = prefix_tokens.reshape(-1, prefix_tokens.shape[-1])
+        mask = jax.experimental.io_callback(
+            partial(self._host_mask, step=step),
+            jax.ShapeDtypeStruct(lp.shape, np.bool_),
+            pf,
+        )
+        return jnp.where(mask, lp, NEG_INF).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# PPV (DISC-PPV [32]): sorted flat SID array + parallel binary search
+# ---------------------------------------------------------------------------
+class PPVBaseline:
+    """Parallel Prefix-Verification via binary search (exact or top-50)."""
+
+    def __init__(self, sids: np.ndarray, vocab_size: int, exact: bool = True,
+                 top_k: int = 50):
+        sids = np.unique(np.asarray(sids), axis=0)  # lexicographically sorted
+        self.sids_sorted = jnp.asarray(sids.astype(np.int32))
+        self.keys = jnp.asarray(_pack_keys_np(sids, sids.shape[1]))  # (N, 4)
+        self.n = int(sids.shape[0])
+        self.vocab_size = int(vocab_size)
+        self.sid_length = int(sids.shape[1])
+        self.exact = bool(exact)
+        self.top_k = int(top_k)
+        self.n_search_steps = max(1, int(np.ceil(np.log2(max(self.n, 2)))) + 1)
+
+    def _lower_bound(self, cand_keys: jax.Array) -> jax.Array:
+        """Vectorized lower_bound over the sorted key table. (...,4)->(...,)"""
+        lo = jnp.zeros(cand_keys.shape[:-1], jnp.int32)
+        hi = jnp.full(cand_keys.shape[:-1], self.n, jnp.int32)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            mid_keys = self.keys[jnp.clip(mid, 0, self.n - 1)]
+            less = _lex_less(mid_keys, cand_keys)
+            return jnp.where(less, mid + 1, lo), jnp.where(less, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, self.n_search_steps, body, (lo, hi))
+        return lo
+
+    def _verify(self, prefix: jax.Array, cand: jax.Array, step: int):
+        """prefix (nb, L'), cand (nb, k) -> bool (nb, k): is prefix+cand in C?"""
+        nb, k = cand.shape
+        ext = jnp.zeros((nb, k, _MAX_L), jnp.int32)
+        for t in range(step):
+            ext = ext.at[:, :, t].set(prefix[:, None, t])
+        ext = ext.at[:, :, step].set(cand)
+        cand_keys = _pack_keys_jnp(ext, step + 1)  # zero-padded suffix = min
+        idx = self._lower_bound(cand_keys)  # (nb, k)
+        row = self.sids_sorted[jnp.clip(idx, 0, self.n - 1)]  # (nb, k, L)
+        match = idx < self.n
+        for t in range(step + 1):
+            match = match & (row[:, :, t] == ext[:, :, t])
+        return match
+
+    def mask(self, log_probs: jax.Array, prefix_tokens: jax.Array, step: int):
+        shape = log_probs.shape
+        V = self.vocab_size
+        lp = log_probs.reshape(-1, V)
+        pf = prefix_tokens.reshape(-1, prefix_tokens.shape[-1])
+        if self.exact:
+            cand = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), lp.shape)
+            valid = self._verify(pf, cand, step)
+            return jnp.where(valid, lp, NEG_INF).reshape(shape)
+        # Approximate: verify only the top-k logits (paper's PPV-Approximate).
+        top_lp, top_idx = jax.lax.top_k(lp, self.top_k)
+        valid = self._verify(pf, top_idx.astype(jnp.int32), step)
+        out = jnp.full_like(lp, NEG_INF)
+        rows = jnp.arange(lp.shape[0])[:, None]
+        out = out.at[rows, top_idx].set(jnp.where(valid, top_lp, NEG_INF))
+        return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Hash bitmap (Bloom-style, false positives)
+# ---------------------------------------------------------------------------
+def _mix32_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint32(16)
+        x *= np.uint32(0x7FEB352D)
+        x ^= x >> np.uint32(15)
+        x *= np.uint32(0x846CA68B)
+        x ^= x >> np.uint32(16)
+    return x
+
+
+def _mix32_jnp(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+class HashBitmapBaseline:
+    """Hash every valid prefix (all levels) into a 2^log2_bits bitmap."""
+
+    def __init__(self, sids: np.ndarray, vocab_size: int, log2_bits: int = 27):
+        sids = np.asarray(sids)
+        self.vocab_size = int(vocab_size)
+        self.sid_length = int(sids.shape[1])
+        self.log2_bits = int(log2_bits)
+        nbits = 1 << log2_bits
+        bitmap = np.zeros(nbits // 8, np.uint8)
+        for t in range(self.sid_length):
+            pref = np.unique(sids[:, : t + 1], axis=0)
+            keys = _pack_keys_np(pref, t + 1)  # (n, 4)
+            h = self._hash_np(keys, t)
+            bitmap |= np.zeros_like(bitmap)  # keep dtype
+            np.bitwise_or.at(bitmap, h >> 3, (1 << (h & 7)).astype(np.uint8))
+        self.bitmap = jnp.asarray(bitmap)
+
+    def _hash_np(self, keys: np.ndarray, step: int) -> np.ndarray:
+        with np.errstate(over="ignore"):
+            h = _mix32_np(
+                keys[..., 0] ^ (np.uint32(0x9E3779B9) * np.uint32(step + 1))
+            )
+            for lane in range(1, 4):
+                h = _mix32_np(h ^ (keys[..., lane] + np.uint32(0x85EBCA6B)
+                                   + (h << 6) + (h >> 2)))
+        return (h & np.uint32((1 << self.log2_bits) - 1)).astype(np.uint32)
+
+    def _hash_jnp(self, keys: jax.Array, step: int) -> jax.Array:
+        h = _mix32_jnp(keys[..., 0] ^ jnp.uint32(0x9E3779B9) * jnp.uint32(step + 1))
+        for lane in range(1, 4):
+            h = _mix32_jnp(h ^ (keys[..., lane] + jnp.uint32(0x85EBCA6B) + (h << 6) + (h >> 2)))
+        return h & jnp.uint32((1 << self.log2_bits) - 1)
+
+    def mask(self, log_probs: jax.Array, prefix_tokens: jax.Array, step: int):
+        shape = log_probs.shape
+        V = self.vocab_size
+        lp = log_probs.reshape(-1, V)
+        pf = prefix_tokens.reshape(-1, prefix_tokens.shape[-1])
+        nb = lp.shape[0]
+        ext = jnp.zeros((nb, V, _MAX_L), jnp.int32)
+        for t in range(step):
+            ext = ext.at[:, :, t].set(pf[:, None, t])
+        ext = ext.at[:, :, step].set(jnp.arange(V, dtype=jnp.int32)[None, :])
+        keys = _pack_keys_jnp(ext, step + 1)
+        h = self._hash_jnp(keys, step)  # (nb, V)
+        word = self.bitmap[(h >> 3).astype(jnp.int32)]
+        bit = (word >> (h & 7).astype(jnp.uint8)) & 1
+        return jnp.where(bit.astype(bool), lp, NEG_INF).reshape(shape)
+
+    def false_positive_rate(self, sids: np.ndarray, n_probe: int = 20000,
+                            seed: int = 0) -> float:
+        """Empirical FP rate at the deepest level (reference metric, §5.2)."""
+        rng = np.random.default_rng(seed)
+        sids = np.asarray(sids)
+        L = self.sid_length
+        probes = rng.integers(0, self.vocab_size, size=(n_probe, L), dtype=np.int64)
+        valid_set = {tuple(r) for r in sids}
+        keys = _pack_keys_np(probes, L)
+        h = self._hash_np(keys, L - 1)
+        word = np.asarray(self.bitmap)[h >> 3]
+        hit = ((word >> (h & 7)) & 1).astype(bool)
+        fp = sum(1 for i in range(n_probe) if hit[i] and tuple(probes[i]) not in valid_set)
+        neg = sum(1 for i in range(n_probe) if tuple(probes[i]) not in valid_set)
+        return fp / max(neg, 1)

@@ -1,0 +1,83 @@
+"""Algorithm 1 — hardware-accelerated constrained decoding step.
+
+``constrain_log_probs`` is the composable primitive: given normalized
+log-probs, the current trie states and the (static) decode step index, it
+returns masked log-probs plus the vocab-aligned next-state tensor.  It routes
+to the dense bit-packed lookup for steps < dense_d and to the VNTK for deeper
+steps, and can dispatch either the XLA formulation or the Pallas TPU kernel.
+
+The full per-step driver (`constrained_decoding_step`) composes it with
+log-softmax normalization exactly as in the paper's Algorithm 1 Phases 1-2;
+Phases 3-4 (beam-search selection + state gather) live in
+``repro.core.beam_search``.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dense_mask
+from repro.core.transition_matrix import TransitionMatrix
+from repro.core.vntk import NEG_INF, vntk_xla
+
+__all__ = ["constrain_log_probs", "constrained_decoding_step", "NEG_INF"]
+
+Impl = Literal["xla", "pallas"]
+
+
+def constrain_log_probs(
+    log_probs: jax.Array,  # (..., V) normalized log-probs
+    nodes: jax.Array,  # (...,) int32 trie states
+    tm: TransitionMatrix,
+    step: int,
+    impl: Impl = "xla",
+) -> tuple[jax.Array, jax.Array]:
+    """Phase 2 of Alg. 1: constraint masking. ``step`` must be static."""
+    if step < 0 or step >= tm.sid_length:
+        raise ValueError(f"step {step} outside [0, {tm.sid_length})")
+    if step == 0 and tm.dense_d >= 1:
+        return dense_mask.dense_lookup_l0(log_probs, tm)
+    if step == 1 and tm.dense_d >= 2:
+        return dense_mask.dense_lookup_l1(log_probs, nodes, tm)
+    bmax = max(tm.bmax_for_step(step), 1)
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
+
+        return kernel_ops.vntk(
+            log_probs, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size
+        )
+    return vntk_xla(log_probs, nodes, tm, bmax)
+
+
+def constrained_decoding_step(
+    logits: jax.Array,  # (..., V) raw model logits
+    nodes: jax.Array,  # (...,) int32 trie states
+    tm: TransitionMatrix | None,
+    step: int,
+    impl: Impl = "xla",
+    fused: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Phases 1-2 of Alg. 1: LogSoftmax then constraint masking.
+
+    With ``tm=None`` this degrades to unconstrained decoding (log-softmax
+    only), which is the latency lower bound of Table 1.
+
+    ``fused=True`` uses the fused masked-logsoftmax Pallas kernel to avoid a
+    second HBM round-trip over the (..., V) tensor (a beyond-paper
+    optimization; see DESIGN.md §3).
+    """
+    if tm is None:
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nxt = jnp.zeros(logits.shape, jnp.int32)
+        return lp, nxt
+    if fused and not (step < tm.dense_d):
+        from repro.kernels import ops as kernel_ops
+
+        bmax = max(tm.bmax_for_step(step), 1)
+        return kernel_ops.vntk_fused_logsoftmax(
+            logits, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size
+        )
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return constrain_log_probs(lp, nodes, tm, step, impl=impl)

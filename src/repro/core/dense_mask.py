@@ -1,0 +1,62 @@
+"""Dense bit-packed prefix-mask lookups for the first ``d`` levels (paper §A.1.2).
+
+The first trie levels are saturated (up to |V|^l states), so sparse gathers
+would fetch huge branch factors.  Instead validity is a direct lookup into a
+bit-packed dense tensor D of shape |V|^d bits plus an int32 next-state table.
+
+Bit order is little-endian within each uint8 word (see ``trie.pack_bits``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transition_matrix import TransitionMatrix
+from repro.core.vntk import NEG_INF
+
+__all__ = ["unpack_mask_row", "dense_lookup_l0", "dense_lookup_l1"]
+
+
+def unpack_mask_row(packed: jax.Array, vocab_size: int) -> jax.Array:
+    """(..., ceil(V/8)) uint8 -> (..., V) bool via shift-and-mask."""
+    bits = (packed[..., :, None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    bits = bits.reshape(packed.shape[:-1] + (-1,))
+    return bits[..., :vocab_size].astype(bool)
+
+
+def dense_lookup_l0(
+    log_probs: jax.Array, tm: TransitionMatrix
+) -> tuple[jax.Array, jax.Array]:
+    """Decode step 0: mask by the root's dense start mask.
+
+    Next states are the *virtual* level-1 ids ``token + 1`` (paper Appendix E)
+    so that step 1 can recover the parent token as ``node - 1`` for the l1
+    dense table when dense_d == 2.  When dense_d == 1 the real CSR level-1
+    state ids are returned instead so step 1 can run the sparse VNTK.
+    """
+    V = tm.vocab_size
+    mask = unpack_mask_row(tm.l0_mask_packed, V)  # (V,)
+    masked = jnp.where(mask, log_probs, NEG_INF)
+    # l0_states already encodes the right id space per dense_d (see trie.py):
+    # real renumbered CSR ids for dense_d==1, virtual token+1 ids for dense_d==2.
+    nxt = jnp.where(mask, tm.l0_states, 0)
+    next_dense = jnp.broadcast_to(nxt, log_probs.shape).astype(jnp.int32)
+    return masked, next_dense
+
+
+def dense_lookup_l1(
+    log_probs: jax.Array,  # (..., V)
+    nodes: jax.Array,  # (...,) virtual ids: parent token + 1
+    tm: TransitionMatrix,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode step 1 under dense_d == 2: lookup into the (V, V) dense tables."""
+    V = tm.vocab_size
+    parents = jnp.clip(nodes - 1, 0, V - 1)  # recover parent token
+    packed_rows = tm.l1_mask_packed[parents]  # (..., ceil(V/8))
+    mask = unpack_mask_row(packed_rows, V)  # (..., V)
+    # A sink parent (node == 0) has no valid continuation.
+    alive = (nodes > 0)[..., None]
+    mask = mask & alive
+    masked = jnp.where(mask, log_probs, NEG_INF)
+    next_dense = jnp.where(mask, tm.l1_states[parents], 0).astype(jnp.int32)
+    return masked, next_dense

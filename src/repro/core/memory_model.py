@@ -1,0 +1,73 @@
+"""STATIC memory-usage model (paper Appendix B).
+
+``u_max`` is the closed-form upper bound
+
+    U_max = (1/8 + K2) |V|^d  +  K1 * sum_{l=d+1..L} min(|V|^l, |C|)
+
+and ``capacity_rule_of_thumb`` reproduces the "~90 MB per 1M constraints"
+planning rule of §B.3.  ``measure`` reports the *actual* bytes of a built
+TransitionMatrix so tests can assert actual <= U_max (the paper observes
+<=75% utilization in production due to prefix clustering).
+"""
+from __future__ import annotations
+
+from repro.core.transition_matrix import TransitionMatrix
+
+__all__ = ["u_max", "capacity_rule_of_thumb", "measure", "K1_DEFAULT", "K2_DEFAULT"]
+
+# K1: bytes per CSR trie node. The paper counts 12 B for the three CSR arrays
+# (4 B row-pointer + 4 B column index + 4 B value); our stacked layout stores
+# the same 12 B per edge-bearing node.
+K1_DEFAULT = 12
+# K2: bytes per dense state id (int32).
+K2_DEFAULT = 4
+
+
+def u_max(
+    vocab_size: int,
+    n_constraints: int,
+    sid_length: int,
+    dense_d: int = 2,
+    k1: int = K1_DEFAULT,
+    k2: int = K2_DEFAULT,
+) -> int:
+    """Upper bound on HBM bytes for the STATIC structures (Appendix B.1)."""
+    dense = (0.125 + k2) * (vocab_size ** dense_d) if dense_d > 0 else 0.0
+    sparse = 0
+    for level in range(dense_d + 1, sid_length + 1):
+        cap = min(vocab_size ** level, n_constraints)
+        sparse += cap
+    return int(dense + k1 * sparse)
+
+
+def capacity_rule_of_thumb(
+    n_constraints: int,
+    vocab_size: int = 2048,
+    sid_length: int = 8,
+    dense_d: int = 2,
+) -> float:
+    """Planning estimate in bytes (the §B.3 '90 MB per 1M items' rule)."""
+    per_million = u_max(vocab_size, 1_000_000, sid_length, dense_d)
+    return per_million * (n_constraints / 1_000_000)
+
+
+def measure(tm: TransitionMatrix) -> dict:
+    """Actual byte usage of a built TransitionMatrix, split by component."""
+    dense_bytes = (
+        tm.l0_mask_packed.size * tm.l0_mask_packed.dtype.itemsize
+        + tm.l0_states.size * tm.l0_states.dtype.itemsize
+        + tm.l1_mask_packed.size * tm.l1_mask_packed.dtype.itemsize
+        + tm.l1_states.size * tm.l1_states.dtype.itemsize
+    )
+    sparse_bytes = (
+        tm.row_pointers.size * tm.row_pointers.dtype.itemsize
+        + tm.edges.size * tm.edges.dtype.itemsize
+    )
+    bound = u_max(tm.vocab_size, tm.n_constraints, tm.sid_length, tm.dense_d)
+    return dict(
+        dense_bytes=int(dense_bytes),
+        sparse_bytes=int(sparse_bytes),
+        total_bytes=int(dense_bytes + sparse_bytes),
+        u_max_bytes=int(bound),
+        utilization=float((dense_bytes + sparse_bytes) / max(bound, 1)),
+    )

@@ -1,0 +1,149 @@
+"""Device-resident sparse transition matrix (paper §4.2-4.3).
+
+``TransitionMatrix`` is a frozen pytree carrying the stacked-CSR arrays and
+the dense bit-packed prefix masks on device.  Static metadata (vocab size,
+SID length, per-level max branch factors) lives in the pytree aux data so
+jitted decode steps specialize on it — exactly the "B is a one-time fixed
+cost per transition matrix" contract of paper §4.4.
+
+Replication strategy (paper §A.3): the matrix is small relative to model
+weights (~90 MB per 1M constraints), so it is *replicated* on every chip;
+the constraint check is collective-free.  ``shardings()`` returns fully
+replicated NamedShardings for use in pjit'd serve steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trie as trie_lib
+
+__all__ = ["TransitionMatrix", "ROOT_STATE", "SINK_STATE"]
+
+SINK_STATE = 0
+ROOT_STATE = 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TransitionMatrix:
+    """CSR-based transition matrix with optional dense-layer optimizations."""
+
+    # --- device arrays (pytree leaves) ---
+    row_pointers: jax.Array  # (n_states + 1,) int32
+    edges: jax.Array  # (n_edges + pad, 2) int32 stacked [token, next_state]
+    l0_mask_packed: jax.Array  # (ceil(V/8),) uint8 (all-ones if dense_d == 0)
+    l0_states: jax.Array  # (V,) int32
+    l1_mask_packed: jax.Array  # (V, ceil(V/8)) uint8 (or (1,1) dummy)
+    l1_states: jax.Array  # (V, V) int32 (or (1,1) dummy)
+    # --- static metadata (aux data; jit-specialization keys) ---
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+    sid_length: int = dataclasses.field(metadata=dict(static=True))
+    dense_d: int = dataclasses.field(metadata=dict(static=True))
+    level_bmax: tuple = dataclasses.field(metadata=dict(static=True))
+    n_states: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+    n_constraints: int = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_flat_trie(cls, ft: trie_lib.FlatTrie) -> "TransitionMatrix":
+        V = ft.vocab_size
+        packed_w = (V + 7) // 8
+        if ft.l0_mask_packed is not None:
+            l0_mask = jnp.asarray(ft.l0_mask_packed)
+            l0_states = jnp.asarray(ft.l0_states)
+        else:
+            l0_mask = jnp.full((packed_w,), 0xFF, dtype=jnp.uint8)
+            l0_states = jnp.zeros((V,), dtype=jnp.int32)
+        if ft.l1_mask_packed is not None:
+            l1_mask = jnp.asarray(ft.l1_mask_packed)
+            l1_states = jnp.asarray(ft.l1_states)
+        else:
+            l1_mask = jnp.zeros((1, 1), dtype=jnp.uint8)
+            l1_states = jnp.zeros((1, 1), dtype=jnp.int32)
+        return cls(
+            row_pointers=jnp.asarray(ft.row_pointers),
+            edges=jnp.asarray(ft.edges),
+            l0_mask_packed=l0_mask,
+            l0_states=l0_states,
+            l1_mask_packed=l1_mask,
+            l1_states=l1_states,
+            vocab_size=V,
+            sid_length=ft.sid_length,
+            dense_d=ft.dense_d,
+            level_bmax=tuple(int(b) for b in ft.level_bmax),
+            n_states=int(ft.n_states),
+            n_edges=int(ft.n_edges),
+            n_constraints=int(ft.n_constraints),
+        )
+
+    @classmethod
+    def from_sids(
+        cls, sids: np.ndarray, vocab_size: int, dense_d: int = 2
+    ) -> "TransitionMatrix":
+        """Offline construction: restricted vocabulary -> flattened trie."""
+        return cls.from_flat_trie(
+            trie_lib.build_flat_trie(sids, vocab_size, dense_d=dense_d)
+        )
+
+    # ------------------------------------------------------------------
+    def bmax_for_step(self, step: int) -> int:
+        """Max branch factor consulted at decode step ``step`` (level index)."""
+        return int(self.level_bmax[step])
+
+    def nbytes(self) -> int:
+        total = 0
+        for f in ("row_pointers", "edges", "l0_mask_packed", "l0_states",
+                  "l1_mask_packed", "l1_states"):
+            total += getattr(self, f).size * getattr(self, f).dtype.itemsize
+        return total
+
+    def replicated_shardings(self, mesh) -> "TransitionMatrix":
+        """Fully-replicated NamedShardings pytree (paper §A.3 strategy)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        rep = NamedSharding(mesh, P())
+        return jax.tree.map(lambda _: rep, self)
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            row_pointers=np.asarray(self.row_pointers),
+            edges=np.asarray(self.edges),
+            l0_mask_packed=np.asarray(self.l0_mask_packed),
+            l0_states=np.asarray(self.l0_states),
+            l1_mask_packed=np.asarray(self.l1_mask_packed),
+            l1_states=np.asarray(self.l1_states),
+            meta=np.array(
+                [self.vocab_size, self.sid_length, self.dense_d, self.n_states,
+                 self.n_edges, self.n_constraints],
+                dtype=np.int64,
+            ),
+            level_bmax=np.asarray(self.level_bmax, dtype=np.int64),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "TransitionMatrix":
+        z = np.load(path)
+        meta = z["meta"]
+        return cls(
+            row_pointers=jnp.asarray(z["row_pointers"]),
+            edges=jnp.asarray(z["edges"]),
+            l0_mask_packed=jnp.asarray(z["l0_mask_packed"]),
+            l0_states=jnp.asarray(z["l0_states"]),
+            l1_mask_packed=jnp.asarray(z["l1_mask_packed"]),
+            l1_states=jnp.asarray(z["l1_states"]),
+            vocab_size=int(meta[0]),
+            sid_length=int(meta[1]),
+            dense_d=int(meta[2]),
+            level_bmax=tuple(int(b) for b in z["level_bmax"]),
+            n_states=int(meta[3]),
+            n_edges=int(meta[4]),
+            n_constraints=int(meta[5]),
+        )

@@ -1,0 +1,258 @@
+"""Offline trie construction and CSR flattening (paper §4.2).
+
+The builder is pure NumPy and fully vectorized: a single lexicographic sort of
+the restricted vocabulary followed by per-level prefix-change scans.  It never
+materializes a pointer-based trie, which lets it flatten constraint sets with
+tens of millions of Semantic IDs in seconds.
+
+State-id convention (matches the paper's Figure 1):
+  * state 0            -- the sink: no outgoing transitions.
+  * state 1            -- the root (the empty prefix).
+  * states at level l  -- contiguous id range [level_offsets[l], level_offsets[l+1]).
+    Level l holds the unique prefixes of length l; leaves live at level L and
+    have empty CSR rows.
+
+The CSR uses the *stacked* layout of paper §A.1.1: ``edges`` is a single
+``(n_edges + pad, 2)`` int32 tensor interleaving ``(token, next_state)`` so a
+single burst read fetches both.  The array is padded with ``max(bmax)`` zero
+rows so the speculative fixed-length dynamic slice of the VNTK can never be
+clamped by XLA/Pallas dynamic-slice semantics (a correctness hazard we hit in
+interpret-mode testing: a clamped start silently shifts the window).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["FlatTrie", "build_flat_trie", "pack_bits", "unpack_bits_word"]
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """Pack a boolean array into little-endian uint8 words along the last axis.
+
+    Little-endian bit order: bit ``i`` of word ``w`` is element ``8*w + i``.
+    (np.packbits defaults to big-endian; we keep our own convention so the
+    in-kernel unpack is a plain shift-and-mask.)
+    """
+    bits = np.asarray(bits, dtype=bool)
+    pad = (-bits.shape[-1]) % 8
+    if pad:
+        bits = np.concatenate(
+            [bits, np.zeros(bits.shape[:-1] + (pad,), bool)], axis=-1
+        )
+    b = bits.reshape(bits.shape[:-1] + (-1, 8)).astype(np.uint8)
+    weights = (1 << np.arange(8, dtype=np.uint8)).reshape((1,) * (b.ndim - 1) + (8,))
+    return (b * weights).sum(axis=-1).astype(np.uint8)
+
+
+def unpack_bits_word(packed: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits` (numpy-side helper, mostly for tests)."""
+    bits = (packed[..., :, None] >> np.arange(8, dtype=np.uint8)) & 1
+    bits = bits.reshape(packed.shape[:-1] + (-1,))
+    return bits[..., :n].astype(bool)
+
+
+@dataclasses.dataclass
+class FlatTrie:
+    """CSR-flattened prefix tree over a restricted Semantic-ID vocabulary."""
+
+    vocab_size: int
+    sid_length: int
+    n_constraints: int
+    # --- CSR (stacked layout, paper §A.1.1) ---
+    row_pointers: np.ndarray  # (n_states + 1,) int32|int64
+    edges: np.ndarray  # (n_edges + pad, 2) int32: [token, next_state]
+    n_states: int
+    n_edges: int
+    # --- per-level metadata ---
+    level_offsets: np.ndarray  # (L + 2,) first state id of each level; [0]=1(root)
+    level_bmax: np.ndarray  # (L,) max branch factor of level-l states (step l)
+    # --- dense acceleration tables (paper §A.1.2), built for levels < dense_d ---
+    dense_d: int
+    l0_mask_packed: np.ndarray | None = None  # (ceil(V/8),) uint8
+    l0_states: np.ndarray | None = None  # (V,) int32 CSR id of level-1 node (0=sink)
+    l1_mask_packed: np.ndarray | None = None  # (V, ceil(V/8)) uint8
+    l1_states: np.ndarray | None = None  # (V, V) int32 CSR id of level-2 node
+
+    def nbytes(self) -> int:
+        total = self.row_pointers.nbytes + self.edges.nbytes
+        for a in (self.l0_mask_packed, self.l0_states, self.l1_mask_packed, self.l1_states):
+            if a is not None:
+                total += a.nbytes
+        return total
+
+    def children(self, state: int) -> list[tuple[int, int]]:
+        """Debug helper: [(token, next_state)] for one state (host-side)."""
+        s, e = int(self.row_pointers[state]), int(self.row_pointers[state + 1])
+        return [(int(t), int(n)) for t, n in self.edges[s:e]]
+
+
+def _validate_sids(sids: np.ndarray, vocab_size: int) -> np.ndarray:
+    sids = np.asarray(sids)
+    if sids.ndim != 2:
+        raise ValueError(f"sids must be (N, L), got shape {sids.shape}")
+    if sids.size == 0:
+        raise ValueError("constraint set must be non-empty")
+    if sids.min() < 0 or sids.max() >= vocab_size:
+        raise ValueError("token ids out of range [0, vocab_size)")
+    return sids.astype(np.int64, copy=False)
+
+
+def build_flat_trie(
+    sids: np.ndarray,
+    vocab_size: int,
+    dense_d: int = 2,
+    index_dtype=np.int32,
+) -> FlatTrie:
+    """Flatten the prefix tree of ``sids`` into a stacked-CSR transition matrix.
+
+    Args:
+      sids: (N, L) integer array of Semantic IDs (the restricted vocabulary C).
+      vocab_size: token cardinality |V| (shared across levels, per TIGER).
+      dense_d: how many leading levels get dense bit-packed masks (0, 1 or 2).
+      index_dtype: dtype of CSR indices (int32 is enough below ~2e9 states).
+    """
+    if dense_d not in (0, 1, 2):
+        raise ValueError("dense_d must be 0, 1, or 2 (paper: d<=2 in practice)")
+    sids = _validate_sids(sids, vocab_size)
+    n, L = sids.shape
+
+    # Lexicographic sort; np.lexsort keys are last-significant-first.
+    order = np.lexsort(tuple(sids[:, c] for c in range(L - 1, -1, -1)))
+    s = sids[order]
+    # Drop duplicate SIDs.
+    if n > 1:
+        dup = np.all(s[1:] == s[:-1], axis=1)
+        if dup.any():
+            s = s[np.concatenate([[True], ~dup])]
+    n = s.shape[0]
+
+    # new_prefix[i, l] == True iff row i starts a new unique (l+1)-prefix.
+    if n > 1:
+        diff = s[1:] != s[:-1]  # (n-1, L)
+        changed = np.logical_or.accumulate(diff, axis=1)
+        new_prefix = np.concatenate([np.ones((1, L), bool), changed], axis=0)
+    else:
+        new_prefix = np.ones((1, L), bool)
+
+    # Within-level dense index of the (l+1)-prefix of each row.
+    within = np.cumsum(new_prefix, axis=0) - 1  # (n, L)
+    n_per_level = within[-1] + 1  # (L,) number of unique (l+1)-prefixes
+
+    # Global state ids: root=1, then levels 1..L contiguous. Sink=0.
+    level_offsets = np.zeros(L + 2, dtype=np.int64)
+    level_offsets[0] = 1  # root
+    level_offsets[1] = 2  # first level-1 state
+    for lvl in range(1, L + 1):
+        level_offsets[lvl + 1] = level_offsets[lvl] + n_per_level[lvl - 1]
+    # ---- Edge lists per level (vectorized) ----
+    # An edge at tree level l (0-based; source at level l, dest at level l+1)
+    # exists for every row where new_prefix[:, l] is True.
+    src_all = []
+    tok_all = []
+    dst_all = []
+    for lvl in range(L):
+        rows = np.nonzero(new_prefix[:, lvl])[0]
+        tok = s[rows, lvl]
+        dst = level_offsets[lvl + 1] + within[rows, lvl]
+        if lvl == 0:
+            src = np.ones(rows.shape[0], dtype=np.int64)  # root
+        else:
+            src = level_offsets[lvl] + within[rows, lvl - 1]
+        src_all.append(src)
+        tok_all.append(tok)
+        dst_all.append(dst)
+    # Per-level max branch factor B (paper §4.4): B[t] bounds the children of
+    # any state consulted at decode step t (source states live at level t).
+    # Computed before trimming so it is defined for every level.
+    level_bmax = np.zeros(L, dtype=np.int64)
+    for lvl in range(L):
+        if src_all[lvl].size:
+            base = 1 if lvl == 0 else int(level_offsets[lvl])
+            level_bmax[lvl] = int(
+                np.bincount(src_all[lvl] - base).max()
+            )
+
+    # Dense levels (< dense_d) are served by the bit-packed tables (§A.1.2),
+    # so their CSR rows are *trimmed*: states at levels < dense_d get no ids
+    # and their edges are dropped — this is what makes the Appendix-B memory
+    # accounting hold.  States at levels >= dense_d are renumbered to start
+    # at 1 (sink stays 0).
+    d_eff = dense_d if L > dense_d else 0
+    shift = int(level_offsets[d_eff]) - 1
+    src = np.concatenate(src_all[d_eff:]) - shift
+    tok = np.concatenate(tok_all[d_eff:])
+    dst = np.concatenate(dst_all[d_eff:]) - shift
+    n_edges = src.shape[0]
+    n_states = int(level_offsets[-1]) - shift
+    new_offsets = np.maximum(level_offsets - shift, 1)
+    new_offsets[: d_eff] = 1
+
+    # CSR assembly. Edges of one state are contiguous & token-sorted because
+    # the rows were lexsorted and states are level-contiguous.
+    counts = np.bincount(src, minlength=n_states)
+    row_pointers = np.zeros(n_states + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_pointers[1:])
+    csr_order = np.argsort(src, kind="stable")
+    edges_unpadded = np.stack([tok[csr_order], dst[csr_order]], axis=1)
+
+    # Pad the stacked edge tensor so a speculative slice of any bmax starting
+    # at the final row stays in-bounds (dynamic-slice clamping hazard). The
+    # Pallas kernel rounds its burst length up to a slot-chunk multiple, so
+    # pad generously (a few KB at most).
+    pad = -int(level_bmax.max()) % 128 + int(level_bmax.max()) + 128
+    edges = np.concatenate(
+        [edges_unpadded, np.zeros((pad, 2), dtype=edges_unpadded.dtype)], axis=0
+    ).astype(index_dtype)
+    row_pointers = row_pointers.astype(index_dtype)
+
+    trie = FlatTrie(
+        vocab_size=vocab_size,
+        sid_length=L,
+        n_constraints=n,
+        row_pointers=row_pointers,
+        edges=edges,
+        n_states=n_states,
+        n_edges=int(n_edges),
+        level_offsets=new_offsets,
+        level_bmax=level_bmax,
+        dense_d=dense_d,
+    )
+
+    # ---- Dense acceleration tables (paper §A.1.2) ----
+    if dense_d >= 1:
+        l0_mask = np.zeros(vocab_size, dtype=bool)
+        l0_states = np.zeros(vocab_size, dtype=index_dtype)
+        rows0 = np.nonzero(new_prefix[:, 0])[0]
+        y1 = s[rows0, 0]
+        l0_mask[y1] = True
+        if dense_d == 1:
+            # real (renumbered) CSR ids of level-1 states: VNTK runs from step 1
+            l0_states[y1] = (level_offsets[1] + within[rows0, 0]) - shift
+        else:
+            # virtual token-indexed ids (paper Appendix E): step 1 uses the
+            # dense l1 tables, which recover the parent token as node - 1.
+            l0_states[y1] = y1 + 1
+        trie.l0_mask_packed = pack_bits(l0_mask)
+        trie.l0_states = l0_states
+    if dense_d >= 2 and L >= 2:
+        l1_mask = np.zeros((vocab_size, vocab_size), dtype=bool)
+        l1_states = np.zeros((vocab_size, vocab_size), dtype=index_dtype)
+        # Level-1 edges: rows with a new 2-prefix; destination = level-2 state.
+        rows1 = np.nonzero(new_prefix[:, 1])[0]
+        y1 = s[rows1, 0]
+        y2 = s[rows1, 1]
+        l1_mask[y1, y2] = True
+        l1_states[y1, y2] = (level_offsets[2] + within[rows1, 1]) - shift
+        trie.l1_mask_packed = pack_bits(l1_mask)
+        trie.l1_states = l1_states
+    return trie
+
+
+def random_constraint_set(
+    rng: np.random.Generator, n: int, vocab_size: int, length: int
+) -> np.ndarray:
+    """Uniform random constraint set (paper §5.3 scalability protocol)."""
+    return rng.integers(0, vocab_size, size=(n, length), dtype=np.int64)

@@ -1,0 +1,107 @@
+"""Vectorized Node Transition Kernel — pure-JAX formulation (paper Alg. 2).
+
+This module is the paper-faithful XLA implementation (mirrors the Appendix E
+snippet): speculative fixed-length gather from the stacked CSR tensor,
+``iota < n_child`` sanitization, and a scatter-projection to a dense
+vocab-aligned mask.  It doubles as the numerical oracle for the Pallas TPU
+kernel in ``repro.kernels.vntk``.
+
+Deviation from the snippet (documented in DESIGN.md §3): we return the next
+node ids *vocab-aligned* — ``next_dense[..., v]`` is the trie state reached by
+emitting token ``v`` (SINK if invalid).  This makes Phase 4 of Algorithm 1 a
+single gather regardless of whether the step used a dense or sparse lookup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transition_matrix import TransitionMatrix
+
+__all__ = ["NEG_INF", "vntk_xla", "vntk_reference_scatter"]
+
+NEG_INF = -1.0e10
+
+
+def vntk_xla(
+    log_probs: jax.Array,  # (..., V) float
+    nodes: jax.Array,  # (...,) int32 current trie states
+    tm: TransitionMatrix,
+    bmax: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 2 in XLA ops. Returns (masked_log_probs, next_dense) both (..., V)."""
+    V = tm.vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    nb = n_flat.shape[0]
+
+    # Phase 1: boundary lookup.
+    starts = tm.row_pointers[n_flat]
+    lens = tm.row_pointers[n_flat + 1] - starts
+
+    # Phase 2: speculative slicing — always fetch bmax stacked edges.
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    gathered = jnp.take(
+        tm.edges,
+        starts[:, None] + offsets[None, :],
+        axis=0,
+        mode="fill",
+        fill_value=0,
+    )  # (nb, bmax, 2)
+
+    # Phase 3: sanitization (branch-free).
+    valid = offsets[None, :] < lens[:, None]  # (nb, bmax)
+    cols = gathered[:, :, 0]
+    nxt = jnp.where(valid, gathered[:, :, 1], 0)
+
+    # Phase 4: projection to dense vocab-aligned outputs via scatter.
+    scatter_idx = jnp.where(valid, cols, V)  # invalid slots -> overflow col
+    rows = jnp.arange(nb)[:, None]
+    masked = jnp.full((nb, V + 1), NEG_INF, dtype=log_probs.dtype)
+    cand_lp = jnp.take_along_axis(
+        lp_flat, jnp.clip(cols, 0, V - 1), axis=1
+    )
+    masked = masked.at[rows, scatter_idx].set(
+        jnp.where(valid, cand_lp, NEG_INF)
+    )[:, :V]
+    next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
+    next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
+
+    return (
+        masked.reshape(batch_shape + (V,)),
+        next_dense.reshape(batch_shape + (V,)),
+    )
+
+
+def vntk_reference_scatter(
+    log_probs: jax.Array,
+    nodes: jax.Array,
+    row_pointers: jax.Array,
+    edges: jax.Array,
+    bmax: int,
+    vocab_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw-array variant (no TransitionMatrix) used as the kernel test oracle."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    nb = n_flat.shape[0]
+    starts = row_pointers[n_flat]
+    lens = row_pointers[n_flat + 1] - starts
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    gathered = jnp.take(
+        edges, starts[:, None] + offsets[None, :], axis=0, mode="fill", fill_value=0
+    )
+    valid = offsets[None, :] < lens[:, None]
+    cols = gathered[:, :, 0]
+    nxt = jnp.where(valid, gathered[:, :, 1], 0)
+    scatter_idx = jnp.where(valid, cols, V)
+    rows = jnp.arange(nb)[:, None]
+    cand_lp = jnp.take_along_axis(lp_flat, jnp.clip(cols, 0, V - 1), axis=1)
+    masked = jnp.full((nb, V + 1), NEG_INF, dtype=log_probs.dtype)
+    masked = masked.at[rows, scatter_idx].set(jnp.where(valid, cand_lp, NEG_INF))[:, :V]
+    next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
+    next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
+    return masked.reshape(batch_shape + (V,)), next_dense.reshape(batch_shape + (V,))

@@ -1,0 +1,81 @@
+"""HLO collective accounting for the roofline's third term.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (post-GSPMD, per-device) HLO text and sum the tensor sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Link-traffic model (ring algorithms, documented approximations):
+  all-reduce         ~ 2 x bytes  (reduce-scatter + all-gather phases)
+  all-gather         ~ 1 x output bytes
+  reduce-scatter     ~ 1 x input bytes (output printed; we use max operand)
+  all-to-all         ~ 1 x bytes
+  collective-permute ~ 1 x bytes
+HLO shapes are per-device (SPMD), so the totals are per-chip traffic.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["parse_collective_bytes", "collective_link_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s+(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum per-op-type tensor bytes over all collective instructions."""
+    totals = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:80] and f"{op}-done" in line:
+            continue  # avoid double counting start/done pairs
+        size = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_type))
+        totals[op] += size
+        counts[op] += 1
+    return {
+        "bytes_by_op": dict(totals),
+        "counts_by_op": dict(counts),
+        "total_bytes": int(sum(totals.values())),
+        "link_bytes": int(collective_link_bytes(totals)),
+    }
+
+
+def collective_link_bytes(bytes_by_op: dict) -> float:
+    """Apply the ring-traffic factors (module docstring)."""
+    factors = {
+        "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+        "all-to-all": 1.0, "collective-permute": 1.0,
+    }
+    return sum(factors.get(op, 1.0) * b for op, b in bytes_by_op.items())

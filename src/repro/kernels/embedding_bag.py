@@ -1,0 +1,82 @@
+"""Pallas TPU embedding-bag kernel (recsys hot path).
+
+JAX has no native ``EmbeddingBag``; the XLA formulation is
+``jnp.take`` + ``segment_sum`` (see ``repro.models.recsys``).  This kernel is
+the TPU-native version of the *fixed-arity* bag lookup that dominates DLRM-
+style models: ``indices (B, K)`` rows are fetched from the HBM-resident table
+with per-row async DMAs into VMEM and reduced on the VPU, so the (potentially
+many-GB) table is never streamed — only the K·D working set per bag.
+
+Out-of-range indices (== n_rows sentinel) contribute zero, which implements
+both padding-to-K and frequency-capped multi-hot features.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_bag_pallas"]
+
+
+def _bag_body(
+    idx_ref,  # (bag_tile, K) int32 VMEM
+    table_hbm,  # (R + 1, D) in ANY (row R is a zero pad row)
+    out_ref,  # (bag_tile, D) VMEM
+    row_scratch,  # (bag_tile, K, D) VMEM
+    sem,
+    *,
+    bag_tile: int,
+    k: int,
+    mode: str,
+):
+    for i in range(bag_tile):
+        for j in range(k):
+            cp = pltpu.make_async_copy(
+                table_hbm.at[pl.ds(idx_ref[i, j], 1)],
+                row_scratch.at[i, pl.ds(j, 1)],
+                sem,
+            )
+            cp.start()
+            cp.wait()
+    acc = jnp.sum(row_scratch[...].astype(jnp.float32), axis=1)
+    if mode == "mean":
+        acc = acc / k
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(
+    table: jax.Array,  # (R, D); caller appends a zero row => sentinel R
+    indices: jax.Array,  # (B, K) int32 in [0, R]
+    mode: str = "sum",
+    bag_tile: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if mode not in ("sum", "mean"):
+        raise ValueError(mode)
+    B, K = indices.shape
+    R, D = table.shape
+    bag_tile = min(bag_tile, B)
+    while B % bag_tile:
+        bag_tile -= 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(_bag_body, bag_tile=bag_tile, k=K, mode=mode)
+    return pl.pallas_call(
+        kern,
+        grid=(B // bag_tile,),
+        in_specs=[
+            pl.BlockSpec((bag_tile, K), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bag_tile, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bag_tile, K, D), table.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(indices, table)

@@ -1,0 +1,56 @@
+"""Jitted dispatchers for the Pallas kernels.
+
+``impl`` resolution:
+  * "pallas"  — the Pallas kernel (compiled on TPU, interpret-mode on CPU).
+  * "xla"     — the pure-jnp oracle (always available, used for training-time
+                code paths where XLA fusion is already optimal).
+  * None      — "pallas" on TPU, "xla" elsewhere (interpret mode is a
+                correctness tool, not a fast path, so CPU defaults to XLA).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.vntk import vntk_fused_logsoftmax_pallas, vntk_pallas
+
+__all__ = ["vntk", "vntk_fused_logsoftmax", "embedding_bag"]
+
+
+def _resolve(impl: str | None) -> str:
+    if impl is None:
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+@partial(jax.jit, static_argnames=("bmax", "vocab", "impl"))
+def vntk(log_probs, nodes, row_pointers, edges, bmax: int, vocab: int,
+         impl: str | None = None):
+    """Alg. 2 (VNTK): (masked_log_probs, next_states), both vocab-aligned."""
+    if _resolve(impl) == "pallas":
+        return vntk_pallas(log_probs, nodes, row_pointers, edges, bmax, vocab)
+    return _ref.vntk_ref(log_probs, nodes, row_pointers, edges, bmax, vocab)
+
+
+@partial(jax.jit, static_argnames=("bmax", "vocab", "impl"))
+def vntk_fused_logsoftmax(logits, nodes, row_pointers, edges, bmax: int,
+                          vocab: int, impl: str | None = None):
+    """Fused LogSoftmax + VNTK masking (single HBM pass over logits)."""
+    if _resolve(impl) == "pallas":
+        return vntk_fused_logsoftmax_pallas(
+            logits, nodes, row_pointers, edges, bmax, vocab
+        )
+    return _ref.vntk_fused_logsoftmax_ref(
+        logits, nodes, row_pointers, edges, bmax, vocab
+    )
+
+
+@partial(jax.jit, static_argnames=("mode", "impl"))
+def embedding_bag(table, indices, mode: str = "sum", impl: str | None = None):
+    """Fixed-arity EmbeddingBag: (B, K) indices -> (B, D) reduced rows."""
+    if _resolve(impl) == "pallas":
+        return embedding_bag_pallas(table, indices, mode=mode)
+    return _ref.embedding_bag_ref(table, indices, mode=mode)

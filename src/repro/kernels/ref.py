@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerically-plain XLA formulation the kernels are tested
+against (``tests/test_kernels_pallas.py`` sweeps shapes/dtypes and asserts
+allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vntk import NEG_INF, vntk_reference_scatter
+
+__all__ = ["vntk_ref", "vntk_fused_logsoftmax_ref", "embedding_bag_ref"]
+
+
+def vntk_ref(log_probs, nodes, row_pointers, edges, bmax, vocab):
+    """Paper Appendix E scatter formulation (the faithful oracle)."""
+    return vntk_reference_scatter(log_probs, nodes, row_pointers, edges, bmax, vocab)
+
+
+def vntk_fused_logsoftmax_ref(logits, nodes, row_pointers, edges, bmax, vocab):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return vntk_reference_scatter(lp, nodes, row_pointers, edges, bmax, vocab)
+
+
+def embedding_bag_ref(table, indices, mode="sum"):
+    """take + reduce formulation; sentinel row R must be zero."""
+    rows = jnp.take(table, indices, axis=0)  # (B, K, D)
+    acc = jnp.sum(rows.astype(jnp.float32), axis=1)
+    if mode == "mean":
+        acc = acc / indices.shape[1]
+    return acc.astype(table.dtype)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model); the ``pod`` axis
+composes with ``data`` for batch sharding (DP across pods) while ``model``
+(TP/EP/sequence) stays intra-pod where ICI is fastest.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state; ``launch/dryrun.py`` sets xla_force_host_platform_device_count=512
+before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "POD_SHAPE", "MULTIPOD_SHAPE"]
+
+POD_SHAPE = (16, 16)
+MULTIPOD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh over however many devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

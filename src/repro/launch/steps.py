@@ -1,0 +1,603 @@
+"""Per-(architecture x shape) step builders for the multi-pod dry-run.
+
+``build_cell(arch_id, shape_name, mesh)`` returns a :class:`Cell` holding the
+jittable step function, its ``input_specs()`` (ShapeDtypeStruct stand-ins —
+weak-type-correct, shardable, never allocated), the in/out shardings, and the
+analytic MODEL_FLOPS used by the roofline (§Roofline: 6·N·D dense,
+6·N_active·D MoE, + exact attention terms).
+
+Step kinds:
+  lm/train    — loss + grads + AdamW update (full training step)
+  lm/prefill  — forward + KV-cache build, last-token logits
+  lm/decode   — one token against a (sequence-sharded) KV cache
+  gr/serve    — one *constrained* SID decode step: prefix-shared decode +
+                Algorithm 1 (LogSoftmax -> VNTK mask -> beam top-k -> gather)
+  gnn/train   — full-graph or sampled-subgraph regression step
+  recsys/*    — train / bulk-serve / retrieval scoring
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_bundle, static_gr, supports_shape
+from repro.configs.base import GraphShape, LMShape, RecsysShape
+from repro.distributed import sharding as sh
+from repro.models import gnn, recsys, transformer
+from repro.training.optimizer import adamw
+
+__all__ = ["Cell", "build_cell", "input_specs", "list_cells"]
+
+_OPT = adamw(lr=1e-4)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    model_flops_per_chip: float  # analytic useful flops / chip / step
+    notes: str = ""
+    donate_argnums: tuple = ()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _bspec(mesh, batch, rank):
+    dp = sh.dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    lead = dp if (batch % n_dp == 0 and batch >= n_dp) else None
+    return P(lead, *([None] * (rank - 1)))
+
+
+def _round_to(x, m):
+    return -(-x // m) * m
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+
+
+def _lm_attn_flops(cfg, n_tokens, kv_len=None, causal=True):
+    hd = cfg.resolved_head_dim() if cfg.attention != "mla" else (
+        cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    kv_len = kv_len or n_tokens
+    if cfg.sliding_window:
+        kv_len = min(kv_len, cfg.sliding_window)
+    f = 2 * 2 * n_tokens * kv_len * cfg.n_heads * hd
+    return f / 2 if causal else f
+
+
+def _lm_train_cell(arch_id, bundle, shape: LMShape, mesh) -> Cell:
+    cfg = bundle.config
+    dp_ok = shape.global_batch % int(
+        np.prod([mesh.shape[a] for a in sh.dp_axes(mesh)])) == 0
+    if cfg.use_sp and dp_ok:
+        cfg = dataclasses.replace(cfg, sp_axes=sh.dp_axes(mesh))
+    p_specs = transformer.param_specs(cfg)
+    o_specs = jax.eval_shape(_OPT.init, p_specs)
+    p_psh = sh.tree_shardings(
+        mesh, sh.lm_param_pspecs(p_specs, mesh, cfg.n_kv_heads)
+    )
+    o_psh = {"m": p_psh, "v": p_psh}
+    tok = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+    tok_psh = NamedSharding(mesh, _bspec(mesh, shape.global_batch, 2))
+    step_psh = NamedSharding(mesh, P())
+
+    n_mb = cfg.train_microbatches
+
+    def train_step(params, opt_state, step_no, tokens):
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: transformer.lm_loss(p, tokens, cfg)
+            )(params)
+        else:
+            mbs = tokens.reshape(n_mb, tokens.shape[0] // n_mb, -1)
+
+            def mb_body(acc, mb):
+                l, g = jax.value_and_grad(
+                    lambda p: transformer.lm_loss(p, mb, cfg)
+                )(params)
+                return (acc[0] + l / n_mb,
+                        jax.tree.map(lambda a, b: a + b / n_mb, acc[1], g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params))
+            (loss, grads), _ = jax.lax.scan(mb_body, zero, mbs)
+        new_params, new_opt = _OPT.update(grads, opt_state, params, step_no)
+        return new_params, new_opt, loss
+
+    n_chips = mesh.size
+    tokens_total = shape.global_batch * shape.seq_len
+    mf = (
+        6 * cfg.active_param_count() * tokens_total
+        + 3 * shape.global_batch * _lm_attn_flops(cfg, shape.seq_len)
+    ) / n_chips
+    return Cell(
+        arch_id, shape.name, "train", train_step,
+        (p_specs, o_specs, _sds((), jnp.int32), tok),
+        (p_psh, o_psh, step_psh, tok_psh),
+        (p_psh, o_psh, NamedSharding(mesh, P())),
+        mf,
+        donate_argnums=(0, 1),
+    )
+
+
+def _lm_prefill_cell(arch_id, bundle, shape: LMShape, mesh) -> Cell:
+    cfg = bundle.config
+    p_specs = transformer.param_specs(cfg)
+    p_psh = sh.tree_shardings(
+        mesh, sh.lm_param_pspecs(p_specs, mesh, cfg.n_kv_heads)
+    )
+    tok = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+    tok_psh = NamedSharding(mesh, _bspec(mesh, shape.global_batch, 2))
+
+    def prefill_step(params, tokens):
+        logits, cache = transformer.prefill(params, tokens, cfg)
+        return logits, cache
+
+    cache_specs = jax.eval_shape(
+        lambda p, t: transformer.prefill(p, t, cfg)[1], p_specs, tok
+    )
+    cache_psh = sh.tree_shardings(
+        mesh,
+        sh.kv_cache_pspecs(cache_specs, mesh,
+                           batch_shardable=shape.global_batch >= mesh.size // 16),
+    )
+    n_chips = mesh.size
+    tokens_total = shape.global_batch * shape.seq_len
+    mf = (
+        2 * cfg.active_param_count() * tokens_total
+        + shape.global_batch * _lm_attn_flops(cfg, shape.seq_len)
+    ) / n_chips
+    return Cell(
+        arch_id, shape.name, "prefill", prefill_step,
+        (p_specs, tok),
+        (p_psh, tok_psh),
+        (NamedSharding(mesh, _bspec(mesh, shape.global_batch, 3)), cache_psh),
+        mf,
+    )
+
+
+def _lm_decode_cell(arch_id, bundle, shape: LMShape, mesh) -> Cell:
+    cfg = bundle.config
+    p_specs = transformer.param_specs(cfg)
+    p_psh = sh.tree_shardings(
+        mesh, sh.lm_param_pspecs(p_specs, mesh, cfg.n_kv_heads)
+    )
+    B = shape.global_batch
+    slots = _round_to(shape.seq_len + 128, 256)
+    if cfg.sliding_window and cfg.sliding_window < slots:
+        slots = cfg.sliding_window
+    cache_specs = jax.eval_shape(
+        functools.partial(transformer.init_cache, cfg, B, slots)
+    )
+    cache_psh = sh.tree_shardings(
+        mesh, sh.kv_cache_pspecs(cache_specs, mesh, batch_shardable=B > 1)
+    )
+    tok = _sds((B, 1), jnp.int32)
+    tok_psh = NamedSharding(mesh, _bspec(mesh, B, 2))
+
+    def decode(params, cache, tokens):
+        # place the query at the end of the prefilled context
+        cache = dataclasses.replace(cache, pos=jnp.asarray(shape.seq_len, jnp.int32))
+        return transformer.decode_step(params, cache, tokens, cfg)
+
+    kv_len = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    if cfg.attention == "mla":
+        attn = 2 * 2 * B * kv_len * cfg.n_heads * (
+            cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+    else:
+        attn = 2 * 2 * B * kv_len * cfg.n_heads * cfg.resolved_head_dim()
+    mf = (2 * cfg.active_param_count() * B + attn) / mesh.size
+    logits_psh = NamedSharding(mesh, _bspec(mesh, B, 3))
+    if cfg.defer_cache_write:
+        bdp = _bspec(mesh, B, 1)[0]
+        pend_psh = NamedSharding(mesh, P(None, bdp, None, None, None)) \
+            if cfg.attention != "mla" \
+            else NamedSharding(mesh, P(None, bdp, None, None))
+        out_sh = (logits_psh, cache_psh, (pend_psh, pend_psh))
+    else:
+        out_sh = (logits_psh, cache_psh)
+    return Cell(
+        arch_id, shape.name, "decode", decode,
+        (p_specs, cache_specs, tok),
+        (p_psh, cache_psh, tok_psh),
+        out_sh,
+        mf,
+        donate_argnums=(1,),
+    )
+
+
+# --------------------------------------------------------------------------
+# GR (paper) cells
+# --------------------------------------------------------------------------
+
+
+def _gr_trie_specs():
+    """Spec-only stand-in for the 20M-constraint CSR (see DESIGN.md §6)."""
+    V, L, C = static_gr.SID_VOCAB, static_gr.SID_LENGTH, static_gr.N_CONSTRAINTS
+    n_states = 1 + sum(min(V ** l, C) for l in range(2, L + 1))
+    n_edges = sum(min(V ** l, C) for l in range(3, L + 1))
+    return {
+        "row_pointers": _sds((n_states + 1,), jnp.int32),
+        "edges": _sds((n_edges + 256, 2), jnp.int32),
+        "l1_mask_packed": _sds((V, V // 8), jnp.uint8),
+        "l1_states": _sds((V, V), jnp.int32),
+    }
+
+
+def _gr_serve_cell(arch_id, bundle, shape, mesh, constrained: bool) -> Cell:
+    cfg = bundle.config
+    V = cfg.vocab_size
+    sid_v = static_gr.SID_VOCAB
+    B, M = shape.global_batch, shape.beam_size
+    S_h = shape.history_len
+    S_sid = shape.sid_length
+    hd = cfg.resolved_head_dim()
+    KV, L = cfg.n_kv_heads, cfg.n_layers
+    dt = jnp.bfloat16
+
+    p_specs = transformer.param_specs(cfg)
+    if cfg.serve_replicate_weights:
+        # weights fit per-chip; batch shards over ALL axes => no TP psums
+        p_psh = jax.tree.map(lambda _: NamedSharding(mesh, P()), p_specs)
+        dp = tuple(mesh.axis_names)
+    else:
+        p_psh = sh.tree_shardings(
+            mesh, sh.lm_param_pspecs(p_specs, mesh, cfg.n_kv_heads)
+        )
+        dp = _bspec(mesh, B, 1)[0]
+
+    batched_beams = cfg.gr_batched_beams
+    hist_k = _sds((L, B, S_h, KV, hd), dt)
+    if batched_beams:
+        beam_k = _sds((L, B, M, S_sid, KV, hd), dt)
+        beam_psh = NamedSharding(mesh, P(None, dp, None, None, None, None))
+    else:
+        beam_k = _sds((L, B * M, S_sid, KV, hd), dt)
+        beam_psh = NamedSharding(mesh, P(None, dp, None, None, None))
+    hist_psh = NamedSharding(mesh, P(None, dp, None, None, None))
+    tok = _sds((B * M, 1), jnp.int32)
+    tm_specs = _gr_trie_specs()
+    tm_psh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tm_specs)
+    scores = _sds((B, M), jnp.float32)
+    nodes = _sds((B, M), jnp.int32)
+    bm_psh = NamedSharding(mesh, P(dp, None))
+    tokp = NamedSharding(mesh, P(dp, None))
+
+    SID_STEP = 2  # first sparse (VNTK) level — the representative step
+    BMAX = 32  # level-2 max branch factor bound for |C|=20M (DESIGN.md §6)
+
+    def serve_step(params, hk, hv, bk, bv, tokens, beam_scores, beam_nodes, tm):
+        logits, bk, bv = transformer.gr_decode_step(
+            params, hk, hv, bk, bv, tokens,
+            jnp.asarray(SID_STEP, jnp.int32), cfg,
+        )
+        logits = logits[:, 0, :sid_v].reshape(B, M, sid_v)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        if constrained:
+            from repro.core.vntk import vntk_reference_scatter
+
+            masked, nxt = vntk_reference_scatter(
+                lp, beam_nodes, tm["row_pointers"], tm["edges"], BMAX, sid_v
+            )
+        else:
+            masked, nxt = lp, jnp.zeros((B, M, sid_v), jnp.int32)
+        total = beam_scores[:, :, None] + masked
+        top_scores, top_idx = jax.lax.top_k(total.reshape(B, M * sid_v), M)
+        beam_idx = top_idx // sid_v
+        token = (top_idx % sid_v).astype(jnp.int32)
+        bix = jnp.arange(B)[:, None]
+        new_nodes = nxt[bix, beam_idx, token] if constrained else beam_nodes
+        # beam-permute the suffix caches
+        if batched_beams:
+            # batch-local: take_along_axis over the beam axis only — never
+            # crosses the dp-sharded batch axis (no cache all-gather).
+            idx = beam_idx[None, :, :, None, None, None]
+            bk = jnp.take_along_axis(bk, idx, axis=2)
+            bv = jnp.take_along_axis(bv, idx, axis=2)
+        else:
+            flat = (bix * M + beam_idx).reshape(-1)
+            bk = jnp.take(bk, flat, axis=1)
+            bv = jnp.take(bv, flat, axis=1)
+        return token, top_scores, new_nodes, bk, bv
+
+    attn = 2 * 2 * B * M * (S_h + S_sid) * cfg.n_heads * hd
+    mf = (2 * cfg.active_param_count() * B * M + attn) / mesh.size
+    return Cell(
+        arch_id, shape.name,
+        "serve_constrained" if constrained else "serve_unconstrained",
+        serve_step,
+        (p_specs, hist_k, hist_k, beam_k, beam_k, tok, scores, nodes, tm_specs),
+        (p_psh, hist_psh, hist_psh, beam_psh, beam_psh, tokp, bm_psh, bm_psh,
+         tm_psh),
+        (bm_psh, bm_psh, bm_psh, beam_psh, beam_psh),
+        mf,
+        notes="prefix-shared beam KV; VNTK at SID level 2 (bmax=32)",
+    )
+
+
+def _gr_train_cell(arch_id, bundle, shape, mesh) -> Cell:
+    lm_shape = LMShape(shape.name, "train", shape.history_len, shape.global_batch)
+    return _lm_train_cell(arch_id, bundle, lm_shape, mesh)
+
+
+# --------------------------------------------------------------------------
+# GNN cells
+# --------------------------------------------------------------------------
+
+
+def _gnn_batch_specs(cfg, shape: GraphShape, pad_multiple: int = 512):
+    """Node/edge arrays padded to a mesh-divisible size (sharding requires
+    divisibility at the jit boundary); padding is masked out in the loss and
+    routed to a sink node in segment_sum."""
+    if shape.kind == "batched":
+        B, N, E = shape.batch, shape.n_nodes, shape.n_edges
+        return {
+            "node_feats": _sds((B, N, shape.d_feat), jnp.float32),
+            "edge_feats": _sds((B, E, cfg.edge_feat_dim), jnp.float32),
+            "senders": _sds((B, E), jnp.int32),
+            "receivers": _sds((B, E), jnp.int32),
+            "targets": _sds((B, N, cfg.out_dim), jnp.float32),
+        }
+    if shape.kind == "sampled":
+        # fanout 15-10 from 1024 seeds: nodes = 1024*(1+15+150),
+        # edges = 1024*(15+150) — already 512-divisible
+        seeds = shape.batch_nodes
+        n_pad = seeds * (1 + int(sum(np.cumprod(shape.fanout))))
+        e_pad = seeds * int(sum(np.cumprod(shape.fanout)))
+    else:
+        n_pad = _round_to(shape.n_nodes, pad_multiple)
+        e_pad = _round_to(shape.n_edges, pad_multiple)
+    return {
+        "node_feats": _sds((n_pad, shape.d_feat), jnp.float32),
+        "edge_feats": _sds((e_pad, cfg.edge_feat_dim), jnp.float32),
+        "senders": _sds((e_pad,), jnp.int32),
+        "receivers": _sds((e_pad,), jnp.int32),
+        "targets": _sds((n_pad, cfg.out_dim), jnp.float32),
+        "node_mask": _sds((n_pad,), jnp.bool_),
+    }
+
+
+def _gnn_train_cell(arch_id, bundle, shape: GraphShape, mesh) -> Cell:
+    import dataclasses as dc
+
+    cfg = dc.replace(bundle.config, node_feat_dim=shape.d_feat)
+    p_specs = gnn.param_specs(cfg)
+    o_specs = jax.eval_shape(_OPT.init, p_specs)
+    rep = NamedSharding(mesh, P())
+    p_psh = jax.tree.map(lambda _: rep, p_specs)
+    o_psh = {"m": p_psh, "v": p_psh}
+    batch = _gnn_batch_specs(cfg, shape)
+    gaxes = sh.graph_axes(mesh)
+
+    def bspec(path_name, leaf):
+        if shape.kind == "batched":
+            return NamedSharding(mesh, _bspec(mesh, shape.batch, len(leaf.shape)))
+        lead = gaxes if leaf.shape[0] % mesh.size == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (len(leaf.shape) - 1))))
+
+    b_psh = {k: bspec(k, v) for k, v in batch.items()}
+
+    def train_step(params, opt_state, step_no, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn.gnn_loss(p, batch, cfg)
+        )(params)
+        new_p, new_o = _OPT.update(grads, opt_state, params, step_no)
+        return new_p, new_o, loss
+
+    H, Lp = cfg.d_hidden, cfg.n_layers
+    n_eff = shape.n_nodes * (shape.batch if shape.kind == "batched" else 1)
+    e_eff = shape.n_edges * (shape.batch if shape.kind == "batched" else 1)
+    if shape.kind == "sampled":
+        n_eff = batch["node_feats"].shape[0]
+        e_eff = batch["edge_feats"].shape[0]
+    per_layer = 2 * e_eff * (3 * H * H + H * H) + 2 * n_eff * (2 * H * H + H * H)
+    enc = 2 * n_eff * shape.d_feat * H + 2 * e_eff * cfg.edge_feat_dim * H
+    mf = 3 * (Lp * per_layer + enc) / mesh.size
+    return Cell(
+        arch_id, shape.name, "train", train_step,
+        (p_specs, o_specs, _sds((), jnp.int32), batch),
+        (p_psh, o_psh, rep, b_psh),
+        (p_psh, o_psh, rep),
+        mf,
+        donate_argnums=(0, 1),
+    )
+
+
+# --------------------------------------------------------------------------
+# Recsys cells
+# --------------------------------------------------------------------------
+
+
+def _recsys_batch_specs(cfg, batch: int):
+    return {
+        "dense": _sds((batch, max(cfg.n_dense, 1)), jnp.float32),
+        "sparse": _sds((batch, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        "hist": _sds((batch, cfg.hist_len), jnp.int32),
+        "target": _sds((batch,), jnp.int32),
+        "label": _sds((batch,), jnp.float32),
+    }
+
+
+def _recsys_cell(arch_id, bundle, shape: RecsysShape, mesh) -> Cell:
+    cfg = bundle.config
+    p_specs = recsys.param_specs(cfg)
+    p_psh = sh.tree_shardings(mesh, sh.recsys_param_pspecs(p_specs, mesh))
+    rep = NamedSharding(mesh, P())
+
+    def mlp_flops(dims, d_in):
+        f, prev = 0, d_in
+        for d in dims:
+            f += 2 * prev * d
+            prev = d
+        return f
+
+    if cfg.model == "dlrm":
+        per_row = (
+            mlp_flops(cfg.bot_mlp, cfg.n_dense)
+            + mlp_flops(cfg.top_mlp, (cfg.n_sparse + 1) * cfg.n_sparse // 2
+                        + cfg.embed_dim)
+            + 2 * (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+        )
+    elif cfg.model == "wide_deep":
+        per_row = mlp_flops(cfg.mlp + (1,), cfg.n_sparse * cfg.embed_dim)
+    elif cfg.model == "fm":
+        per_row = 4 * cfg.n_sparse * cfg.embed_dim
+    else:  # mind
+        per_row = (
+            2 * cfg.hist_len * cfg.embed_dim ** 2
+            + cfg.capsule_iters * 4 * cfg.n_interests * cfg.hist_len * cfg.embed_dim
+        )
+
+    if shape.kind == "train":
+        o_specs = jax.eval_shape(_OPT.init, p_specs)
+        o_psh = {"m": p_psh, "v": p_psh}
+        batch = _recsys_batch_specs(cfg, shape.batch)
+        b_psh = {k: NamedSharding(mesh, _bspec(mesh, shape.batch, len(v.shape)))
+                 for k, v in batch.items()}
+
+        def train_step(params, opt_state, step_no, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: recsys.recsys_loss(p, batch, cfg)
+            )(params)
+            new_p, new_o = _OPT.update(grads, opt_state, params, step_no)
+            return new_p, new_o, loss
+
+        mf = 3 * shape.batch * per_row / mesh.size
+        return Cell(
+            arch_id, shape.name, "train", train_step,
+            (p_specs, o_specs, _sds((), jnp.int32), batch),
+            (p_psh, o_psh, rep, b_psh),
+            (p_psh, o_psh, rep),
+            mf,
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "retrieval":
+        if cfg.model == "mind":
+            hist = _sds((max(shape.batch, 1), cfg.hist_len), jnp.int32)
+            cand = _sds((shape.n_candidates,), jnp.int32)
+
+            def retrieve(params, hist, cand_ids):
+                return recsys.mind_retrieval_scores(params, hist, cand_ids, cfg)
+
+            mf = (shape.n_candidates * 2 * cfg.n_interests * cfg.embed_dim
+                  + shape.batch * per_row) / mesh.size
+            cand_psh = NamedSharding(
+                mesh, P("model" if shape.n_candidates % mesh.shape["model"] == 0
+                        else None))
+            return Cell(
+                arch_id, shape.name, "retrieval", retrieve,
+                (p_specs, hist, cand),
+                (p_psh, rep, cand_psh),
+                NamedSharding(mesh, P(None, "model")),
+                mf,
+                notes="single batched max-over-interest dot vs 1M candidates",
+            )
+        # non-two-tower models: bulk-score candidates as a serve batch
+        batch = _recsys_batch_specs(cfg, shape.n_candidates)
+        b_psh = {k: NamedSharding(mesh, _bspec(mesh, shape.n_candidates, len(v.shape)))
+                 for k, v in batch.items()}
+
+        def serve(params, batch):
+            return recsys.forward(params, batch, cfg)
+
+        mf = shape.n_candidates * per_row / mesh.size
+        return Cell(
+            arch_id, shape.name, "retrieval", serve,
+            (p_specs, batch), (p_psh, b_psh),
+            NamedSharding(mesh, _bspec(mesh, shape.n_candidates, 1)),
+            mf,
+            notes="scored as bulk batch (model is not two-tower factorizable)",
+        )
+
+    # serve_p99 / serve_bulk
+    batch = _recsys_batch_specs(cfg, shape.batch)
+    b_psh = {k: NamedSharding(mesh, _bspec(mesh, shape.batch, len(v.shape)))
+             for k, v in batch.items()}
+
+    def serve(params, batch):
+        return recsys.forward(params, batch, cfg)
+
+    mf = shape.batch * per_row / mesh.size
+    return Cell(
+        arch_id, shape.name, "serve", serve,
+        (p_specs, batch), (p_psh, b_psh),
+        NamedSharding(mesh, _bspec(mesh, shape.batch, 1)),
+        mf,
+    )
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, mesh,
+               cfg_overrides: dict | None = None) -> Cell:
+    bundle = get_bundle(arch_id)
+    if cfg_overrides:
+        cfg_overrides = dict(cfg_overrides)
+        moe_groups = cfg_overrides.pop("moe_dispatch_groups", None)
+        cfg = dataclasses.replace(bundle.config, **cfg_overrides)
+        if moe_groups is not None and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=moe_groups)
+            )
+        bundle = dataclasses.replace(bundle, config=cfg)
+    shape = next(s for s in bundle.shapes if s.name == shape_name)
+    ok, why = supports_shape(arch_id, shape_name)
+    if not ok:
+        raise ValueError(f"{arch_id} x {shape_name} skipped: {why}")
+    if bundle.family == "lm":
+        if shape.kind == "train":
+            return _lm_train_cell(arch_id, bundle, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(arch_id, bundle, shape, mesh)
+        return _lm_decode_cell(arch_id, bundle, shape, mesh)
+    if bundle.family == "gr":
+        if shape.kind == "train":
+            return _gr_train_cell(arch_id, bundle, shape, mesh)
+        return _gr_serve_cell(
+            arch_id, bundle, shape, mesh,
+            constrained=shape.kind == "serve_constrained",
+        )
+    if bundle.family == "gnn":
+        return _gnn_train_cell(arch_id, bundle, shape, mesh)
+    if bundle.family == "recsys":
+        return _recsys_cell(arch_id, bundle, shape, mesh)
+    raise ValueError(bundle.family)
+
+
+def input_specs(arch_id: str, shape_name: str, mesh) -> tuple:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    return build_cell(arch_id, shape_name, mesh).args
+
+
+def list_cells(include_gr: bool = True):
+    """All runnable (arch, shape) pairs + documented skips."""
+    from repro.configs import ARCHS
+
+    runnable, skipped = [], []
+    for arch_id, bundle in ARCHS.items():
+        if bundle.family == "gr" and not include_gr:
+            continue
+        for shape in bundle.shapes:
+            ok, why = supports_shape(arch_id, shape.name)
+            (runnable if ok else skipped).append((arch_id, shape.name, why))
+    return runnable, skipped

@@ -1,0 +1,5 @@
+"""Model zoo: transformer LM family (GQA/MLA/SWA/MoE), MeshGraphNet,
+recsys (Wide&Deep / MIND / DLRM / FM), and the RQ-VAE SID tokenizer."""
+from repro.models import gnn, recsys, rqvae, transformer
+
+__all__ = ["gnn", "recsys", "rqvae", "transformer"]

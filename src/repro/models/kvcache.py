@@ -1,0 +1,78 @@
+"""KV caches: full, ring-buffered (sliding-window), and MLA latent.
+
+All caches are per-layer-stacked pytrees (leading axis = n_layers) so the
+decode step can ``lax.scan`` over layers carrying the matching cache slice.
+
+The ring cache keeps only ``window`` slots; insertion is at ``pos % window``
+and every slot remembers its absolute position for masking — this is what
+makes mixtral long_500k decode O(window) in memory instead of O(S).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["KVCache", "MLACache", "init_kv_cache", "init_mla_cache"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array  # (L, B, S_slots, KVH, Dh)
+    v: jax.Array  # (L, B, S_slots, KVH, Dv)
+    slot_pos: jax.Array  # (S_slots,) absolute position per slot, -1 = empty
+    pos: jax.Array  # () next position to write
+    ring: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    def layer(self, i):
+        return self.k[i], self.v[i]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLACache:
+    c_kv: jax.Array  # (L, B, S, kv_lora) compressed latents
+    k_rope: jax.Array  # (L, B, S, rope_dim) shared decoupled keys
+    slot_pos: jax.Array  # (S,)
+    pos: jax.Array  # ()
+
+
+def init_kv_cache(
+    n_layers, batch, max_len, n_kv_heads, head_dim, v_dim=None,
+    dtype=jnp.bfloat16, window=None,
+) -> KVCache:
+    slots = min(max_len, window) if window else max_len
+    v_dim = v_dim or head_dim
+    return KVCache(
+        k=jnp.zeros((n_layers, batch, slots, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((n_layers, batch, slots, n_kv_heads, v_dim), dtype),
+        slot_pos=jnp.full((slots,), -1, jnp.int32),
+        pos=jnp.zeros((), jnp.int32),
+        ring=window is not None and slots == window,
+    )
+
+
+def init_mla_cache(
+    n_layers, batch, max_len, kv_lora_rank, rope_dim, dtype=jnp.bfloat16
+) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((n_layers, batch, max_len, kv_lora_rank), dtype),
+        k_rope=jnp.zeros((n_layers, batch, max_len, rope_dim), dtype),
+        slot_pos=jnp.full((max_len,), -1, jnp.int32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def write_slot(cache_arr: jax.Array, new: jax.Array, slot: jax.Array):
+    """cache_arr (B, S, ...) <- new (B, 1, ...) at index ``slot``."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_arr, new.astype(cache_arr.dtype), slot, axis=1
+    )
+
+
+def advance_positions(slot_pos: jax.Array, pos: jax.Array, n_slots: int, ring: bool):
+    """Mark the slot written at this step with its absolute position."""
+    slot = jnp.where(ring, pos % n_slots, jnp.minimum(pos, n_slots - 1))
+    return slot_pos.at[slot].set(pos), slot

@@ -1,0 +1,98 @@
+"""Foundational layers: initializers, RMSNorm, RoPE, SwiGLU, MLPs.
+
+No flax — parameters are plain pytrees (nested dicts of jax.Arrays), and
+every layer is a pure function ``f(params, x, ...)``.  Initializers take an
+explicit PRNG key and return the param subtree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense", "rms_norm_init", "rms_norm", "mlp_init", "mlp",
+    "rope_frequencies", "apply_rope", "swiglu_init", "swiglu",
+]
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.bfloat16, bias=False):
+    p = {"w": _he(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rms_norm_init(d, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, dims, dtype=jnp.bfloat16, bias=True):
+    """dims = (d_in, h1, ..., d_out); ReLU between layers."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype, bias=bias)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(p, x, act=jax.nn.relu):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+def swiglu_init(key, d_model, d_ff, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": _he(k1, (d_model, d_ff), dtype),
+        "w3": _he(k2, (d_model, d_ff), dtype),
+        "w2": _he(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0):
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    if x.ndim == angles.ndim + 1:  # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with scatter-based token dispatch.
+
+Covers both assigned MoE archs:
+  * Mixtral-8x7B      — 8 experts, top-2, no shared experts.
+  * DeepSeek-V2-Lite  — 64 fine-grained routed experts top-6 + 2 shared
+                        experts, first layer dense.
+
+Dispatch is position-in-expert scatter (not the GShard (T,E,C) one-hot
+einsum) so peak memory is O(E*C*D) for the expert buffer instead of
+O(T*E*C): positions are computed with a cumsum over the (T*k, E) assignment
+one-hot, tokens beyond the static capacity are dropped (capacity_factor
+1.25), and expert FFNs run as a single batched einsum over the (E, C, D)
+buffer.  Expert-parallel sharding partitions that leading E axis over the
+"model" mesh axis; XLA inserts the dispatch all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import _he, swiglu, swiglu_init
+
+__all__ = ["moe_init", "moe_ffn", "expert_capacity"]
+
+
+def expert_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": _he(k1, (d_model, cfg.n_experts), jnp.float32),
+        "w1": _he(k2, (cfg.n_experts, d_model, cfg.d_expert), dtype),
+        "w3": _he(k3, (cfg.n_experts, d_model, cfg.d_expert), dtype),
+        "w2": _he(k4, (cfg.n_experts, cfg.d_expert, d_model), dtype,
+                  fan_in=cfg.d_expert),
+    }
+    if cfg.n_shared:
+        d_sh = cfg.d_shared or cfg.n_shared * cfg.d_expert
+        p["shared"] = swiglu_init(k5, d_model, d_sh, dtype)
+    return p
+
+
+def moe_ffn(params, x: jax.Array, cfg: MoEConfig):
+    """x: (..., D) -> (..., D), plus the router aux (load-balancing) loss.
+
+    With ``cfg.dispatch_groups = G > 1`` and 3D input (B, S, D), the token
+    axis splits into B*G groups of S/G tokens.  Because activations are
+    sharded (batch=data, seq=model), every group lives inside ONE shard, so
+    the position cumsum / scatter / gather of the dispatch run shard-locally
+    via vmap — no cross-shard prefix sums, no involuntary resharding
+    (EXPERIMENTS.md §Perf hillclimb B).
+    """
+    G = cfg.dispatch_groups
+    if G >= 1 and x.ndim == 3 and x.shape[1] % G == 0:
+        B, S, D = x.shape
+        xg = x.reshape(B * G, S // G, D)
+        yg, aux = jax.vmap(
+            lambda xs: _moe_ffn_single(params, xs, cfg)
+        )(xg)
+        out = yg.reshape(B, S, D)
+        aux = jnp.mean(aux)
+    else:
+        flat = x.reshape(-1, x.shape[-1])
+        out, aux = _moe_ffn_single(params, flat, cfg)
+        out = out.reshape(x.shape)
+    if "shared" in params:
+        out = out + swiglu(params["shared"], x)
+    return out, aux
+
+
+def _moe_ffn_single(params, x: jax.Array, cfg: MoEConfig):
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = expert_capacity(T, cfg)
+
+    router_logits = x.astype(jnp.float32) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)  # (T, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # Aux load-balancing loss (Switch-style): E * sum_e f_e * P_e.
+    me = jnp.mean(probs, axis=0)  # (E,)
+    assign = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (T, K, E)
+    ce = jnp.mean(jnp.sum(assign, axis=1), axis=0) / K  # fraction per expert
+    aux_loss = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # Position-in-expert via cumsum over flattened (T*K) assignments.
+    flat_e = top_i.reshape(-1)  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (T*K,)
+    keep = pos < C
+    slot = jnp.where(keep, pos, 0)
+
+    token_idx = jnp.repeat(jnp.arange(T), K)
+    xk = x[token_idx]  # (T*K, D)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[flat_e, slot].add(jnp.where(keep[:, None], xk, 0))
+
+    # Batched expert FFN on the (E, C, D) buffer.
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, params["w1"])
+    ) * jnp.einsum("ecd,edf->ecf", buf, params["w3"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["w2"])  # (E, C, D)
+
+    out_k = y[flat_e, slot] * keep[:, None]  # (T*K, D)
+    out_k = out_k * top_w.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[token_idx].add(out_k)
+    return out, aux_loss

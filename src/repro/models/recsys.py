@@ -1,0 +1,249 @@
+"""RecSys model zoo: Wide&Deep, MIND, DLRM (MLPerf), FM.
+
+Shared substrate: huge per-feature embedding tables with a sentinel zero row
+(row ``rows``) and fixed-arity EmbeddingBag lookups — ``jnp.take`` +
+reduce in XLA (``repro.kernels.embedding_bag`` is the Pallas TPU variant of
+the same op).  Tables are vocab-sharded over the "model" mesh axis at scale
+(model-parallel embeddings + data-parallel MLPs, the classic DLRM hybrid).
+
+Batch layout (all models):
+  dense  : (B, n_dense) float32                    [dlrm only]
+  sparse : (B, n_sparse, K) int32   multi-hot ids  [K = cfg.multi_hot]
+  hist   : (B, hist_len) int32                     [mind only]
+  target : (B,) int32 candidate item               [mind only]
+  label  : (B,) float32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import mlp, mlp_init, _he
+
+__all__ = [
+    "init_params", "param_specs", "forward", "recsys_loss",
+    "mind_retrieval_scores", "DLRM_CRITEO_VOCABS",
+]
+
+# MLPerf DLRM (Criteo Terabyte) per-table row counts.
+DLRM_CRITEO_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """(rows+1, D) table, (B, K) ids -> (B, D) summed rows (sentinel = rows).
+
+    mode="clip" guards against out-of-vocab ids (production ids are hashed
+    into the table range; jnp.take would otherwise fill OOB rows with NaN).
+    """
+    return jnp.sum(jnp.take(table, idx, axis=0, mode="clip"), axis=1)
+
+
+def _table_init(key, rows, dim, dtype):
+    """Rows padded to a 128-multiple: vocab-sharding requires divisibility by
+    the model axis and MXU lanes like 128-aligned leading dims.  Row ``rows``
+    is the zero sentinel; the extra pad rows are zero too."""
+    n = -(-(rows + 1) // 128) * 128
+    t = (jax.random.normal(key, (n, dim)) * (1.0 / dim ** 0.5)).astype(dtype)
+    return t.at[rows:].set(0.0)
+
+
+def _sparse_embeds(params, sparse, n_feats):
+    """-> (B, n_feats, D) stacked bag outputs."""
+    outs = [
+        embedding_bag(params[f"table_{i}"], sparse[:, i, :])
+        for i in range(n_feats)
+    ]
+    return jnp.stack(outs, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Wide & Deep (arXiv:1606.07792)
+# --------------------------------------------------------------------------
+
+
+def _wide_deep_init(cfg: RecsysConfig, key):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 2 * cfg.n_sparse + 1)
+    p = {}
+    for i, rows in enumerate(cfg.vocab_sizes):
+        p[f"table_{i}"] = _table_init(keys[2 * i], rows, cfg.embed_dim, dt)
+        p[f"wide_{i}"] = _table_init(keys[2 * i + 1], rows, 1, dt)
+    p["deep"] = mlp_init(
+        keys[-1], (cfg.n_sparse * cfg.embed_dim,) + tuple(cfg.mlp) + (1,), dt
+    )
+    return p
+
+
+def _wide_deep_fwd(params, batch, cfg):
+    sparse = batch["sparse"]
+    B = sparse.shape[0]
+    emb = _sparse_embeds(params, sparse, cfg.n_sparse)  # (B, F, D)
+    deep = mlp(params["deep"], emb.reshape(B, -1))[:, 0]
+    wide = sum(
+        embedding_bag(params[f"wide_{i}"], sparse[:, i, :])[:, 0]
+        for i in range(cfg.n_sparse)
+    )
+    return (deep + wide).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091, MLPerf config)
+# --------------------------------------------------------------------------
+
+
+def _dlrm_init(cfg: RecsysConfig, key):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_sparse + 2)
+    p = {
+        f"table_{i}": _table_init(keys[i], rows, cfg.embed_dim, dt)
+        for i, rows in enumerate(cfg.vocab_sizes)
+    }
+    p["bot"] = mlp_init(keys[-2], (cfg.n_dense,) + tuple(cfg.bot_mlp), dt)
+    n_vec = cfg.n_sparse + 1
+    n_int = n_vec * (n_vec - 1) // 2
+    p["top"] = mlp_init(
+        keys[-1], (n_int + cfg.embed_dim,) + tuple(cfg.top_mlp), dt
+    )
+    return p
+
+
+def _dlrm_fwd(params, batch, cfg):
+    dense, sparse = batch["dense"], batch["sparse"]
+    B = dense.shape[0]
+    bot = mlp(params["bot"], dense.astype(_dtype(cfg)))  # (B, D)
+    emb = _sparse_embeds(params, sparse, cfg.n_sparse)  # (B, F, D)
+    vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, F+1, D)
+    inter = jnp.einsum("bfd,bgd->bfg", vecs, vecs)  # (B, F+1, F+1)
+    n_vec = cfg.n_sparse + 1
+    iu, ju = jnp.triu_indices(n_vec, k=1)
+    flat = inter[:, iu, ju]  # (B, n_int) lower-triangle dots
+    top_in = jnp.concatenate([flat, bot], axis=-1)
+    return mlp(params["top"], top_in)[:, 0].astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# FM (Rendle, ICDM'10) — O(nk) sum-square trick
+# --------------------------------------------------------------------------
+
+
+def _fm_init(cfg: RecsysConfig, key):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 2 * cfg.n_sparse + 1)
+    p = {"bias": jnp.zeros((), jnp.float32)}
+    for i, rows in enumerate(cfg.vocab_sizes):
+        p[f"table_{i}"] = _table_init(keys[2 * i], rows, cfg.embed_dim, dt)
+        p[f"wide_{i}"] = _table_init(keys[2 * i + 1], rows, 1, dt)
+    return p
+
+
+def _fm_fwd(params, batch, cfg):
+    sparse = batch["sparse"]
+    emb = _sparse_embeds(params, sparse, cfg.n_sparse).astype(jnp.float32)
+    first = sum(
+        embedding_bag(params[f"wide_{i}"], sparse[:, i, :])[:, 0]
+        for i in range(cfg.n_sparse)
+    ).astype(jnp.float32)
+    s = jnp.sum(emb, axis=1)  # (B, D)
+    second = 0.5 * jnp.sum(s * s - jnp.sum(emb * emb, axis=1), axis=-1)
+    return params["bias"] + first + second
+
+
+# --------------------------------------------------------------------------
+# MIND (arXiv:1904.08030) — multi-interest capsule routing
+# --------------------------------------------------------------------------
+
+
+def _mind_init(cfg: RecsysConfig, key):
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_items = cfg.vocab_sizes[0]
+    return {
+        "table_0": _table_init(k1, n_items, cfg.embed_dim, dt),
+        "bilinear": _he(k2, (cfg.embed_dim, cfg.embed_dim), dt),
+        "routing_init": (jax.random.normal(
+            k3, (cfg.n_interests, cfg.hist_len)) * 0.1).astype(jnp.float32),
+    }
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, hist: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """(B, T) item ids -> (B, n_interests, D) interest capsules."""
+    table = params["table_0"]
+    pad = table.shape[0] - 1
+    e = jnp.take(table, hist, axis=0, mode="clip").astype(jnp.float32)  # (B, T, D)
+    valid = (hist != pad)[:, :, None].astype(jnp.float32)
+    u = (e @ params["bilinear"].astype(jnp.float32)) * valid  # (B, T, D)
+    b = jnp.broadcast_to(
+        params["routing_init"][None], (hist.shape[0],) + params["routing_init"].shape
+    )  # (B, K, T)
+
+    def routing_iter(b, _):
+        w = jax.nn.softmax(b, axis=1)  # over interests
+        caps = _squash(jnp.einsum("bkt,btd->bkd", w, u))  # (B, K, D)
+        b = b + jnp.einsum("bkd,btd->bkt", caps, u)
+        return b, caps
+
+    b, caps_seq = jax.lax.scan(routing_iter, b, None,
+                               length=cfg.capsule_iters, unroll=True)
+    return caps_seq[-1]  # (B, K, D)
+
+
+def _mind_fwd(params, batch, cfg):
+    caps = mind_interests(params, batch["hist"], cfg)  # (B, K, D)
+    tgt = jnp.take(params["table_0"], batch["target"], axis=0, mode="clip").astype(jnp.float32)
+    scores = jnp.einsum("bkd,bd->bk", caps, tgt)
+    return jnp.max(scores, axis=-1)  # label-aware hard attention
+
+
+def mind_retrieval_scores(params, hist, cand_ids, cfg) -> jax.Array:
+    """(B, T) history x (N,) candidates -> (B, N) max-over-interest scores."""
+    caps = mind_interests(params, hist, cfg)  # (B, K, D)
+    cand = jnp.take(params["table_0"], cand_ids, axis=0, mode="clip").astype(jnp.float32)
+    scores = jnp.einsum("bkd,nd->bkn", caps, cand)
+    return jnp.max(scores, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Dispatch
+# --------------------------------------------------------------------------
+
+_INIT = {"wide_deep": _wide_deep_init, "dlrm": _dlrm_init, "fm": _fm_init,
+         "mind": _mind_init}
+_FWD = {"wide_deep": _wide_deep_fwd, "dlrm": _dlrm_fwd, "fm": _fm_fwd,
+        "mind": _mind_fwd}
+
+
+def init_params(cfg: RecsysConfig, key: jax.Array):
+    return _INIT[cfg.model](cfg, key)
+
+
+def param_specs(cfg: RecsysConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+
+
+def forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    return _FWD[cfg.model](params, batch, cfg)
+
+
+def recsys_loss(params, batch, cfg: RecsysConfig) -> jax.Array:
+    logits = forward(params, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    # numerically-stable BCE-with-logits
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,81 @@
+"""RQ-VAE Semantic-ID tokenizer (paper §3.1, following TIGER arXiv:2305.05065).
+
+Item features are encoded to a latent, then residual-quantized across L
+level-specific codebooks; the codeword indices (y_1..y_L) are the Semantic ID.
+Training uses straight-through estimation with reconstruction + commitment
+losses; dead codes are avoided with uniform codebook init over the data range.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RQVAEConfig
+from repro.models.layers import mlp, mlp_init
+
+__all__ = ["init_params", "rqvae_loss", "encode_to_sids", "decode_from_sids"]
+
+
+def init_params(cfg: RQVAEConfig, key: jax.Array):
+    k_enc, k_dec, k_cb = jax.random.split(key, 3)
+    enc_dims = (cfg.feat_dim,) + cfg.enc_hidden + (cfg.latent_dim,)
+    dec_dims = (cfg.latent_dim,) + tuple(reversed(cfg.enc_hidden)) + (cfg.feat_dim,)
+    return {
+        "encoder": mlp_init(k_enc, enc_dims, jnp.float32),
+        "decoder": mlp_init(k_dec, dec_dims, jnp.float32),
+        "codebooks": jax.random.normal(
+            k_cb, (cfg.n_levels, cfg.codebook_size, cfg.latent_dim)
+        ) * 0.5,
+    }
+
+
+def _quantize(residual: jax.Array, codebook: jax.Array):
+    """Nearest-codeword lookup. residual (B, Z), codebook (V, Z)."""
+    d = (
+        jnp.sum(residual ** 2, -1, keepdims=True)
+        - 2.0 * residual @ codebook.T
+        + jnp.sum(codebook ** 2, -1)[None, :]
+    )
+    idx = jnp.argmin(d, axis=-1)
+    return idx, codebook[idx]
+
+
+def _residual_quantize(params, z: jax.Array, cfg: RQVAEConfig):
+    def level(carry, codebook):
+        r, q_sum = carry
+        idx, q = _quantize(r, codebook)
+        return (r - q, q_sum + q), (idx, q)
+
+    (r, q_sum), (idx, qs) = jax.lax.scan(
+        level, (z, jnp.zeros_like(z)), params["codebooks"]
+    )
+    return idx.T, q_sum, r  # (B, L), (B, Z), final residual
+
+
+def rqvae_loss(params, feats: jax.Array, cfg: RQVAEConfig):
+    z = mlp(params["encoder"], feats)
+    sids, q, _ = _residual_quantize(params, z, cfg)
+    # straight-through: decoder sees z + sg(q - z)
+    z_q = z + jax.lax.stop_gradient(q - z)
+    recon = mlp(params["decoder"], z_q)
+    recon_loss = jnp.mean((recon - feats) ** 2)
+    commit = jnp.mean((z - jax.lax.stop_gradient(q)) ** 2)
+    codebook_loss = jnp.mean((jax.lax.stop_gradient(z) - q) ** 2)
+    return recon_loss + codebook_loss + cfg.commitment_weight * commit
+
+
+def encode_to_sids(params, feats: jax.Array, cfg: RQVAEConfig) -> jax.Array:
+    """(B, F) item features -> (B, L) Semantic IDs."""
+    z = mlp(params["encoder"], feats)
+    sids, _, _ = _residual_quantize(params, z, cfg)
+    return sids.astype(jnp.int32)
+
+
+def decode_from_sids(params, sids: jax.Array, cfg: RQVAEConfig) -> jax.Array:
+    """(B, L) Semantic IDs -> reconstructed (B, F) features."""
+    q = jnp.zeros((sids.shape[0], cfg.latent_dim))
+    for lvl in range(cfg.n_levels):
+        q = q + params["codebooks"][lvl][sids[:, lvl]]
+    return mlp(params["decoder"], q)

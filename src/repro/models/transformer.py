@@ -1,0 +1,686 @@
+"""Decoder-only transformer family covering all five assigned LM archs.
+
+One implementation, configured by :class:`TransformerConfig`:
+  * GQA / MHA (+ optional QKV bias — qwen1.5 family)     — stablelm, qwen,
+    codeqwen
+  * sliding-window attention with a ring KV cache        — mixtral
+  * MLA (multi-head latent attention, DeepSeek-V2)       — deepseek-v2-lite,
+    with the *absorbed* decode path (latent-space scores; the full K/V are
+    never materialized at decode time)
+  * MoE FFNs (Mixtral 8x top-2; DeepSeek 64x top-6 + 2 shared, first layer
+    dense)
+
+Layers are stacked and driven by ``lax.scan`` (O(1) HLO size in depth) with
+``jax.checkpoint`` inside the scan body for activation remat; training CE is
+computed in sequence chunks so the (tokens, vocab) logits tensor is never
+materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.models import kvcache as kv_lib
+from repro.models.attention import chunked_causal_attention, decode_attention
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    rms_norm,
+    rms_norm_init,
+    swiglu,
+    swiglu_init,
+    _he,
+)
+from repro.models.moe import moe_ffn, moe_init
+
+__all__ = [
+    "init_params", "param_specs", "forward", "lm_loss", "prefill",
+    "decode_step", "init_cache",
+]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+
+def _attn_init(key, cfg: TransformerConfig, dtype):
+    D = cfg.d_model
+    if cfg.attention == "mla":
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        return {
+            "wq": _he(k1, (D, cfg.n_heads * qk_dim), dtype),
+            "w_kv_a": _he(k2, (D, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dtype),
+            "kv_norm": rms_norm_init(cfg.kv_lora_rank, dtype),
+            "w_kv_b": _he(
+                k3,
+                (cfg.kv_lora_rank,
+                 cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+                dtype,
+            ),
+            "wo": _he(k4, (cfg.n_heads * cfg.v_head_dim, D), dtype,
+                      fan_in=cfg.n_heads * cfg.v_head_dim),
+        }
+    hd = cfg.resolved_head_dim()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, D, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(k2, D, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(k3, D, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": {"w": _he(k4, (cfg.n_heads * hd, D), dtype, fan_in=cfg.n_heads * hd)},
+    }
+    return p
+
+
+def _layer_init(key, cfg: TransformerConfig, moe_layer: bool, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln_attn": rms_norm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "ln_ffn": rms_norm_init(cfg.d_model, dtype),
+    }
+    if moe_layer:
+        p["moe"] = moe_init(k2, cfg.d_model, cfg.moe, dtype)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.d_ff_dense:
+            d_ff = cfg.moe.d_ff_dense
+        p["ffn"] = swiglu_init(k2, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array):
+    dtype = _dtype(cfg)
+    k_emb, k_unemb, k_dense, k_moe = jax.random.split(key, 4)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_scan = cfg.n_layers - n_dense if cfg.moe else cfg.n_layers
+    if cfg.moe is None:
+        n_dense, n_scan = cfg.n_layers, 0
+
+    params = {
+        "emb": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * 0.02
+                ).astype(dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unemb"] = _he(k_unemb, (cfg.d_model, cfg.vocab_size), dtype)
+    if n_dense:
+        keys = jax.random.split(k_dense, n_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe_layer=False, dtype=dtype)
+        )(keys)
+    if n_scan:
+        keys = jax.random.split(k_moe, n_scan)
+        params["moe_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe_layer=True, dtype=dtype)
+        )(keys)
+    return params
+
+
+def param_specs(cfg: TransformerConfig):
+    """Shape/dtype pytree without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0)
+    )
+
+
+# --------------------------------------------------------------------------
+# Attention application (full-sequence path)
+# --------------------------------------------------------------------------
+
+
+def _attn_full(p, x, cfg: TransformerConfig, q_offset=0):
+    B, S, D = x.shape
+    if cfg.attention == "mla":
+        nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        H, lora, vd = cfg.n_heads, cfg.kv_lora_rank, cfg.v_head_dim
+        q = (x @ p["wq"]).reshape(B, S, H, nope + rope)
+        q_nope, q_rope = q[..., :nope], q[..., nope:]
+        kv_a = x @ p["w_kv_a"]  # (B, S, lora + rope)
+        c_kv = rms_norm(p["kv_norm"], kv_a[..., :lora])
+        k_rope = kv_a[..., lora:][:, :, None, :]  # (B, S, 1, rope)
+        pos = q_offset + jnp.arange(S)
+        q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
+        k_rope = apply_rope(k_rope, pos[None], cfg.rope_theta)
+        kv_b = (c_kv @ p["w_kv_b"]).reshape(B, S, H, nope + vd)
+        k_nope, v = kv_b[..., :nope], kv_b[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_causal_attention(
+            q, k, v, chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            window=cfg.sliding_window, q_offset=q_offset,
+            unroll=cfg.inner_unroll,
+        )
+        cache_kv = (c_kv, k_rope[:, :, 0, :])
+        return out.reshape(B, S, H * vd) @ p["wo"], cache_kv
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def proj(pp, width):
+        y = x @ pp["w"]
+        if "b" in pp:
+            y = y + pp["b"]
+        return y.reshape(B, S, width, hd)
+
+    q = proj(p["wq"], H)
+    k = proj(p["wk"], KV)
+    v = proj(p["wv"], KV)
+    pos = q_offset + jnp.arange(S)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+    out = chunked_causal_attention(
+        q, k, v, chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        window=cfg.sliding_window, q_offset=q_offset,
+        unroll=cfg.inner_unroll,
+    )
+    return out.reshape(B, S, H * hd) @ p["wo"]["w"], (k, v)
+
+
+def _layer_fwd(p, x, cfg: TransformerConfig, moe_layer: bool, q_offset=0):
+    attn_out, cache_kv = _attn_with_norm(p, x, cfg, q_offset)
+    x = x + attn_out
+    h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+    if moe_layer:
+        y, aux = moe_ffn(p["moe"], h, cfg.moe)
+        x = x + y
+        return x, cache_kv, aux
+    x = x + swiglu(p["ffn"], h)
+    return x, cache_kv, jnp.zeros((), jnp.float32)
+
+
+def _attn_with_norm(p, x, cfg, q_offset):
+    h = rms_norm(p["ln_attn"], x, cfg.norm_eps)
+    return _attn_full(p["attn"], h, cfg, q_offset)
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# --------------------------------------------------------------------------
+
+
+def _sp_constraint(x, cfg: TransformerConfig):
+    """Sequence-parallel residual-stream sharding (batch=dp, seq=model)."""
+    if not cfg.sp_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(cfg.sp_axes), "model", None)
+    )
+
+
+def forward(params, tokens: jax.Array, cfg: TransformerConfig,
+            collect_cache: bool = False):
+    """tokens (B, S) -> hidden (B, S, D) [+ per-layer cache stacks, aux loss]."""
+    x = jnp.take(params["emb"], tokens, axis=0)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def make_body(moe_layer: bool):
+        def body(x, p):
+            x = _sp_constraint(x, cfg)
+            y, cache_kv, aux = _layer_fwd(p, x, cfg, moe_layer)
+            y = _sp_constraint(y, cfg)
+            ys = cache_kv if collect_cache else None
+            return y, (ys, aux)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        return body
+
+    caches = []
+    if "dense_layers" in params:
+        x, (c, aux) = jax.lax.scan(make_body(False), x, params["dense_layers"],
+                                   unroll=cfg.layer_unroll)
+        caches.append(c)
+        aux_total = aux_total + jnp.sum(aux)
+    if "moe_layers" in params:
+        x, (c, aux) = jax.lax.scan(make_body(True), x, params["moe_layers"],
+                                   unroll=cfg.layer_unroll)
+        caches.append(c)
+        aux_total = aux_total + jnp.sum(aux)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, caches, aux_total
+
+
+def _unemb(params, cfg):
+    return params["emb"].T if cfg.tie_embeddings else params["unemb"]
+
+
+def lm_loss(params, tokens: jax.Array, cfg: TransformerConfig,
+            ce_chunk: int | None = None):
+    """Next-token CE, computed in sequence chunks (no (T, V) logits tensor).
+
+    The full sequence is forwarded (keeping S power-of-two aligned with the
+    shard grid — slicing to S-1 would break sequence sharding and MoE group
+    alignment); the final position is masked out of the loss instead.
+    """
+    x, _, aux = forward(params, tokens, cfg)
+    labels = jnp.roll(tokens, -1, axis=1)
+    B, S, D = x.shape
+    valid = (jnp.arange(S) < S - 1).astype(jnp.float32)
+    w = _unemb(params, cfg)
+    chunk = min(ce_chunk or cfg.ce_chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    vs = valid.reshape(n, 1, chunk)
+
+    @jax.checkpoint
+    def body(tot, inp):
+        xc, lc, vc = inp
+        logits = (xc @ w).astype(jnp.float32)  # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum((lse - ll) * vc), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls, vs),
+                          unroll=n if cfg.inner_unroll else 1)
+    return tot / (B * (S - 1)) + aux
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV caches
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    dtype = _dtype(cfg)
+    if cfg.attention == "mla":
+        return kv_lib.init_mla_cache(
+            cfg.n_layers, batch, max_len, cfg.kv_lora_rank,
+            cfg.qk_rope_head_dim, dtype,
+        )
+    return kv_lib.init_kv_cache(
+        cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+        cfg.resolved_head_dim(), v_dim=None, dtype=dtype,
+        window=cfg.sliding_window,
+    )
+
+
+def prefill(params, tokens: jax.Array, cfg: TransformerConfig,
+            max_len: int | None = None):
+    """Full-sequence pass that also builds the decode cache.
+
+    Returns (last_token_logits, cache).  ``max_len`` reserves extra decode
+    slots; for ring (SWA) caches only the last ``window`` positions are
+    retained regardless.
+    """
+    B, S = tokens.shape
+    max_len = max_len or S
+    x, caches, _ = forward(params, tokens, cfg, collect_cache=True)
+    logits = (x[:, -1:, :] @ _unemb(params, cfg)).astype(jnp.float32)
+
+    def pad_to(arr, n_slots):
+        pad = n_slots - arr.shape[2]
+        if pad <= 0:
+            return arr
+        cfg_pad = [(0, 0)] * arr.ndim
+        cfg_pad[2] = (0, pad)
+        return jnp.pad(arr, cfg_pad)
+
+    if cfg.attention == "mla":
+        (c_kv, k_rope) = _merge(caches)
+        slot_pos = jnp.concatenate(
+            [jnp.arange(S, dtype=jnp.int32),
+             jnp.full((max_len - S,), -1, jnp.int32)]
+        ) if max_len > S else jnp.arange(S, dtype=jnp.int32)
+        cache = kv_lib.MLACache(
+            c_kv=pad_to(c_kv, max_len), k_rope=pad_to(k_rope, max_len),
+            slot_pos=slot_pos, pos=jnp.asarray(S, jnp.int32),
+        )
+        return logits, cache
+    ks, vs = _merge(caches)
+    window = cfg.sliding_window
+    if window and window < max_len:
+        # keep last `window` positions at their ring slots (slot = pos % window)
+        keep = min(window, S)
+        positions = jnp.arange(S - keep, S)
+        slots = positions % window
+        k_ring = jnp.zeros(ks.shape[:2] + (window,) + ks.shape[3:], ks.dtype)
+        v_ring = jnp.zeros(vs.shape[:2] + (window,) + vs.shape[3:], vs.dtype)
+        k_ring = k_ring.at[:, :, slots].set(ks[:, :, S - keep:])
+        v_ring = v_ring.at[:, :, slots].set(vs[:, :, S - keep:])
+        slot_pos = jnp.full((window,), -1, jnp.int32).at[slots].set(positions)
+        cache = kv_lib.KVCache(k=k_ring, v=v_ring, slot_pos=slot_pos,
+                               pos=jnp.asarray(S, jnp.int32), ring=True)
+    else:
+        slot_pos = jnp.concatenate(
+            [jnp.arange(S, dtype=jnp.int32),
+             jnp.full((max_len - S,), -1, jnp.int32)]
+        ) if max_len > S else jnp.arange(S, dtype=jnp.int32)
+        cache = kv_lib.KVCache(
+            k=pad_to(ks, max_len), v=pad_to(vs, max_len),
+            slot_pos=slot_pos, pos=jnp.asarray(S, jnp.int32), ring=False,
+        )
+    return logits, cache
+
+
+def _merge(caches):
+    """Concatenate per-layer-group cache stacks along the layer axis."""
+    if len(caches) == 1:
+        return caches[0]
+    parts = list(zip(*caches))
+    return tuple(jnp.concatenate(p, axis=0) for p in parts)
+
+
+def _decode_attn_gqa(p, x, cfg, k_cache, v_cache, slot_pos, pos):
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def proj(pp, width):
+        y = x @ pp["w"]
+        if "b" in pp:
+            y = y + pp["b"]
+        return y.reshape(B, 1, width, hd)
+
+    q = proj(p["wq"], H)
+    k_new = proj(p["wk"], KV)
+    v_new = proj(p["wv"], KV)
+    q = apply_rope(q, pos[None, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[None, None], cfg.rope_theta)
+    if cfg.decode_split_k:
+        # replicate the tiny per-token tensors over `model`; the cache stays
+        # sequence-sharded and attention contracts shard-locally (split-K).
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(tuple(cfg.sp_axes) or None, None, None, None)
+        q = jax.lax.with_sharding_constraint(q, spec)
+        k_new = jax.lax.with_sharding_constraint(k_new, spec)
+        v_new = jax.lax.with_sharding_constraint(v_new, spec)
+    if cfg.defer_cache_write:
+        # Read-only cache + separate fresh-token score: no dynamic write into
+        # the sequence-sharded cache (which would force a full all-gather).
+        # Grouped einsum: never materialize the G-times repeated cache.
+        groups = H // KV
+        qg = q.reshape(B, 1, KV, groups, hd)
+        s_c = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qg, k_cache,
+            preferred_element_type=jnp.float32,
+        ) * hd ** -0.5  # (B, KV, G, 1, S)
+        mask = (slot_pos >= 0) & (slot_pos < pos)
+        if cfg.sliding_window is not None:
+            mask = mask & (slot_pos > pos - cfg.sliding_window)
+        s_c = jnp.where(mask[None, None, None, None, :], s_c, -1e30)
+        s_n = jnp.einsum(
+            "bqkgd,bqkd->bkgq", qg, k_new,
+            preferred_element_type=jnp.float32,
+        )[..., None] * hd ** -0.5  # (B, KV, G, 1, 1)
+        prob = jax.nn.softmax(jnp.concatenate([s_c, s_n], -1), axis=-1)
+        out_c = jnp.einsum(
+            "bkgqs,bskd->bqkgd", prob[..., :-1].astype(v_cache.dtype),
+            v_cache, preferred_element_type=jnp.float32,
+        )  # (B, 1, KV, G, hd) f32
+        p_new = prob[..., 0, -1]  # (B, KV, G)
+        out_n = p_new[:, None, :, :, None] \
+            * v_new.astype(jnp.float32)[:, :, :, None, :]
+        out = (out_c + out_n).reshape(B, 1, H, hd).astype(x.dtype)
+        return out.reshape(B, 1, H * hd) @ p["wo"]["w"], (k_new, v_new)
+    slots = k_cache.shape[1]
+    ring = cfg.sliding_window is not None and cfg.sliding_window <= slots
+    slot = jnp.where(ring, pos % slots, jnp.minimum(pos, slots - 1))
+    k_cache = kv_lib.write_slot(k_cache, k_new, slot)
+    v_cache = kv_lib.write_slot(v_cache, v_new, slot)
+    out = decode_attention(
+        q, k_cache, v_cache, slot_pos, pos, window=cfg.sliding_window
+    )
+    return out.reshape(B, 1, H * hd) @ p["wo"]["w"], (k_cache, v_cache)
+
+
+def _decode_attn_mla(p, x, cfg, c_kv_cache, k_rope_cache, slot_pos, pos):
+    """Absorbed MLA decode: scores and context stay in latent space."""
+    B = x.shape[0]
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    H, lora, vd = cfg.n_heads, cfg.kv_lora_rank, cfg.v_head_dim
+    q = (x @ p["wq"]).reshape(B, 1, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos[None, None], cfg.rope_theta)
+    kv_a = x @ p["w_kv_a"]
+    c_new = rms_norm(p["kv_norm"], kv_a[..., :lora])  # (B, 1, lora)
+    kr_new = apply_rope(kv_a[..., lora:], pos[None, None], cfg.rope_theta)
+    if not cfg.defer_cache_write:
+        slots = c_kv_cache.shape[1]
+        slot = jnp.minimum(pos, slots - 1)
+        c_kv_cache = kv_lib.write_slot(c_kv_cache, c_new, slot)
+        k_rope_cache = kv_lib.write_slot(k_rope_cache, kr_new, slot)
+
+    w_kv_b = p["w_kv_b"].reshape(lora, H, nope + vd)
+    w_uk, w_uv = w_kv_b[..., :nope], w_kv_b[..., nope:]
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)  # (B,1,H,lora)
+    s = (
+        jnp.einsum("bqhl,bsl->bhqs", q_lat.astype(jnp.float32),
+                   c_kv_cache.astype(jnp.float32))
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                     k_rope_cache.astype(jnp.float32))
+    ) * ((nope + rope) ** -0.5)
+    mask = (slot_pos >= 0) & (
+        (slot_pos < pos) if cfg.defer_cache_write else (slot_pos <= pos)
+    )
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    if cfg.defer_cache_write:
+        # separate fresh-token score/context term (read-only cache)
+        s_n = (
+            jnp.einsum("bqhl,bql->bhq", q_lat.astype(jnp.float32),
+                       c_new.astype(jnp.float32))
+            + jnp.einsum("bqhr,bqr->bhq", q_rope.astype(jnp.float32),
+                         kr_new.astype(jnp.float32))
+        )[..., None] * ((nope + rope) ** -0.5)
+        probs = jax.nn.softmax(jnp.concatenate([s, s_n], -1), axis=-1)
+        ctx = jnp.einsum("bhqs,bsl->bqhl", probs[..., :-1],
+                         c_kv_cache.astype(jnp.float32))
+        ctx = ctx + probs[:, :, 0, -1][:, None, :, None] \
+            * c_new.astype(jnp.float32)[:, :, None, :]
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx.astype(x.dtype), w_uv)
+        return out.reshape(B, 1, H * vd) @ p["wo"], (c_new, kr_new)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", probs, c_kv_cache.astype(jnp.float32))
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx.astype(x.dtype), w_uv)
+    return out.reshape(B, 1, H * vd) @ p["wo"], (c_kv_cache, k_rope_cache)
+
+
+def gr_decode_step(
+    params,
+    hist_k: jax.Array,  # (L, B, S_h, KV, Dh) shared user-history cache
+    hist_v: jax.Array,
+    beam_k: jax.Array,  # (L, B*M, S_sid, KV, Dh) per-beam SID cache
+    beam_v: jax.Array,
+    tokens: jax.Array,  # (B*M, 1)
+    sid_step: jax.Array,  # () current SID decode step (0..L_sid-1)
+    cfg: TransformerConfig,
+):
+    """Prefix-shared generative-retrieval decode (beyond-paper serving opt).
+
+    The user-history KV is computed once per request and *shared* across all
+    M beams; only the short per-beam SID suffix is beam-private.  Attention
+    runs over the concatenation [history | suffix] with a single softmax.
+    Cuts GR decode KV memory by ~M/(1 + L_sid/S_h) (~64x at M=70, S_h=256).
+    """
+    BM = tokens.shape[0]
+    B = hist_k.shape[1]
+    M = BM // B
+    x = jnp.take(params["emb"], tokens, axis=0)  # (BM, 1, D)
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    groups = H // KV
+    s_hist = hist_k.shape[2]
+    s_sid = beam_k.shape[3] if cfg.gr_batched_beams else beam_k.shape[2]
+    pos = s_hist + sid_step
+
+    def body(x, inp):
+        p, hk, hv, bk, bv = inp
+        a = p["attn"]
+        h = rms_norm(p["ln_attn"], x, cfg.norm_eps)
+
+        def proj(pp, width):
+            y = h @ pp["w"]
+            if "b" in pp:
+                y = y + pp["b"]
+            return y.reshape(BM, 1, width, hd)
+
+        q = apply_rope(proj(a["wq"], H), pos[None, None], cfg.rope_theta)
+        k_new = apply_rope(proj(a["wk"], KV), pos[None, None], cfg.rope_theta)
+        v_new = proj(a["wv"], KV)
+        slot = jnp.minimum(sid_step, s_sid - 1)
+        if cfg.gr_batched_beams:
+            # bk/bv: (B, M, S_sid, KV, hd) — slot write along axis 2
+            bk = jax.lax.dynamic_update_slice_in_dim(
+                bk, k_new.reshape(B, M, 1, KV, hd).astype(bk.dtype), slot, 2)
+            bv = jax.lax.dynamic_update_slice_in_dim(
+                bv, v_new.reshape(B, M, 1, KV, hd).astype(bv.dtype), slot, 2)
+        else:
+            bk = kv_lib.write_slot(bk, k_new, slot)
+            bv = kv_lib.write_slot(bv, v_new, slot)
+
+        def rep(t, axis=2):
+            return jnp.repeat(t, groups, axis=axis) if groups > 1 else t
+
+        # scores over shared history (broadcast across beams) + own suffix
+        qb = q.reshape(B, M, H, hd)
+        s1 = jnp.einsum(
+            "bmhd,bkhd->bmhk", qb, rep(hk), preferred_element_type=jnp.float32
+        ) * hd ** -0.5  # (B, M, H, S_h)
+        if cfg.gr_batched_beams:
+            s2 = jnp.einsum(
+                "bmhd,bmshd->bmhs", qb, rep(bk, axis=3),
+                preferred_element_type=jnp.float32,
+            ) * hd ** -0.5
+        else:
+            s2 = jnp.einsum(
+                "nqhd,nkhd->nhqk", q, rep(bk), preferred_element_type=jnp.float32
+            )[:, :, 0, :].reshape(B, M, H, s_sid) * hd ** -0.5
+        sid_mask = jnp.arange(s_sid) <= sid_step
+        s2 = jnp.where(sid_mask[None, None, None, :], s2, -1e30)
+        s = jnp.concatenate([s1, s2], axis=-1)
+        prob = jax.nn.softmax(s, axis=-1)
+        p1, p2 = prob[..., :s_hist], prob[..., s_hist:]
+        o1 = jnp.einsum("bmhk,bkhd->bmhd", p1.astype(hv.dtype), rep(hv),
+                        preferred_element_type=jnp.float32)
+        if cfg.gr_batched_beams:
+            o2 = jnp.einsum(
+                "bmhs,bmshd->bmhd", p2.astype(bv.dtype), rep(bv, axis=3),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            o2 = jnp.einsum(
+                "nhk,nkhd->nhd",
+                p2.reshape(BM, H, s_sid).astype(bv.dtype), rep(bv),
+                preferred_element_type=jnp.float32,
+            ).reshape(B, M, H, hd)
+        out = (o1 + o2).reshape(BM, 1, H * hd).astype(x.dtype)
+        x = x + out @ a["wo"]["w"]
+        hh = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_ffn(p["moe"], hh, cfg.moe)
+            x = x + y
+        else:
+            x = x + swiglu(p["ffn"], hh)
+        return x, (bk, bv)
+
+    x, (new_bk, new_bv) = jax.lax.scan(
+        body, x, (params["dense_layers"], hist_k, hist_v, beam_k, beam_v),
+        unroll=cfg.layer_unroll,
+    )
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ _unemb(params, cfg)).astype(jnp.float32)  # (BM, 1, V)
+    return logits, new_bk, new_bv
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: TransformerConfig):
+    """One autoregressive step. tokens (B, 1) -> (logits (B,1,V), new cache)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["emb"], tokens, axis=0)  # (B, 1, D)
+    pos = cache.pos
+    mla = cfg.attention == "mla"
+    if mla:
+        slots = cache.c_kv.shape[2]
+        ring = False
+    else:
+        slots = cache.k.shape[2]
+        ring = cache.ring
+    write_slot = jnp.where(ring, pos % slots, jnp.minimum(pos, slots - 1)) \
+        if not mla else jnp.minimum(pos, slots - 1)
+    slot_pos = cache.slot_pos.at[write_slot].set(pos)
+
+    def body(x, inp):
+        if mla:
+            p, ck, kr = inp
+            h = rms_norm(p["ln_attn"], x, cfg.norm_eps)
+            attn_out, (ck, kr) = _decode_attn_mla(
+                p["attn"], h, cfg, ck, kr, slot_pos, pos
+            )
+            new_cache = (ck, kr)
+        else:
+            p, kc, vc = inp
+            h = rms_norm(p["ln_attn"], x, cfg.norm_eps)
+            attn_out, (kc, vc) = _decode_attn_gqa(
+                p["attn"], h, cfg, kc, vc, slot_pos, pos
+            )
+            new_cache = (kc, vc)
+        x = x + attn_out
+        h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_ffn(p["moe"], h, cfg.moe)
+            x = x + y
+        else:
+            x = x + swiglu(p["ffn"], h)
+        return x, new_cache
+
+    n_dense = (cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers)
+    if cfg.moe is None:
+        n_dense = cfg.n_layers
+    arrays = (cache.c_kv, cache.k_rope) if mla else (cache.k, cache.v)
+    new_arrays = []
+    x_cur = x
+    offset = 0
+    for group, count in (("dense_layers", n_dense),
+                         ("moe_layers", cfg.n_layers - n_dense)):
+        if count == 0 or group not in params:
+            continue
+        sl = tuple(a[offset:offset + count] for a in arrays)
+        x_cur, outs = jax.lax.scan(body, x_cur, (params[group],) + sl,
+                                   unroll=cfg.layer_unroll)
+        new_arrays.append(outs)
+        offset += count
+    merged = tuple(
+        jnp.concatenate([g[i] for g in new_arrays], axis=0)
+        for i in range(2)
+    )
+    x_cur = rms_norm(params["final_norm"], x_cur, cfg.norm_eps)
+    logits = (x_cur @ _unemb(params, cfg)).astype(jnp.float32)
+    if cfg.defer_cache_write:
+        # caches untouched; pending per-layer k/v stacks returned for the
+        # serving layer to commit at block granularity.
+        if mla:
+            new_cache = kv_lib.MLACache(
+                c_kv=cache.c_kv, k_rope=cache.k_rope,
+                slot_pos=slot_pos, pos=pos + 1,
+            )
+        else:
+            new_cache = kv_lib.KVCache(
+                k=cache.k, v=cache.v, slot_pos=slot_pos, pos=pos + 1,
+                ring=ring,
+            )
+        return logits, new_cache, merged
+    if mla:
+        new_cache = kv_lib.MLACache(
+            c_kv=merged[0], k_rope=merged[1], slot_pos=slot_pos, pos=pos + 1
+        )
+    else:
+        new_cache = kv_lib.KVCache(
+            k=merged[0], v=merged[1], slot_pos=slot_pos, pos=pos + 1,
+            ring=ring,
+        )
+    return logits, new_cache

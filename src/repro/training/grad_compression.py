@@ -1,0 +1,52 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+At 1000+-node scale the data-parallel gradient all-reduce dominates step
+time for small models; 4x wire compression (f32 -> int8 + per-tensor scale)
+with error feedback (Seide et al. 2014; 1-bit SGD lineage) keeps convergence
+while quartering the traffic.
+
+``compress``/``decompress`` are the wire codec; ``apply_error_feedback``
+wraps a gradient pytree: the quantization residual is carried in a state
+pytree and added back before the next round, so the *accumulated* error stays
+bounded.  In multi-host deployment the codec brackets the psum inside
+shard_map; in this single-process simulation it brackets the grad exchange
+point (after value_and_grad, before the optimizer), which is bit-identical
+behaviour for the optimizer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "decompress", "init_error_state", "apply_error_feedback"]
+
+
+def compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """f32 tensor -> (int8 tensor, f32 scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def apply_error_feedback(grads, error_state):
+    """Returns (decompressed grads as seen post-all-reduce, new error state)."""
+
+    def per_leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = compress(g32)
+        deq = decompress(q, s)
+        return deq, g32 - deq
+
+    out = jax.tree.map(per_leaf, grads, error_state)
+    new_g = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

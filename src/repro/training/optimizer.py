@@ -1,0 +1,145 @@
+"""Optimizers in pure JAX (no optax): AdamW, Adafactor, SGD-momentum.
+
+Each optimizer is a pair of pure functions:
+  init(params)            -> state pytree
+  update(grads, state, params, step) -> (new_params, new_state)
+
+Conventions: params may be bf16; optimizer state is kept in f32 (the usual
+mixed-precision training recipe); the update is computed in f32 and cast back
+to the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd_momentum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    name: str = "opt"
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def adamw(
+    lr: float = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float | None = 1.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            step_ = lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return _cast_like(p.astype(jnp.float32) - step_, p), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr: float = 1e-3, eps: float = 1e-30, decay: float = 0.8,
+              grad_clip: float | None = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (memory-light: O(n+m) per matrix)."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(per_leaf, params)
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None]
+                u = g * jax.lax.rsqrt(rfac * vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            return _cast_like(p.astype(jnp.float32) - lr * u, p), new_s
+
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, params, grads, state, is_leaf=None)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_s
+
+    return Optimizer(init, update, "adafactor")
+
+
+def sgd_momentum(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        del step
+
+        def upd(p, g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return _cast_like(p.astype(jnp.float32) - lr * m, p), m
+
+        out = jax.tree.map(upd, params, grads, state)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_m
+
+    return Optimizer(init, update, "sgd")
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))

@@ -1,0 +1,105 @@
+"""Baseline equivalence: PPV-exact and CPU-trie must agree with STATIC;
+bitmap may only add false positives; PPV-approx only removes mass outside
+its top-k."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NEG_INF, TransitionMatrix, constrain_log_probs
+from repro.core.baselines import (
+    CpuTrieBaseline,
+    HashBitmapBaseline,
+    PPVBaseline,
+    unconstrained_mask,
+)
+from conftest import make_sids
+
+
+def _static_mask(tm, sids, lp, prefixes, step):
+    nb = prefixes.shape[0]
+    nodes = jnp.ones((nb,), jnp.int32)
+    for t in range(step):
+        zeros = jnp.zeros_like(lp)
+        _, nxt = constrain_log_probs(zeros, nodes, tm, t)
+        nodes = nxt[jnp.arange(nb), prefixes[:, t]]
+    masked, _ = constrain_log_probs(lp, nodes, tm, step)
+    return masked
+
+
+@pytest.mark.parametrize("vocab,length,n", [(16, 4, 200), (32, 5, 500)])
+def test_ppv_exact_equals_static(rng, vocab, length, n):
+    sids = make_sids(rng, n, vocab, length, clustered=True)
+    tm = TransitionMatrix.from_sids(sids, vocab)
+    ppv = PPVBaseline(sids, vocab, exact=True)
+    nb = 12
+    prefixes = np.concatenate(
+        [sids[rng.integers(0, n, nb // 2)], make_sids(rng, nb // 2, vocab, length)]
+    ).astype(np.int32)
+    for step in range(length):
+        lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+        a = _static_mask(tm, sids, lp, jnp.asarray(prefixes), step)
+        b = ppv.mask(lp, jnp.asarray(prefixes[:, :max(step, 1)]), step)
+        np.testing.assert_array_equal(
+            np.asarray(a) > NEG_INF / 2, np.asarray(b) > NEG_INF / 2
+        )
+
+
+def test_cpu_trie_equals_static(rng):
+    vocab, length, n = 16, 4, 150
+    sids = make_sids(rng, n, vocab, length, clustered=True)
+    tm = TransitionMatrix.from_sids(sids, vocab)
+    cpu = CpuTrieBaseline(sids, vocab)
+    nb = 10
+    prefixes = np.concatenate(
+        [sids[rng.integers(0, n, nb // 2)], make_sids(rng, nb // 2, vocab, length)]
+    ).astype(np.int32)
+    for step in range(length):
+        lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+        a = _static_mask(tm, sids, lp, jnp.asarray(prefixes), step)
+        b = cpu.mask(lp, jnp.asarray(prefixes[:, :max(step, 1)]), step)
+        np.testing.assert_array_equal(
+            np.asarray(a) > NEG_INF / 2, np.asarray(b) > NEG_INF / 2
+        )
+
+
+def test_ppv_approx_subset_of_exact(rng):
+    vocab, length, n = 32, 4, 400
+    sids = make_sids(rng, n, vocab, length)
+    exact = PPVBaseline(sids, vocab, exact=True)
+    approx = PPVBaseline(sids, vocab, exact=False, top_k=8)
+    nb = 8
+    prefixes = jnp.asarray(sids[rng.integers(0, n, nb), :].astype(np.int32))
+    for step in range(length):
+        lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+        a = np.asarray(exact.mask(lp, prefixes, step)) > NEG_INF / 2
+        b = np.asarray(approx.mask(lp, prefixes, step)) > NEG_INF / 2
+        assert np.all(~b | a)  # approx-valid => exact-valid
+
+
+def test_bitmap_superset_no_false_negatives(rng):
+    vocab, length, n = 16, 4, 300
+    sids = make_sids(rng, n, vocab, length)
+    tm = TransitionMatrix.from_sids(sids, vocab)
+    bmp = HashBitmapBaseline(sids, vocab, log2_bits=20)
+    nb = 10
+    prefixes = jnp.asarray(sids[rng.integers(0, n, nb), :].astype(np.int32))
+    for step in range(length):
+        lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+        a = np.asarray(_static_mask(tm, sids, lp, prefixes, step)) > NEG_INF / 2
+        b = np.asarray(bmp.mask(lp, prefixes, step)) > NEG_INF / 2
+        assert np.all(~a | b)  # truly-valid => bitmap-valid (no false negatives)
+
+
+def test_bitmap_fp_rate_small_bitmap(rng):
+    vocab, length, n = 16, 4, 500
+    sids = make_sids(rng, n, vocab, length)
+    bmp = HashBitmapBaseline(sids, vocab, log2_bits=12)  # deliberately tight
+    fpr = bmp.false_positive_rate(sids, n_probe=4000)
+    assert 0.0 < fpr < 0.9  # nonzero false positives with a tight table
+
+
+def test_unconstrained_identity(rng):
+    lp = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    out = unconstrained_mask(lp, None, 0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(lp))

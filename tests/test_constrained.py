@@ -1,0 +1,130 @@
+"""Algorithm 1/2 correctness: constrained masking vs brute-force oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NEG_INF, TransitionMatrix, constrain_log_probs
+from repro.core.constrained import constrained_decoding_step
+from conftest import make_sids
+
+
+def oracle_mask(sids, prefixes, step, vocab):
+    """valid[i, v] == (prefixes[i,:step] + [v]) is a prefix of some SID."""
+    nb = prefixes.shape[0]
+    out = np.zeros((nb, vocab), bool)
+    pset = {tuple(r[: step + 1]) for r in sids}
+    for i in range(nb):
+        base = tuple(int(x) for x in prefixes[i, :step])
+        for v in range(vocab):
+            if base + (v,) in pset:
+                out[i, v] = True
+    return out
+
+
+def walk_nodes(tm, sids_np, prefixes, step):
+    """Drive constrain_log_probs step-by-step to obtain the node vector."""
+    nb = prefixes.shape[0]
+    nodes = jnp.ones((nb,), jnp.int32)
+    vocab = tm.vocab_size
+    for t in range(step):
+        lp = jnp.zeros((nb, vocab), jnp.float32)
+        _, nxt = constrain_log_probs(lp, nodes, tm, t)
+        nodes = nxt[jnp.arange(nb), prefixes[:, t]]
+    return nodes
+
+
+@pytest.mark.parametrize("dense_d", [0, 1, 2])
+@pytest.mark.parametrize("vocab,length,n", [(8, 3, 40), (16, 4, 300)])
+def test_masking_matches_oracle(rng, dense_d, vocab, length, n):
+    sids = make_sids(rng, n, vocab, length, clustered=True)
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=dense_d)
+    nb = 24
+    for step in range(length):
+        # half the prefixes valid, half random (likely invalid)
+        valid_rows = sids[rng.integers(0, sids.shape[0], nb // 2)][:, :length]
+        rand_rows = make_sids(rng, nb - nb // 2, vocab, length)
+        prefixes = np.concatenate([valid_rows, rand_rows], axis=0)
+        nodes = walk_nodes(tm, sids, jnp.asarray(prefixes.astype(np.int32)), step)
+        lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+        masked, nxt = constrain_log_probs(lp, nodes, tm, step)
+        want = oracle_mask(sids, prefixes, step, vocab)
+        got = np.asarray(masked) > NEG_INF / 2
+        assert np.array_equal(got, want), f"step={step} dense_d={dense_d}"
+        # surviving entries keep their log-prob unchanged
+        np.testing.assert_allclose(
+            np.asarray(masked)[want], np.asarray(lp)[want], rtol=1e-6
+        )
+        # next state is sink exactly where invalid
+        nxt = np.asarray(nxt)
+        assert np.all((nxt > 0) == want)
+
+
+def test_next_states_consistent_across_dense_paths(rng):
+    """dense_d 0/1/2 must yield identical masks at every step."""
+    vocab, length = 16, 4
+    sids = make_sids(rng, 120, vocab, length, clustered=True)
+    tms = [TransitionMatrix.from_sids(sids, vocab, dense_d=d) for d in (0, 1, 2)]
+    nb = 16
+    prefixes = sids[rng.integers(0, sids.shape[0], nb)].astype(np.int32)
+    for step in range(length):
+        lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+        outs = []
+        for tm in tms:
+            nodes = walk_nodes(tm, sids, jnp.asarray(prefixes), step)
+            masked, _ = constrain_log_probs(lp, nodes, tm, step)
+            outs.append(np.asarray(masked))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_full_decoding_step_normalizes(rng):
+    vocab, length = 16, 4
+    sids = make_sids(rng, 50, vocab, length)
+    tm = TransitionMatrix.from_sids(sids, vocab)
+    logits = jnp.asarray(rng.normal(size=(4, 5, vocab)).astype(np.float32))
+    nodes = jnp.ones((4, 5), jnp.int32)
+    lp, nxt = constrained_decoding_step(logits, nodes, tm, step=0)
+    # masked entries are NEG_INF; valid entries are proper log-probs
+    valid = np.asarray(lp) > NEG_INF / 2
+    ref = jax.nn.log_softmax(logits, axis=-1)
+    np.testing.assert_allclose(
+        np.asarray(lp)[valid], np.asarray(ref)[valid], rtol=1e-5
+    )
+    assert nxt.shape == logits.shape
+
+
+def test_unconstrained_passthrough(rng):
+    logits = jnp.asarray(rng.normal(size=(2, 3, 8)).astype(np.float32))
+    nodes = jnp.ones((2, 3), jnp.int32)
+    lp, _ = constrained_decoding_step(logits, nodes, None, step=0)
+    np.testing.assert_allclose(
+        np.asarray(lp), np.asarray(jax.nn.log_softmax(logits, -1)), rtol=1e-6
+    )
+
+
+def test_sink_state_masks_everything(rng):
+    vocab = 8
+    sids = make_sids(rng, 20, vocab, 3)
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=0)
+    lp = jnp.zeros((3, vocab), jnp.float32)
+    nodes = jnp.zeros((3,), jnp.int32)  # SINK
+    masked, nxt = constrain_log_probs(lp, nodes, tm, step=2)
+    assert np.all(np.asarray(masked) <= NEG_INF / 2)
+    assert np.all(np.asarray(nxt) == 0)
+
+
+def test_save_load_roundtrip(tmp_path, rng):
+    sids = make_sids(rng, 100, 16, 4)
+    tm = TransitionMatrix.from_sids(sids, 16)
+    path = str(tmp_path / "tm.npz")
+    tm.save(path)
+    tm2 = TransitionMatrix.load(path)
+    assert tm2.level_bmax == tm.level_bmax
+    assert tm2.n_states == tm.n_states
+    np.testing.assert_array_equal(np.asarray(tm.edges), np.asarray(tm2.edges))
+    lp = jnp.zeros((2, 16), jnp.float32)
+    nodes = jnp.ones((2,), jnp.int32)
+    a, _ = constrain_log_probs(lp, nodes, tm, 0)
+    b, _ = constrain_log_probs(lp, nodes, tm2, 0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

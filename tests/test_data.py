@@ -1,0 +1,98 @@
+"""Data pipeline: deterministic loader, cold-start protocol, graph sampler."""
+import numpy as np
+import pytest
+
+from repro.data.amazon import make_cold_start_dataset
+from repro.data.graph_sampler import CSRGraph, fanout_sample, random_graph
+from repro.data.loader import ShardedBatcher
+from repro.data.synthetic import make_item_corpus, make_user_sequences
+
+
+def test_loader_deterministic_and_disjoint():
+    data = {"x": np.arange(1000)}
+    a = ShardedBatcher(data, 100, seed=7)
+    b = ShardedBatcher(data, 100, seed=7)
+    for _ in range(15):  # crosses an epoch boundary
+        np.testing.assert_array_equal(next(a)["x"], next(b)["x"])
+    # host shards partition the global batch
+    h0 = ShardedBatcher(data, 100, seed=7, n_hosts=4, host_id=0)
+    h1 = ShardedBatcher(data, 100, seed=7, n_hosts=4, host_id=1)
+    x0, x1 = next(h0)["x"], next(h1)["x"]
+    assert x0.shape == (25,) and not set(x0) & set(x1)
+
+
+def test_loader_state_resume():
+    data = {"x": np.arange(512)}
+    a = ShardedBatcher(data, 64, seed=1)
+    for _ in range(11):
+        next(a)
+    st = a.state()
+    want = [next(a)["x"] for _ in range(5)]
+    b = ShardedBatcher(data, 64, seed=1)
+    b.restore(st)
+    got = [next(b)["x"] for _ in range(5)]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_epoch_reshuffles():
+    data = {"x": np.arange(128)}
+    a = ShardedBatcher(data, 128, seed=0)
+    e0 = next(a)["x"]
+    e1 = next(a)["x"]
+    assert not np.array_equal(e0, e1)
+    assert set(e0) == set(e1) == set(range(128))
+
+
+def test_cold_start_protocol():
+    d = make_cold_start_dataset(seed=0, n_items=1000, cold_frac=0.05)
+    cold = set(d.cold_items.tolist())
+    assert len(cold) == 50
+    # train sequences contain NO cold item anywhere
+    assert not np.isin(d.train_seqs, d.cold_items).any()
+    # every test target is cold
+    assert np.isin(d.test_seqs[:, -1], d.cold_items).all()
+    # cold items are the newest
+    assert d.item_age[d.cold_items].min() > np.median(d.item_age)
+
+
+def test_synthetic_sequences_cluster_sticky():
+    rng = np.random.default_rng(0)
+    feats, cid = make_item_corpus(rng, 500, 10, 16)
+    seqs = make_user_sequences(rng, 200, 20, cid, stay_prob=0.9)
+    trans = cid[seqs]
+    same = (trans[:, 1:] == trans[:, :-1]).mean()
+    assert same > 0.6  # sticky
+
+
+def test_fanout_sampler_shapes_and_validity():
+    rng = np.random.default_rng(0)
+    g = random_graph(rng, 500, avg_degree=8, feat_dim=12)
+    seeds = rng.choice(500, 32, replace=False)
+    out = fanout_sample(g, seeds, (5, 3), rng)
+    n_exp = 32 * (1 + 5 + 15)
+    e_exp = 32 * (5 + 15)
+    assert out["node_feats"].shape == (n_exp, 12)
+    assert out["senders"].shape == (e_exp,)
+    # every real edge points from a sampled node to its parent
+    em = out["edge_mask"]
+    assert em.sum() > 0
+    assert (out["senders"][em] < n_exp).all()
+    assert (out["receivers"][em] < n_exp).all()
+    assert out["node_mask"][out["receivers"][em]].all()
+    assert out["node_mask"][out["senders"][em]].all()
+    # hop-1 receivers are seeds
+    hop1 = out["receivers"][: 32 * 5][out["edge_mask"][: 32 * 5]]
+    assert (hop1 < 32).all()
+
+
+def test_fanout_sampler_handles_low_degree():
+    # graph where some nodes have degree < fanout
+    indptr = np.array([0, 1, 1, 3])
+    indices = np.array([1, 0, 2])
+    g = CSRGraph(indptr, indices, np.ones((3, 4), np.float32))
+    rng = np.random.default_rng(0)
+    out = fanout_sample(g, np.array([0, 1, 2]), (4,), rng)
+    assert out["node_mask"].shape == (3 * 5,)
+    # node 1 has no neighbors -> no extra sampled nodes from it
+    assert out["edge_mask"].sum() <= 3 * 4

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TransitionMatrix
+from repro.core.vntk import NEG_INF
+from repro.kernels import ops, ref
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.vntk import vntk_fused_logsoftmax_pallas, vntk_pallas
+from conftest import make_sids
+
+
+def _random_csr(rng, n_states, vocab, bmax_true):
+    """Random CSR with rows of 0..bmax_true children, unique sorted tokens."""
+    counts = rng.integers(0, bmax_true + 1, n_states)
+    counts[0] = 0  # sink
+    rowptr = np.zeros(n_states + 1, np.int64)
+    rowptr[1:] = np.cumsum(counts)
+    E = int(rowptr[-1])
+    cols = np.empty(E, np.int64)
+    vals = np.empty(E, np.int64)
+    for s in range(n_states):
+        lo, hi = rowptr[s], rowptr[s + 1]
+        c = np.sort(rng.choice(vocab, size=hi - lo, replace=False))
+        cols[lo:hi] = c
+        vals[lo:hi] = rng.integers(1, n_states, size=hi - lo)
+    pad = 256
+    edges = np.zeros((E + pad, 2), np.int32)
+    edges[:E, 0] = cols
+    edges[:E, 1] = vals
+    return rowptr.astype(np.int32), edges
+
+
+@pytest.mark.parametrize("vocab", [128, 256, 2048])
+@pytest.mark.parametrize("nb", [1, 7, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vntk_kernel_sweep(rng, vocab, nb, dtype):
+    n_states = 64
+    bmax = 24
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    lp = jnp.asarray(rng.normal(size=(nb, vocab)), dtype=dtype)
+    got_lp, got_nx = vntk_pallas(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        interpret=True,
+    )
+    want_lp, want_nx = ref.vntk_ref(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_lp, np.float32), np.asarray(want_lp, np.float32), rtol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(got_nx), np.asarray(want_nx))
+
+
+@pytest.mark.parametrize("bmax", [1, 8, 33, 128])
+def test_vntk_kernel_branch_factor_sweep(rng, bmax):
+    vocab, n_states, nb = 512, 40, 8
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+    got_lp, got_nx = vntk_pallas(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        interpret=True,
+    )
+    want_lp, want_nx = ref.vntk_ref(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab
+    )
+    np.testing.assert_allclose(np.asarray(got_lp), np.asarray(want_lp), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_nx), np.asarray(want_nx))
+
+
+def test_vntk_kernel_on_real_trie(rng):
+    """End-to-end: kernel output == XLA path on a built TransitionMatrix."""
+    vocab, length = 64, 5
+    sids = make_sids(rng, 800, vocab, length, clustered=True)
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=2)
+    nb = 12
+    step = 2  # first sparse step
+    # nodes for step 2: l1_states of valid 2-prefixes
+    pref = sids[rng.integers(0, sids.shape[0], nb)]
+    nodes = jnp.asarray(
+        np.asarray(tm.l1_states)[pref[:, 0], pref[:, 1]].astype(np.int32)
+    )
+    lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+    bmax = tm.bmax_for_step(step)
+    got_lp, got_nx = vntk_pallas(
+        lp, nodes, tm.row_pointers, tm.edges, bmax, vocab, interpret=True
+    )
+    want_lp, want_nx = ref.vntk_ref(
+        lp, nodes, tm.row_pointers, tm.edges, bmax, vocab
+    )
+    np.testing.assert_allclose(np.asarray(got_lp), np.asarray(want_lp), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_nx), np.asarray(want_nx))
+
+
+@pytest.mark.parametrize("vocab", [128, 1024])
+def test_fused_logsoftmax_kernel(rng, vocab):
+    n_states, nb, bmax = 32, 8, 16
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    logits = jnp.asarray((rng.normal(size=(nb, vocab)) * 4).astype(np.float32))
+    got_lp, got_nx = vntk_fused_logsoftmax_pallas(
+        logits, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        interpret=True,
+    )
+    want_lp, want_nx = ref.vntk_fused_logsoftmax_ref(
+        logits, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_lp), np.asarray(want_lp), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(got_nx), np.asarray(want_nx))
+
+
+@pytest.mark.parametrize("B,K,D", [(8, 1, 32), (16, 4, 128), (5, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_sweep(rng, B, K, D, dtype, mode):
+    R = 200
+    table = jnp.asarray(rng.normal(size=(R + 1, D)), dtype=dtype)
+    table = table.at[R].set(0.0)  # sentinel pad row
+    idx = jnp.asarray(rng.integers(0, R + 1, size=(B, K)).astype(np.int32))
+    got = embedding_bag_pallas(table, idx, mode=mode, interpret=True)
+    want = ref.embedding_bag_ref(table, idx, mode=mode)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-6,
+    )
+
+
+def test_ops_dispatch_agrees(rng):
+    """ops.vntk xla vs pallas paths agree (jit boundary included)."""
+    vocab, n_states, nb, bmax = 256, 32, 8, 12
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+    a_lp, a_nx = ops.vntk(lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges),
+                          bmax, vocab, impl="xla")
+    b_lp, b_nx = ops.vntk(lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges),
+                          bmax, vocab, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a_lp), np.asarray(b_lp), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a_nx), np.asarray(b_nx))

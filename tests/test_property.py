@@ -1,0 +1,103 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import NEG_INF, TransitionMatrix, constrain_log_probs
+from repro.core.baselines import PPVBaseline
+from repro.core.memory_model import measure, u_max
+from repro.core.trie import build_flat_trie, pack_bits, unpack_bits_word
+
+
+@st.composite
+def sid_sets(draw):
+    vocab = draw(st.sampled_from([4, 8, 16]))
+    length = draw(st.integers(2, 5))
+    n = draw(st.integers(1, 60))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    sids = rng.integers(0, vocab, size=(n, length))
+    return vocab, length, np.unique(sids, axis=0), seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(sid_sets())
+def test_every_constraint_walkable_and_nothing_else(case):
+    """Invariant: the trie accepts exactly the constraint set.
+
+    Walking any SID in C reaches a leaf; walking any SID not in C dies at
+    some level (mask False)."""
+    vocab, length, sids, seed = case
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=min(2, length - 1))
+    rng = np.random.default_rng(seed + 1)
+    probes = np.concatenate(
+        [sids, rng.integers(0, vocab, size=(20, length))], axis=0
+    )
+    in_c = np.array([tuple(r) in {tuple(s) for s in sids} for r in probes])
+    nodes = jnp.ones((probes.shape[0],), jnp.int32)
+    alive = np.ones(probes.shape[0], bool)
+    for t in range(length):
+        lp = jnp.zeros((probes.shape[0], vocab), jnp.float32)
+        masked, nxt = constrain_log_probs(lp, nodes, tm, t)
+        ok = np.asarray(masked)[np.arange(probes.shape[0]), probes[:, t]] > NEG_INF / 2
+        alive &= ok
+        nodes = jnp.asarray(nxt)[np.arange(probes.shape[0]), probes[:, t]]
+    np.testing.assert_array_equal(alive, in_c)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sid_sets())
+def test_ppv_exact_agrees_with_static(case):
+    vocab, length, sids, seed = case
+    tm = TransitionMatrix.from_sids(sids, vocab)
+    ppv = PPVBaseline(sids, vocab, exact=True)
+    rng = np.random.default_rng(seed + 2)
+    nb = 6
+    probes = np.concatenate(
+        [sids[rng.integers(0, sids.shape[0], nb // 2)],
+         rng.integers(0, vocab, size=(nb - nb // 2, length))], axis=0
+    ).astype(np.int32)
+    nodes = jnp.ones((nb,), jnp.int32)
+    for t in range(length):
+        lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+        a, nxt = constrain_log_probs(lp, nodes, tm, t)
+        b = ppv.mask(lp, jnp.asarray(probes[:, : max(t, 1)]), t)
+        np.testing.assert_array_equal(
+            np.asarray(a) > NEG_INF / 2, np.asarray(b) > NEG_INF / 2
+        )
+        nodes = jnp.asarray(nxt)[np.arange(nb), probes[:, t]]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=n).astype(bool)
+    np.testing.assert_array_equal(unpack_bits_word(pack_bits(bits), n), bits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sid_sets())
+def test_memory_bound_holds(case):
+    """Invariant: actual structure bytes <= Appendix-B bound (+10% slack for
+    the +1 row pointer and DMA padding)."""
+    vocab, length, sids, _ = case
+    d = min(2, length - 1)
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=d)
+    m = measure(tm)
+    slack = 4096  # pad rows + row_pointers[0] on tiny tries
+    assert m["total_bytes"] <= m["u_max_bytes"] * 1.10 + slack
+
+
+@settings(max_examples=20, deadline=None)
+@given(sid_sets())
+def test_level_bmax_is_tight_bound(case):
+    vocab, length, sids, _ = case
+    ft = build_flat_trie(sids, vocab, dense_d=0)
+    rp = np.asarray(ft.row_pointers, np.int64)
+    lens = rp[1:] - rp[:-1]
+    for lvl in range(length):
+        lo = 1 if lvl == 0 else int(ft.level_offsets[lvl])
+        hi = 2 if lvl == 0 else int(ft.level_offsets[lvl + 1])
+        if hi > lo:
+            assert lens[lo:hi].max() == ft.level_bmax[lvl]

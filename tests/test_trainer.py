@@ -1,0 +1,129 @@
+"""Trainer: convergence, microbatch equivalence, exact resume, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.loader import ShardedBatcher
+from repro.training.grad_compression import (
+    apply_error_feedback, compress, decompress, init_error_state,
+)
+from repro.training.optimizer import adamw
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def make_problem(seed=0, n=512):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    w_true = rng.normal(size=(8, 1)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(size=(n, 1)).astype(np.float32)
+    params = {"w": jnp.zeros((8, 1), jnp.float32)}
+
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    return params, loss_fn, {"x": x, "y": y}
+
+
+def test_trainer_converges(tmp_path):
+    params, loss_fn, data = make_problem()
+    t = Trainer(loss_fn, adamw(lr=5e-2), params,
+                TrainerConfig(n_steps=60, log_every=1000))
+    batches = ShardedBatcher(data, global_batch=64, seed=0)
+    losses = t.fit(batches, log=lambda *_: None)
+    assert losses[-1] < losses[0] * 0.2
+
+
+def test_microbatch_equivalence():
+    params, loss_fn, data = make_problem()
+    batch = {k: jnp.asarray(v[:64]) for k, v in data.items()}
+    outs = []
+    for n_mb in (1, 4):
+        t = Trainer(loss_fn, adamw(lr=1e-2), params,
+                    TrainerConfig(n_steps=1, microbatches=n_mb))
+        t.train_one(batch)
+        outs.append(np.asarray(t.params["w"], np.float64))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-6)
+
+
+def test_exact_resume(tmp_path):
+    """Crash after step 6 + resume == uninterrupted run (bit-exact params)."""
+    params, loss_fn, data = make_problem()
+    cfg = TrainerConfig(n_steps=12, ckpt_dir=str(tmp_path), ckpt_every=6,
+                        ckpt_async=False, log_every=1000)
+
+    # uninterrupted reference
+    t_ref = Trainer(loss_fn, adamw(lr=1e-2), params, cfg)
+    b_ref = ShardedBatcher(data, global_batch=64, seed=0)
+    t_ref.fit(b_ref, log=lambda *_: None)
+
+    # crashy run: stops after 6 steps (checkpoint fires at 6)
+    t1 = Trainer(loss_fn, adamw(lr=1e-2), params,
+                 TrainerConfig(n_steps=6, ckpt_dir=str(tmp_path) + "/b",
+                               ckpt_every=6, ckpt_async=False, log_every=1000))
+    b1 = ShardedBatcher(data, global_batch=64, seed=0)
+    t1.fit(b1, log=lambda *_: None)
+    t1.maybe_checkpoint(data_state=b1.state(), force=True)
+
+    # resume into a fresh trainer (fresh process semantics)
+    t2 = Trainer(loss_fn, adamw(lr=1e-2), params,
+                 TrainerConfig(n_steps=12, ckpt_dir=str(tmp_path) + "/b",
+                               ckpt_every=100, ckpt_async=False, log_every=1000))
+    assert t2.resume()
+    assert t2.step == 6
+    b2 = ShardedBatcher(data, global_batch=64, seed=0)
+    b2.restore(b1.state())
+    t2.fit(b2, log=lambda *_: None)
+
+    np.testing.assert_array_equal(
+        np.asarray(t_ref.params["w"]), np.asarray(t2.params["w"])
+    )
+
+
+def test_compression_roundtrip_and_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    q, s = compress(g)
+    assert q.dtype == jnp.int8
+    err = float(jnp.max(jnp.abs(decompress(q, s) - g)))
+    assert err <= float(s) * 0.51 + 1e-9  # half-ulp of the int8 grid
+    # error feedback keeps the accumulated bias bounded
+    grads = {"w": g}
+    e = init_error_state(grads)
+    total_true = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for _ in range(50):
+        deq, e = apply_error_feedback(grads, e)
+        total_true = total_true + g
+        total_sent = total_sent + deq["w"]
+    drift = float(jnp.max(jnp.abs(total_true - total_sent)))
+    assert drift <= float(s) + 1e-6  # bounded by one quantization step
+
+
+def test_trainer_with_compression_converges():
+    params, loss_fn, data = make_problem()
+    t = Trainer(loss_fn, adamw(lr=5e-2), params,
+                TrainerConfig(n_steps=60, grad_compression=True, log_every=1000))
+    batches = ShardedBatcher(data, global_batch=64, seed=0)
+    losses = t.fit(batches, log=lambda *_: None)
+    assert losses[-1] < losses[0] * 0.25
+
+
+def test_straggler_watchdog_records():
+    params, loss_fn, data = make_problem()
+    t = Trainer(loss_fn, adamw(lr=1e-2), params, TrainerConfig(n_steps=10))
+    batch = {k: jnp.asarray(v[:64]) for k, v in data.items()}
+    for _ in range(8):
+        t.train_one(batch)
+    t.step_times[-1] = 0.0  # fake fast history
+    import time
+
+    orig = time.time
+    seq = iter([0.0, 100.0])  # one pathologically slow step
+    time.time = lambda: next(seq, orig())
+    try:
+        t.train_one(batch)
+    finally:
+        time.time = orig
+    assert len(t.straggler_events) >= 1
