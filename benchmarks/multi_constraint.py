@@ -1,0 +1,99 @@
+"""Multi-constraint serving overhead — stacked store vs single matrix.
+
+Measures the per-decode-step masking latency of the stacked ConstraintStore
+path (per-row constraint ids, K ∈ {1, 4, 16} sets) against the single-matrix
+baseline on the same batch, at a sparse VNTK step and at the dense l1 step.
+The stacked path adds exactly one gather level into the constraint axis, so
+its overhead should stay a small constant as K scales (DESIGN.md §4) — the
+point of the subsystem: K tenants served by one replica instead of K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.constraints import ConstraintStore
+from repro.core import TransitionMatrix, constrain_log_probs
+from repro.core.trie import random_constraint_set
+
+K_SWEEP = (1, 4, 16)
+
+
+def _jit_single(tm, step):
+    """Jit the single-matrix masking step; the matrix pytree is a runtime
+    argument (closed-over device arrays become HLO literals, see common.py)."""
+
+    @jax.jit
+    def f(lp, nodes, t):
+        return constrain_log_probs(lp, nodes, t, step)
+
+    return lambda lp, nodes: f(lp, nodes, tm)
+
+
+def _jit_stacked(store, step):
+    @jax.jit
+    def f(lp, nodes, cids, s):
+        return constrain_log_probs(lp, nodes, s, step, constraint_ids=cids)
+
+    return lambda lp, nodes, cids: f(lp, nodes, cids, store)
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    V, L = 512, 6
+    n_per_set = 5_000 if quick else 50_000
+    nb = 64  # batch rows (B * M beams)
+    trials = 10 if quick else 30
+    out = {}
+
+    base_sids = random_constraint_set(rng, n_per_set, V, L)
+    tm = TransitionMatrix.from_sids(base_sids, V, dense_d=2)
+
+    def nodes_for(step, sids_np, l1_states_np):
+        """Valid per-row states for ``step`` in one member's own id space."""
+        pref = sids_np[rng.integers(0, sids_np.shape[0], nb)]
+        if step == 1:
+            return (pref[:, 0] + 1).astype(np.int32)  # virtual token+1 ids
+        return l1_states_np[pref[:, 0], pref[:, 1]].astype(np.int32)
+
+    for step, tag in ((1, "dense_l1"), (2, "vntk")):
+        lp = jnp.asarray(rng.normal(size=(nb, V)).astype(np.float32))
+        nodes = jnp.asarray(nodes_for(step, base_sids, np.asarray(tm.l1_states)))
+        single = _jit_single(tm, step)
+        t_single, _ = time_fn(single, lp, nodes, trials=trials)
+        emit(f"multik/{tag}/single", t_single * 1e6, "")
+        out[f"{tag}/single"] = t_single
+
+        for K in K_SWEEP:
+            set_sids = [base_sids] + [
+                random_constraint_set(rng, n_per_set, V, L)
+                for _ in range(K - 1)
+            ]
+            mats = [tm] + [
+                TransitionMatrix.from_sids(s, V, dense_d=2)
+                for s in set_sids[1:]
+            ]
+            store = ConstraintStore.from_matrices(mats)
+            cids_np = rng.integers(0, K, nb).astype(np.int32)
+            # like-for-like work: each row's node comes from ITS member's own
+            # CSR id space (state ids are renumbered independently per set)
+            l1_np = np.asarray(store.l1_states)
+            per_member = np.stack([
+                nodes_for(step, set_sids[c], l1_np[c]) for c in range(K)
+            ])  # (K, nb)
+            nodes_k = jnp.asarray(per_member[cids_np, np.arange(nb)])
+            stacked = _jit_stacked(store, step)
+            t_stacked, _ = time_fn(
+                stacked, lp, nodes_k, jnp.asarray(cids_np), trials=trials
+            )
+            overhead = t_stacked / max(t_single, 1e-12)
+            emit(f"multik/{tag}/stacked/K={K}", t_stacked * 1e6,
+                 f"overhead={overhead:.2f}x nbytes={store.nbytes()}")
+            out[f"{tag}/K={K}"] = t_stacked
+    return out
+
+
+if __name__ == "__main__":
+    run()

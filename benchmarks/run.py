@@ -20,7 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig2,fig3,fig4,table3,memory")
+                    help="comma list: table1,fig2,fig3,fig4,table3,memory,multik")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
@@ -28,6 +28,7 @@ def main() -> None:
         fig3_vocab_scaling,
         fig4_branch_factor,
         memory_table,
+        multi_constraint,
         table1_latency,
         table3_coldstart,
     )
@@ -39,6 +40,7 @@ def main() -> None:
         "fig4": lambda: fig4_branch_factor.run(quick=args.quick),
         "memory": lambda: memory_table.run(quick=args.quick),
         "table3": lambda: table3_coldstart.run(quick=args.quick),
+        "multik": lambda: multi_constraint.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else None
     for name, fn in sections.items():

@@ -1,0 +1,117 @@
+"""Multi-tenant constrained serving: one batch, many business constraints.
+
+Builds an item catalog with freshness/category metadata, registers three
+business predicates in the ConstraintRegistry, and serves a queue whose
+requests carry different constraint ids — all masked inside ONE shared
+constrained beam-search batch (DESIGN.md §4).  Then hot-swaps a refreshed
+catalog snapshot mid-serve and shows (a) the new constraint sets take effect
+at the next batch boundary and (b) zero recompilation happened.
+
+    PYTHONPATH=src python examples/serve_multi_constraint.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.constraints import (
+    ConstraintRegistry,
+    ItemCatalog,
+    category_allowlist,
+    freshness_window,
+)
+from repro.core.vntk import NEG_INF
+from repro.models import transformer
+from repro.pipelines import gr_model_config
+from repro.serving.engine import RequestQueue, ServingEngine
+from repro.serving.generative_retrieval import GenerativeRetriever
+
+
+def make_catalog(rng, n_items, V, L):
+    return ItemCatalog(
+        sids=rng.integers(0, V, size=(n_items, L)),
+        age_days=rng.uniform(0.0, 90.0, size=n_items),
+        category=rng.integers(0, 4, size=n_items),
+    )
+
+
+def compliant_fraction(results, registry, catalog, predicates):
+    total = ok = 0
+    for r in results.values():
+        mask = predicates[r["constraint_id"]](catalog)
+        valid = {tuple(x) for x in catalog.sids[mask]}
+        for m, sid in enumerate(r["sids"]):
+            if r["scores"][m] > NEG_INF / 2:
+                total += 1
+                ok += tuple(sid) in valid
+    return ok, total
+
+
+def main():
+    rng = np.random.default_rng(0)
+    V, L, M, B = 256, 4, 8, 4
+    cfg = gr_model_config(V)
+    params = transformer.init_params(cfg, jax.random.key(0))
+
+    catalog = make_catalog(rng, 20_000, V, L)
+    registry = ConstraintRegistry(V, headroom=0.5)
+    predicates = {}
+    predicates[registry.register("fresh_7d", freshness_window(7))] = \
+        freshness_window(7)
+    predicates[registry.register("fresh_30d", freshness_window(30))] = \
+        freshness_window(30)
+    predicates[registry.register("cat_0_1", category_allowlist(0, 1))] = \
+        category_allowlist(0, 1)
+    t0 = time.time()
+    store = registry.build(catalog)
+    print(f"registry v{registry.version}: {store.num_sets} constraint sets, "
+          f"{store.nbytes()/1e6:.2f} MB stacked store "
+          f"({time.time()-t0:.2f}s build)")
+
+    retriever = GenerativeRetriever(params, cfg, store, sid_length=L,
+                                    sid_vocab=V, beam_size=M)
+    engine = ServingEngine(params, cfg, batch_size=B, max_len=32,
+                           retriever=retriever, registry=registry)
+
+    # Count backend compiles to demonstrate the swap costs none.
+    compiles = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda name, *a, **kw: compiles.append(name)
+        if "backend_compile" in name else None
+    )
+
+    queue = RequestQueue()
+    rids = [
+        queue.submit(rng.integers(0, V, size=(12,)), n_tokens=L,
+                     constraint_id=i % 3)
+        for i in range(9)
+    ]
+    t0 = time.time()
+    results = engine.serve(queue)
+    ok, total = compliant_fraction(results, registry, catalog, predicates)
+    print(f"served {len(rids)} mixed-constraint requests in "
+          f"{time.time()-t0:.2f}s (incl. compile); "
+          f"compliance {ok}/{total} beams")
+
+    # ---- hot-swap: nightly corpus refresh (new items, re-aged inventory) ----
+    catalog2 = make_catalog(rng, 21_000, V, L)
+    t0 = time.time()
+    v = registry.swap(catalog2)
+    print(f"hot-swapped to registry v{v} in {time.time()-t0:.2f}s")
+
+    n_before = len(compiles)  # swap preserved all shapes/statics, so the
+    # post-swap serve must not compile anything new
+    for i in range(6):
+        queue.submit(rng.integers(0, V, size=(12,)), n_tokens=L,
+                     constraint_id=i % 3)
+    t0 = time.time()
+    results2 = engine.serve(queue)
+    ok2, total2 = compliant_fraction(results2, registry, catalog2, predicates)
+    versions = {r["store_version"] for r in results2.values()}
+    print(f"post-swap batch served in {time.time()-t0:.2f}s against store "
+          f"v{versions}; compliance {ok2}/{total2} beams; "
+          f"recompiles since swap: {len(compiles) - n_before}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Multi-tenant constraint serving (beyond-paper subsystem; DESIGN.md §4).
+
+The paper serves ONE static restricted vocabulary per engine.  Production
+recommenders restrict the output space per request ("business logic, e.g.
+enforcing content freshness or product category", paper §1) — so a single
+batch must be maskable under *different* constraint sets simultaneously.
+
+Public surface:
+  * ``ConstraintStore``     — K TransitionMatrix instances packed into one
+                              stacked, replicated device pytree; lookups take
+                              a per-row ``constraint_ids`` tensor.
+  * ``ConstraintRegistry``  — named business predicates -> built matrices,
+                              with integer versioning and double-buffered
+                              hot-swap at fixed static shapes.
+  * ``ItemCatalog``         — the item-metadata snapshot predicates run on.
+  * ``freshness_window`` / ``category_allowlist`` — built-in predicates.
+"""
+from repro.constraints.registry import (
+    ConstraintRegistry,
+    ItemCatalog,
+    category_allowlist,
+    freshness_window,
+    synthetic_catalog,
+)
+from repro.constraints.store import ConstraintStore
+
+__all__ = [
+    "ConstraintStore",
+    "ConstraintRegistry",
+    "ItemCatalog",
+    "freshness_window",
+    "category_allowlist",
+    "synthetic_catalog",
+]

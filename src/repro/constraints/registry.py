@@ -1,0 +1,180 @@
+"""Named business-constraint registry with versioned hot-swap (DESIGN.md §4).
+
+Production constraint sets are *derived* objects: a business predicate
+(freshness window, category allowlist, ...) evaluated over the current item
+catalog snapshot.  The registry owns that mapping:
+
+  * ``register(name, predicate)``   — claim a slot for a named predicate.
+  * ``build(catalog)``              — evaluate all predicates, build the
+                                      per-slot TransitionMatrix instances, and
+                                      pack them into one ConstraintStore
+                                      (with headroom, see below).
+  * ``swap(catalog)``               — double-buffered refresh: rebuild every
+                                      member from a NEW catalog snapshot into
+                                      the SAME capacity envelope, then flip
+                                      the front buffer atomically and bump the
+                                      integer version.  Static shapes are
+                                      preserved, so jitted decode steps keyed
+                                      on the store never recompile; serving
+                                      picks the new store up at its next step
+                                      boundary.
+
+Headroom makes the envelope forgiving: a refreshed corpus that grew by less
+than ``headroom`` x still fits.  A snapshot that outgrows the envelope makes
+``swap`` raise *before* the front buffer is touched (the old store keeps
+serving) — the operator then rebuilds with a bigger envelope offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.constraints.store import ConstraintStore
+from repro.core.transition_matrix import TransitionMatrix
+
+__all__ = [
+    "ItemCatalog",
+    "ConstraintRegistry",
+    "freshness_window",
+    "category_allowlist",
+    "synthetic_catalog",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ItemCatalog:
+    """Immutable item-metadata snapshot predicates are evaluated against."""
+
+    sids: np.ndarray  # (N, L) Semantic IDs of every servable item
+    age_days: np.ndarray  # (N,) content age
+    category: np.ndarray  # (N,) int category id
+
+    def __post_init__(self):
+        n = self.sids.shape[0]
+        if self.age_days.shape != (n,) or self.category.shape != (n,):
+            raise ValueError("catalog metadata must be per-item (N,) arrays")
+
+
+Predicate = Callable[[ItemCatalog], np.ndarray]  # -> (N,) bool item mask
+
+
+def freshness_window(max_age_days: float) -> Predicate:
+    """Items no older than ``max_age_days`` (paper §1: content freshness)."""
+    return lambda cat: cat.age_days <= max_age_days
+
+
+def category_allowlist(*categories: int) -> Predicate:
+    """Items whose category is in the allowlist (paper §1: product category)."""
+    cats = np.asarray(categories)
+    return lambda cat: np.isin(cat.category, cats)
+
+
+def synthetic_catalog(
+    rng: np.random.Generator, n_items: int, vocab_size: int, sid_length: int,
+    n_categories: int = 8, max_age_days: float = 90.0,
+) -> ItemCatalog:
+    """Random catalog for examples/benchmarks/CLI smoke runs."""
+    return ItemCatalog(
+        sids=rng.integers(0, vocab_size, size=(n_items, sid_length)),
+        age_days=rng.uniform(0.0, max_age_days, size=n_items),
+        category=rng.integers(0, n_categories, size=n_items),
+    )
+
+
+class ConstraintRegistry:
+    """Slot-addressed predicate registry over a double-buffered store."""
+
+    def __init__(self, vocab_size: int, *, dense_d: int = 2,
+                 headroom: float = 0.5):
+        self.vocab_size = vocab_size
+        self.dense_d = dense_d
+        self.headroom = headroom
+        self._names: list[str] = []
+        self._predicates: dict[str, Predicate] = {}
+        self._front: Optional[ConstraintStore] = None
+        self._version = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def register(self, name: str, predicate: Predicate) -> int:
+        """Claim the next slot for ``name``; returns its constraint id."""
+        if name in self._predicates:
+            raise ValueError(f"predicate {name!r} already registered")
+        if self._front is not None:
+            raise RuntimeError(
+                "cannot register after build(): slot ids are baked into "
+                "in-flight requests"
+            )
+        self._names.append(name)
+        self._predicates[name] = predicate
+        return len(self._names) - 1
+
+    def slot(self, name: str) -> int:
+        return self._names.index(name)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._names)
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    # ------------------------------------------------------------------
+    def _build_matrices(self, catalog: ItemCatalog) -> list[TransitionMatrix]:
+        mats = []
+        for name in self._names:
+            mask = np.asarray(self._predicates[name](catalog), bool)
+            if mask.shape != (catalog.sids.shape[0],):
+                raise ValueError(f"predicate {name!r} returned a non-item mask")
+            if not mask.any():
+                raise ValueError(
+                    f"predicate {name!r} selects zero items in this snapshot"
+                )
+            mats.append(
+                TransitionMatrix.from_sids(
+                    catalog.sids[mask], self.vocab_size, dense_d=self.dense_d
+                )
+            )
+        return mats
+
+    def build(self, catalog: ItemCatalog) -> ConstraintStore:
+        """Initial (version 1) store from the first catalog snapshot."""
+        if not self._names:
+            raise RuntimeError("no predicates registered")
+        if self._front is not None:
+            raise RuntimeError("already built; use swap() to refresh")
+        store = ConstraintStore.from_matrices(
+            self._build_matrices(catalog), headroom=self.headroom
+        )
+        with self._lock:
+            self._front = store
+            self._version = 1
+        return store
+
+    def swap(self, catalog: ItemCatalog) -> int:
+        """Refresh every slot from a new snapshot; returns the new version.
+
+        Double-buffered: the replacement store is fully built (and validated
+        against the capacity envelope) before the front pointer flips, so
+        concurrent readers only ever observe a complete store.
+        """
+        if self._front is None:
+            raise RuntimeError("swap() before build()")
+        # one-shot bulk replace: validates all slots against the envelope,
+        # then builds the back buffer with a single store copy
+        back = self._front.with_members(self._build_matrices(catalog))
+        with self._lock:
+            self._front = back
+            self._version += 1
+        return self._version
+
+    def current(self) -> tuple[ConstraintStore, int]:
+        """The live (store, version) pair; atomic with respect to swap()."""
+        with self._lock:
+            if self._front is None:
+                raise RuntimeError("registry not built yet")
+            return self._front, self._version

@@ -1,0 +1,306 @@
+"""Stacked multi-constraint transition store (DESIGN.md §4).
+
+``ConstraintStore`` packs K independent :class:`TransitionMatrix` instances
+(same vocab / SID length / dense depth) into one device pytree whose leaves
+carry a leading constraint axis.  Every decode-path lookup then takes an
+optional per-row ``constraint_ids`` tensor — one extra gather level into the
+stacked CSR — so a single jitted beam-search batch serves requests under
+different business constraints simultaneously.
+
+Capacity envelope: members are padded to common ``n_states`` / ``n_edges``
+sizes, optionally with *headroom*, so a refreshed corpus snapshot can be
+hot-swapped into a slot (``with_member``) without changing any array shape or
+static metadata — and therefore without triggering a single recompilation.
+Padded states have empty CSR rows (they behave as the sink) and padded edges
+are zeros, which the valid-length sanitization of Alg. 2 masks out, so padding
+never changes lookup results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transition_matrix import TransitionMatrix
+
+__all__ = ["ConstraintStore"]
+
+_LEAF_FIELDS = (
+    "row_pointers", "edges", "l0_mask_packed", "l0_states",
+    "l1_mask_packed", "l1_states", "member_n_states", "member_n_edges",
+    "member_n_constraints",
+)
+
+
+def _edge_pad(bmax: int) -> int:
+    """Speculative-slice safety pad (same formula as the trie builder)."""
+    return -int(bmax) % 128 + int(bmax) + 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ConstraintStore:
+    """K padded TransitionMatrix instances stacked on a leading axis."""
+
+    # --- device arrays (pytree leaves; leading axis K) ---
+    row_pointers: jax.Array  # (K, n_states + 1) int32
+    edges: jax.Array  # (K, n_edges, 2) int32 stacked [token, next_state]
+    l0_mask_packed: jax.Array  # (K, ceil(V/8)) uint8
+    l0_states: jax.Array  # (K, V) int32
+    l1_mask_packed: jax.Array  # (K, V, ceil(V/8)) uint8 (or (K, 1, 1) dummy)
+    l1_states: jax.Array  # (K, V, V) int32 (or (K, 1, 1) dummy)
+    # per-member bookkeeping as LEAVES so hot-swap never touches aux data
+    member_n_states: jax.Array  # (K,) int32 real state counts
+    member_n_edges: jax.Array  # (K,) int32 real edge counts
+    member_n_constraints: jax.Array  # (K,) int32 SIDs per member
+    # --- static metadata (jit-specialization keys; fixed across hot-swaps) ---
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+    sid_length: int = dataclasses.field(metadata=dict(static=True))
+    dense_d: int = dataclasses.field(metadata=dict(static=True))
+    level_bmax: tuple = dataclasses.field(metadata=dict(static=True))
+    n_states: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+    num_sets: int = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_matrices(
+        cls, mats: Sequence[TransitionMatrix], *, headroom: float = 0.0
+    ) -> "ConstraintStore":
+        """Stack matrices into one store, padded to a common envelope.
+
+        ``headroom`` (a fraction, e.g. 0.5) over-allocates the state/edge/
+        branch-factor envelope beyond the current members so later
+        ``with_member`` hot-swaps of *larger* refreshed matrices still fit
+        the static shapes.
+        """
+        mats = list(mats)
+        if not mats:
+            raise ValueError("ConstraintStore needs at least one matrix")
+        if headroom < 0:
+            raise ValueError("headroom must be >= 0")
+        ref = mats[0]
+        for i, m in enumerate(mats):
+            for f in ("vocab_size", "sid_length", "dense_d"):
+                if getattr(m, f) != getattr(ref, f):
+                    raise ValueError(
+                        f"matrix {i}: {f}={getattr(m, f)} != {getattr(ref, f)}"
+                        " — all members must share vocab/sid_length/dense_d"
+                    )
+            if m.l1_mask_packed.shape != ref.l1_mask_packed.shape:
+                raise ValueError(f"matrix {i}: inconsistent dense-l1 tables")
+
+        grow = 1.0 + headroom
+        bmax_env = tuple(
+            int(np.ceil(max(m.level_bmax[l] for m in mats) * grow))
+            for l in range(ref.sid_length)
+        )
+        n_states_env = int(np.ceil(max(m.n_states for m in mats) * grow))
+        e_real = max(m.n_edges for m in mats)
+        n_edges_env = max(
+            int(np.ceil(e_real * grow)) + _edge_pad(max(max(bmax_env), 1)),
+            max(m.edges.shape[0] for m in mats),
+        )
+
+        stacked = {
+            name: np.stack(
+                [_pad_member(m, name, n_states_env, n_edges_env) for m in mats]
+            )
+            for name in ("row_pointers", "edges", "l0_mask_packed",
+                         "l0_states", "l1_mask_packed", "l1_states")
+        }
+        return cls(
+            **{k: jnp.asarray(v) for k, v in stacked.items()},
+            member_n_states=jnp.asarray([m.n_states for m in mats], jnp.int32),
+            member_n_edges=jnp.asarray([m.n_edges for m in mats], jnp.int32),
+            member_n_constraints=jnp.asarray(
+                [m.n_constraints for m in mats], jnp.int32
+            ),
+            vocab_size=ref.vocab_size,
+            sid_length=ref.sid_length,
+            dense_d=ref.dense_d,
+            level_bmax=bmax_env,
+            n_states=n_states_env,
+            n_edges=n_edges_env,
+            num_sets=len(mats),
+        )
+
+    # ------------------------------------------------------------------
+    def bmax_for_step(self, step: int) -> int:
+        """Envelope branch factor at ``step`` (max over members + headroom)."""
+        return int(self.level_bmax[step])
+
+    def nbytes(self) -> int:
+        total = 0
+        for f in _LEAF_FIELDS:
+            a = getattr(self, f)
+            total += a.size * a.dtype.itemsize
+        return total
+
+    def replicated_shardings(self, mesh) -> "ConstraintStore":
+        """Fully-replicated NamedShardings pytree (same policy as the single
+        matrix, paper §A.3: the store is small next to model weights)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        rep = NamedSharding(mesh, P())
+        return jax.tree.map(lambda _: rep, self)
+
+    # ------------------------------------------------------------------
+    def member(self, k: int) -> TransitionMatrix:
+        """Slice out set ``k`` as a standalone TransitionMatrix.
+
+        The returned matrix carries the store's padded arrays and envelope
+        metadata; padding is semantically inert (empty rows / zero edges), so
+        its lookups are bit-identical to the original member's.
+        """
+        if not 0 <= k < self.num_sets:
+            raise IndexError(f"constraint set {k} outside [0, {self.num_sets})")
+        return TransitionMatrix(
+            row_pointers=self.row_pointers[k],
+            edges=self.edges[k],
+            l0_mask_packed=self.l0_mask_packed[k],
+            l0_states=self.l0_states[k],
+            l1_mask_packed=self.l1_mask_packed[k],
+            l1_states=self.l1_states[k],
+            vocab_size=self.vocab_size,
+            sid_length=self.sid_length,
+            dense_d=self.dense_d,
+            level_bmax=self.level_bmax,
+            n_states=self.n_states,
+            n_edges=self.n_edges,
+            n_constraints=int(self.member_n_constraints[k]),
+        )
+
+    def _check_fits(self, tm: TransitionMatrix) -> None:
+        """Raise unless ``tm`` fits this store's capacity envelope."""
+        for f in ("vocab_size", "sid_length", "dense_d"):
+            if getattr(tm, f) != getattr(self, f):
+                raise ValueError(
+                    f"hot-swap {f} mismatch: {getattr(tm, f)} != {getattr(self, f)}"
+                )
+        if tm.n_states > self.n_states:
+            raise ValueError(
+                f"hot-swap needs {tm.n_states} states but envelope holds "
+                f"{self.n_states}; rebuild the store with more headroom"
+            )
+        needed_edges = tm.n_edges + _edge_pad(max(self.level_bmax))
+        if needed_edges > self.n_edges:
+            raise ValueError(
+                f"hot-swap needs {needed_edges} edge rows but envelope holds "
+                f"{self.n_edges}; rebuild the store with more headroom"
+            )
+        for l, (b_new, b_env) in enumerate(zip(tm.level_bmax, self.level_bmax)):
+            if b_new > b_env:
+                raise ValueError(
+                    f"hot-swap level-{l} branch factor {b_new} exceeds "
+                    f"envelope {b_env}; rebuild the store with more headroom"
+                )
+
+    def with_member(self, k: int, tm: TransitionMatrix) -> "ConstraintStore":
+        """Functional hot-swap: a new matrix in slot ``k``, same envelope.
+
+        The replacement must fit the capacity envelope (states, edges, and
+        per-level branch factors); otherwise the swap is rejected and the
+        caller should rebuild the store with more headroom.  Static metadata
+        and every array shape are preserved, so jitted decode steps keyed on
+        this store never recompile across swaps.
+        """
+        if not 0 <= k < self.num_sets:
+            raise IndexError(f"constraint set {k} outside [0, {self.num_sets})")
+        self._check_fits(tm)
+        updates = {
+            name: getattr(self, name).at[k].set(
+                jnp.asarray(_pad_member(tm, name, self.n_states, self.n_edges))
+            )
+            for name in ("row_pointers", "edges", "l0_mask_packed",
+                         "l0_states", "l1_mask_packed", "l1_states")
+        }
+        return dataclasses.replace(
+            self,
+            **updates,
+            member_n_states=self.member_n_states.at[k].set(tm.n_states),
+            member_n_edges=self.member_n_edges.at[k].set(tm.n_edges),
+            member_n_constraints=self.member_n_constraints.at[k].set(
+                tm.n_constraints
+            ),
+        )
+
+    def with_members(self, mats: Sequence[TransitionMatrix]) -> "ConstraintStore":
+        """Hot-swap EVERY slot at once (the registry refresh path).
+
+        All replacements are validated against the envelope first, then the
+        new stacked leaves are built host-side and installed with a single
+        ``dataclasses.replace`` — one store copy total, versus K full copies
+        if the refresh chained :meth:`with_member` per slot.
+        """
+        mats = list(mats)
+        if len(mats) != self.num_sets:
+            raise ValueError(
+                f"with_members needs {self.num_sets} matrices, got {len(mats)}"
+            )
+        for tm in mats:
+            self._check_fits(tm)
+        stacked = {
+            name: jnp.asarray(np.stack(
+                [_pad_member(tm, name, self.n_states, self.n_edges)
+                 for tm in mats]
+            ))
+            for name in ("row_pointers", "edges", "l0_mask_packed",
+                         "l0_states", "l1_mask_packed", "l1_states")
+        }
+        return dataclasses.replace(
+            self,
+            **stacked,
+            member_n_states=jnp.asarray([m.n_states for m in mats], jnp.int32),
+            member_n_edges=jnp.asarray([m.n_edges for m in mats], jnp.int32),
+            member_n_constraints=jnp.asarray(
+                [m.n_constraints for m in mats], jnp.int32
+            ),
+        )
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            **{f: np.asarray(getattr(self, f)) for f in _LEAF_FIELDS},
+            meta=np.array(
+                [self.vocab_size, self.sid_length, self.dense_d,
+                 self.n_states, self.n_edges, self.num_sets],
+                dtype=np.int64,
+            ),
+            level_bmax=np.asarray(self.level_bmax, dtype=np.int64),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "ConstraintStore":
+        z = np.load(path)
+        meta = z["meta"]
+        return cls(
+            **{f: jnp.asarray(z[f]) for f in _LEAF_FIELDS},
+            vocab_size=int(meta[0]),
+            sid_length=int(meta[1]),
+            dense_d=int(meta[2]),
+            level_bmax=tuple(int(b) for b in z["level_bmax"]),
+            n_states=int(meta[3]),
+            n_edges=int(meta[4]),
+            num_sets=int(meta[5]),
+        )
+
+
+def _pad_member(tm: TransitionMatrix, name: str, n_states: int,
+                n_edges: int) -> np.ndarray:
+    """One member array padded to the store envelope (host-side)."""
+    a = np.asarray(getattr(tm, name))
+    if name == "row_pointers":
+        # Padded states get empty CSR rows: repeat the final pointer.
+        out = np.full(n_states + 1, a[tm.n_states], dtype=a.dtype)
+        out[: tm.n_states + 1] = a[: tm.n_states + 1]
+        return out
+    if name == "edges":
+        out = np.zeros((n_edges, 2), dtype=a.dtype)
+        out[: a.shape[0]] = a
+        return out
+    return a  # dense tables are fixed-shape given (V, dense_d)

@@ -58,15 +58,29 @@ def beam_search(
     impl: str = "xla",
     fused: bool = False,
     first_logits: Optional[jax.Array] = None,
+    constraint_ids: Optional[jax.Array] = None,
 ) -> tuple[BeamState, object]:
     """Run L constrained decode steps; returns final beams sorted by score.
 
     ``first_logits`` (B, V) short-circuits step 0 with logits already
     available from the prefill's last position (a prefill pass ends exactly
     where SID decoding starts, so re-deriving them would waste one decode).
+
+    ``constraint_ids`` (B,) int32 selects, per batch row, which member of a
+    stacked :class:`~repro.constraints.ConstraintStore` (passed as ``tm``)
+    masks that row — every beam of a row shares its request's constraint set,
+    so the ids broadcast over the beam axis and beam reordering never moves
+    them (DESIGN.md §4).
     """
     state = _init_state(batch_size, beam_size, length)
     B, M = batch_size, beam_size
+    cids_bm = (
+        None
+        if constraint_ids is None
+        else jnp.broadcast_to(
+            jnp.asarray(constraint_ids, jnp.int32)[:, None], (B, M)
+        )
+    )
 
     for step in range(length):
         last = (
@@ -82,7 +96,8 @@ def beam_search(
             logits, carry = logits_fn(carry, last, step)  # (B, M, V)
         V = logits.shape[-1]
         lp, next_dense = constrained_decoding_step(
-            logits, state.nodes, tm, step, impl=impl, fused=fused
+            logits, state.nodes, tm, step, impl=impl, fused=fused,
+            constraint_ids=cids_bm,
         )
         total = state.scores[:, :, None] + lp  # (B, M, V)
         flat = total.reshape(B, M * V)

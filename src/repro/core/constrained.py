@@ -6,6 +6,13 @@ returns masked log-probs plus the vocab-aligned next-state tensor.  It routes
 to the dense bit-packed lookup for steps < dense_d and to the VNTK for deeper
 steps, and can dispatch either the XLA formulation or the Pallas TPU kernel.
 
+Multi-tenant serving (DESIGN.md §4): pass a stacked
+:class:`~repro.constraints.ConstraintStore` as ``tm`` together with a per-row
+``constraint_ids`` tensor (same shape as ``nodes``) and every row is masked
+under its own constraint set — one extra gather level, no recompilation.
+With ``constraint_ids=None`` the single-matrix path is byte-identical to the
+original.
+
 The full per-step driver (`constrained_decoding_step`) composes it with
 log-softmax normalization exactly as in the paper's Algorithm 1 Phases 1-2;
 Phases 3-4 (beam-search selection + state gather) live in
@@ -13,51 +20,72 @@ Phases 3-4 (beam-search selection + state gather) live in
 """
 from __future__ import annotations
 
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dense_mask
 from repro.core.transition_matrix import TransitionMatrix
-from repro.core.vntk import NEG_INF, vntk_xla
+from repro.core.vntk import NEG_INF, vntk_stacked_xla, vntk_xla
 
 __all__ = ["constrain_log_probs", "constrained_decoding_step", "NEG_INF"]
 
 Impl = Literal["xla", "pallas"]
 
 
+def _is_stacked(tm) -> bool:
+    """ConstraintStore detection without importing repro.constraints (cycle)."""
+    return tm.row_pointers.ndim == 2
+
+
 def constrain_log_probs(
     log_probs: jax.Array,  # (..., V) normalized log-probs
     nodes: jax.Array,  # (...,) int32 trie states
-    tm: TransitionMatrix,
+    tm: TransitionMatrix,  # or ConstraintStore when constraint_ids is given
     step: int,
     impl: Impl = "xla",
+    constraint_ids: Optional[jax.Array] = None,  # (...,) int32 set ids
 ) -> tuple[jax.Array, jax.Array]:
     """Phase 2 of Alg. 1: constraint masking. ``step`` must be static."""
     if step < 0 or step >= tm.sid_length:
         raise ValueError(f"step {step} outside [0, {tm.sid_length})")
+    if constraint_ids is not None and not _is_stacked(tm):
+        raise ValueError(
+            "constraint_ids requires a stacked ConstraintStore, got a "
+            "single TransitionMatrix"
+        )
+    if constraint_ids is None and _is_stacked(tm):
+        raise ValueError("ConstraintStore lookups need per-row constraint_ids")
     if step == 0 and tm.dense_d >= 1:
-        return dense_mask.dense_lookup_l0(log_probs, tm)
+        return dense_mask.dense_lookup_l0(
+            log_probs, tm, constraint_ids=constraint_ids
+        )
     if step == 1 and tm.dense_d >= 2:
-        return dense_mask.dense_lookup_l1(log_probs, nodes, tm)
+        return dense_mask.dense_lookup_l1(
+            log_probs, nodes, tm, constraint_ids=constraint_ids
+        )
     bmax = max(tm.bmax_for_step(step), 1)
     if impl == "pallas":
         from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
 
         return kernel_ops.vntk(
-            log_probs, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size
+            log_probs, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size,
+            constraint_ids=constraint_ids,
         )
+    if constraint_ids is not None:
+        return vntk_stacked_xla(log_probs, nodes, tm, bmax, constraint_ids)
     return vntk_xla(log_probs, nodes, tm, bmax)
 
 
 def constrained_decoding_step(
     logits: jax.Array,  # (..., V) raw model logits
     nodes: jax.Array,  # (...,) int32 trie states
-    tm: TransitionMatrix | None,
+    tm: TransitionMatrix | None,  # or ConstraintStore (stacked)
     step: int,
     impl: Impl = "xla",
     fused: bool = False,
+    constraint_ids: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Phases 1-2 of Alg. 1: LogSoftmax then constraint masking.
 
@@ -77,7 +105,10 @@ def constrained_decoding_step(
 
         bmax = max(tm.bmax_for_step(step), 1)
         return kernel_ops.vntk_fused_logsoftmax(
-            logits, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size
+            logits, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size,
+            constraint_ids=constraint_ids,
         )
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    return constrain_log_probs(lp, nodes, tm, step, impl=impl)
+    return constrain_log_probs(
+        lp, nodes, tm, step, impl=impl, constraint_ids=constraint_ids
+    )

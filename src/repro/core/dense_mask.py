@@ -5,8 +5,15 @@ would fetch huge branch factors.  Instead validity is a direct lookup into a
 bit-packed dense tensor D of shape |V|^d bits plus an int32 next-state table.
 
 Bit order is little-endian within each uint8 word (see ``trie.pack_bits``).
+
+Both lookups accept an optional per-row ``constraint_ids`` tensor (DESIGN.md
+§4): with it, ``tm`` must be a stacked :class:`ConstraintStore` and the dense
+tables gain one leading gather level ``tables[cid, ...]``.  With it omitted,
+the single-matrix code path is exactly the original one.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +32,9 @@ def unpack_mask_row(packed: jax.Array, vocab_size: int) -> jax.Array:
 
 
 def dense_lookup_l0(
-    log_probs: jax.Array, tm: TransitionMatrix
+    log_probs: jax.Array,
+    tm: TransitionMatrix,
+    constraint_ids: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode step 0: mask by the root's dense start mask.
 
@@ -35,11 +44,18 @@ def dense_lookup_l0(
     state ids are returned instead so step 1 can run the sparse VNTK.
     """
     V = tm.vocab_size
-    mask = unpack_mask_row(tm.l0_mask_packed, V)  # (V,)
+    if constraint_ids is None:
+        mask = unpack_mask_row(tm.l0_mask_packed, V)  # (V,)
+        masked = jnp.where(mask, log_probs, NEG_INF)
+        # l0_states already encodes the right id space per dense_d (see trie.py):
+        # real renumbered CSR ids for dense_d==1, virtual token+1 ids for dense_d==2.
+        nxt = jnp.where(mask, tm.l0_states, 0)
+        next_dense = jnp.broadcast_to(nxt, log_probs.shape).astype(jnp.int32)
+        return masked, next_dense
+    # Stacked store: per-row root mask, one gather level over the constraint axis.
+    mask = unpack_mask_row(tm.l0_mask_packed[constraint_ids], V)  # (..., V)
     masked = jnp.where(mask, log_probs, NEG_INF)
-    # l0_states already encodes the right id space per dense_d (see trie.py):
-    # real renumbered CSR ids for dense_d==1, virtual token+1 ids for dense_d==2.
-    nxt = jnp.where(mask, tm.l0_states, 0)
+    nxt = jnp.where(mask, tm.l0_states[constraint_ids], 0)
     next_dense = jnp.broadcast_to(nxt, log_probs.shape).astype(jnp.int32)
     return masked, next_dense
 
@@ -48,15 +64,21 @@ def dense_lookup_l1(
     log_probs: jax.Array,  # (..., V)
     nodes: jax.Array,  # (...,) virtual ids: parent token + 1
     tm: TransitionMatrix,
+    constraint_ids: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode step 1 under dense_d == 2: lookup into the (V, V) dense tables."""
     V = tm.vocab_size
     parents = jnp.clip(nodes - 1, 0, V - 1)  # recover parent token
-    packed_rows = tm.l1_mask_packed[parents]  # (..., ceil(V/8))
+    if constraint_ids is None:
+        packed_rows = tm.l1_mask_packed[parents]  # (..., ceil(V/8))
+        states = tm.l1_states[parents]  # (..., V)
+    else:
+        packed_rows = tm.l1_mask_packed[constraint_ids, parents]
+        states = tm.l1_states[constraint_ids, parents]
     mask = unpack_mask_row(packed_rows, V)  # (..., V)
     # A sink parent (node == 0) has no valid continuation.
     alive = (nodes > 0)[..., None]
     mask = mask & alive
     masked = jnp.where(mask, log_probs, NEG_INF)
-    next_dense = jnp.where(mask, tm.l1_states[parents], 0).astype(jnp.int32)
+    next_dense = jnp.where(mask, states, 0).astype(jnp.int32)
     return masked, next_dense

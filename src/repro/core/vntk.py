@@ -18,7 +18,13 @@ import jax.numpy as jnp
 
 from repro.core.transition_matrix import TransitionMatrix
 
-__all__ = ["NEG_INF", "vntk_xla", "vntk_reference_scatter"]
+__all__ = [
+    "NEG_INF",
+    "vntk_xla",
+    "vntk_stacked_xla",
+    "vntk_reference_scatter",
+    "vntk_stacked_reference_scatter",
+]
 
 NEG_INF = -1.0e10
 
@@ -74,6 +80,28 @@ def vntk_xla(
     )
 
 
+def vntk_stacked_xla(
+    log_probs: jax.Array,  # (..., V) float
+    nodes: jax.Array,  # (...,) int32 current trie states
+    store,  # ConstraintStore (duck-typed: stacked arrays + static meta)
+    bmax: int,
+    constraint_ids: jax.Array,  # (...,) int32 per-row constraint-set ids
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 2 over a stacked multi-constraint store (DESIGN.md §4).
+
+    Identical to :func:`vntk_xla` except Phases 1-2 gather through one extra
+    leading constraint axis: row pointers from ``(K, S+1)`` and edge slabs
+    from ``(K, E, 2)``, both indexed by the per-row constraint id.  Invalid
+    speculative slots are masked by the same ``iota < n_child`` sanitization,
+    so results are bit-identical to running each row against its standalone
+    member matrix.
+    """
+    return vntk_stacked_reference_scatter(
+        log_probs, nodes, constraint_ids, store.row_pointers, store.edges,
+        bmax, store.vocab_size,
+    )
+
+
 def vntk_reference_scatter(
     log_probs: jax.Array,
     nodes: jax.Array,
@@ -94,6 +122,42 @@ def vntk_reference_scatter(
     gathered = jnp.take(
         edges, starts[:, None] + offsets[None, :], axis=0, mode="fill", fill_value=0
     )
+    valid = offsets[None, :] < lens[:, None]
+    cols = gathered[:, :, 0]
+    nxt = jnp.where(valid, gathered[:, :, 1], 0)
+    scatter_idx = jnp.where(valid, cols, V)
+    rows = jnp.arange(nb)[:, None]
+    cand_lp = jnp.take_along_axis(lp_flat, jnp.clip(cols, 0, V - 1), axis=1)
+    masked = jnp.full((nb, V + 1), NEG_INF, dtype=log_probs.dtype)
+    masked = masked.at[rows, scatter_idx].set(jnp.where(valid, cand_lp, NEG_INF))[:, :V]
+    next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
+    next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
+    return masked.reshape(batch_shape + (V,)), next_dense.reshape(batch_shape + (V,))
+
+
+def vntk_stacked_reference_scatter(
+    log_probs: jax.Array,  # (..., V)
+    nodes: jax.Array,  # (...,)
+    constraint_ids: jax.Array,  # (...,) int32
+    row_pointers: jax.Array,  # (K, S + 1)
+    edges: jax.Array,  # (K, E, 2) stacked per constraint set
+    bmax: int,
+    vocab_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw-array stacked variant — the oracle for the stacked Pallas kernel."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    cid = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    nb = n_flat.shape[0]
+    starts = row_pointers[cid, n_flat]
+    lens = row_pointers[cid, n_flat + 1] - starts
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    # (nb, bmax, 2): one extra gather level through the constraint axis.  The
+    # per-member edge padding guarantees in-bounds speculative slices, so the
+    # (clamping) advanced-indexing gather is safe.
+    gathered = edges[cid[:, None], starts[:, None] + offsets[None, :]]
     valid = offsets[None, :] < lens[:, None]
     cols = gathered[:, :, 0]
     nxt = jnp.where(valid, gathered[:, :, 1], 0)

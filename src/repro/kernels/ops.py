@@ -15,7 +15,12 @@ import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.embedding_bag import embedding_bag_pallas
-from repro.kernels.vntk import vntk_fused_logsoftmax_pallas, vntk_pallas
+from repro.kernels.vntk import (
+    vntk_fused_logsoftmax_pallas,
+    vntk_pallas,
+    vntk_stacked_fused_logsoftmax_pallas,
+    vntk_stacked_pallas,
+)
 
 __all__ = ["vntk", "vntk_fused_logsoftmax", "embedding_bag"]
 
@@ -28,23 +33,46 @@ def _resolve(impl: str | None) -> str:
 
 @partial(jax.jit, static_argnames=("bmax", "vocab", "impl"))
 def vntk(log_probs, nodes, row_pointers, edges, bmax: int, vocab: int,
-         impl: str | None = None):
-    """Alg. 2 (VNTK): (masked_log_probs, next_states), both vocab-aligned."""
+         impl: str | None = None, constraint_ids=None):
+    """Alg. 2 (VNTK): (masked_log_probs, next_states), both vocab-aligned.
+
+    With ``constraint_ids`` (per-row int32), ``row_pointers``/``edges`` must
+    carry a leading constraint axis — (K, S+1) / (K, E, 2) — and each row is
+    masked by its own set (DESIGN.md §4).  ``None`` keeps the single-matrix
+    path untouched (the branch is resolved at trace time).
+    """
+    if constraint_ids is None:
+        if _resolve(impl) == "pallas":
+            return vntk_pallas(log_probs, nodes, row_pointers, edges, bmax, vocab)
+        return _ref.vntk_ref(log_probs, nodes, row_pointers, edges, bmax, vocab)
     if _resolve(impl) == "pallas":
-        return vntk_pallas(log_probs, nodes, row_pointers, edges, bmax, vocab)
-    return _ref.vntk_ref(log_probs, nodes, row_pointers, edges, bmax, vocab)
+        return vntk_stacked_pallas(
+            log_probs, nodes, constraint_ids, row_pointers, edges, bmax, vocab
+        )
+    return _ref.vntk_stacked_ref(
+        log_probs, nodes, constraint_ids, row_pointers, edges, bmax, vocab
+    )
 
 
 @partial(jax.jit, static_argnames=("bmax", "vocab", "impl"))
 def vntk_fused_logsoftmax(logits, nodes, row_pointers, edges, bmax: int,
-                          vocab: int, impl: str | None = None):
+                          vocab: int, impl: str | None = None,
+                          constraint_ids=None):
     """Fused LogSoftmax + VNTK masking (single HBM pass over logits)."""
-    if _resolve(impl) == "pallas":
-        return vntk_fused_logsoftmax_pallas(
+    if constraint_ids is None:
+        if _resolve(impl) == "pallas":
+            return vntk_fused_logsoftmax_pallas(
+                logits, nodes, row_pointers, edges, bmax, vocab
+            )
+        return _ref.vntk_fused_logsoftmax_ref(
             logits, nodes, row_pointers, edges, bmax, vocab
         )
-    return _ref.vntk_fused_logsoftmax_ref(
-        logits, nodes, row_pointers, edges, bmax, vocab
+    if _resolve(impl) == "pallas":
+        return vntk_stacked_fused_logsoftmax_pallas(
+            logits, nodes, constraint_ids, row_pointers, edges, bmax, vocab
+        )
+    return _ref.vntk_stacked_fused_logsoftmax_ref(
+        logits, nodes, constraint_ids, row_pointers, edges, bmax, vocab
     )
 
 

@@ -9,9 +9,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.vntk import NEG_INF, vntk_reference_scatter
+from repro.core.vntk import (
+    NEG_INF,
+    vntk_reference_scatter,
+    vntk_stacked_reference_scatter,
+)
 
-__all__ = ["vntk_ref", "vntk_fused_logsoftmax_ref", "embedding_bag_ref"]
+__all__ = [
+    "vntk_ref",
+    "vntk_fused_logsoftmax_ref",
+    "vntk_stacked_ref",
+    "vntk_stacked_fused_logsoftmax_ref",
+    "embedding_bag_ref",
+]
 
 
 def vntk_ref(log_probs, nodes, row_pointers, edges, bmax, vocab):
@@ -22,6 +32,22 @@ def vntk_ref(log_probs, nodes, row_pointers, edges, bmax, vocab):
 def vntk_fused_logsoftmax_ref(logits, nodes, row_pointers, edges, bmax, vocab):
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     return vntk_reference_scatter(lp, nodes, row_pointers, edges, bmax, vocab)
+
+
+def vntk_stacked_ref(log_probs, nodes, constraint_ids, row_pointers, edges,
+                     bmax, vocab):
+    """Stacked-store scatter oracle: one extra constraint-axis gather."""
+    return vntk_stacked_reference_scatter(
+        log_probs, nodes, constraint_ids, row_pointers, edges, bmax, vocab
+    )
+
+
+def vntk_stacked_fused_logsoftmax_ref(logits, nodes, constraint_ids,
+                                      row_pointers, edges, bmax, vocab):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return vntk_stacked_reference_scatter(
+        lp, nodes, constraint_ids, row_pointers, edges, bmax, vocab
+    )
 
 
 def embedding_bag_ref(table, indices, mode="sum"):

@@ -33,11 +33,68 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1.0e10
 
-__all__ = ["vntk_pallas", "vntk_fused_logsoftmax_pallas"]
+__all__ = [
+    "vntk_pallas",
+    "vntk_fused_logsoftmax_pallas",
+    "vntk_stacked_pallas",
+    "vntk_stacked_fused_logsoftmax_pallas",
+]
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+def _project_and_write(
+    rp_scratch,
+    edge_scratch,
+    logits_ref,
+    out_lp_ref,
+    out_next_ref,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    fused_logsoftmax: bool,
+):
+    """Phases 3+4 (+ optional fused log-softmax): shared by both DMA fronts."""
+    n_child = rp_scratch[:, 1] - rp_scratch[:, 0]  # (beam_tile,)
+
+    # ---- Phase 3+4: chunked sanitize + compare-broadcast projection ----
+    n_chunks = bmax_padded // slot_chunk
+    iota_slot = jax.lax.broadcasted_iota(jnp.int32, (beam_tile, slot_chunk), 1)
+    iota_v = jax.lax.broadcasted_iota(
+        jnp.int32, (beam_tile, slot_chunk, vocab), 2
+    )
+
+    def chunk_body(c, carry):
+        mask, nxt = carry
+        sl = edge_scratch[:, pl.ds(c * slot_chunk, slot_chunk), :]  # (beam_tile, slot_chunk, 2)
+        cols = sl[:, :, 0]
+        vals = sl[:, :, 1]
+        valid = (c * slot_chunk + iota_slot) < n_child[:, None]
+        hit = (cols[:, :, None] == iota_v) & valid[:, :, None]
+        mask = mask | jnp.any(hit, axis=1)
+        nxt = nxt + jnp.sum(
+            hit.astype(jnp.int32) * vals[:, :, None], axis=1, dtype=jnp.int32
+        )
+        return mask, nxt
+
+    mask0 = jnp.zeros((beam_tile, vocab), bool)
+    nxt0 = jnp.zeros((beam_tile, vocab), jnp.int32)
+    mask, nxt = jax.lax.fori_loop(0, n_chunks, chunk_body, (mask0, nxt0))
+
+    x = logits_ref[...]
+    if fused_logsoftmax:
+        xf = x.astype(jnp.float32)
+        m = jnp.max(xf, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(xf - m), axis=-1, keepdims=True))
+        lp = (xf - m - lse).astype(out_lp_ref.dtype)
+    else:
+        lp = x.astype(out_lp_ref.dtype)
+    out_lp_ref[...] = jnp.where(mask, lp, jnp.asarray(NEG_INF, out_lp_ref.dtype))
+    out_next_ref[...] = nxt
 
 
 def _vntk_body(
@@ -77,42 +134,60 @@ def _vntk_body(
             edges_hbm.at[pl.ds(0, bmax_padded)], edge_scratch.at[i], sem_edge
         ).wait()
 
-    n_child = rp_scratch[:, 1] - rp_scratch[:, 0]  # (beam_tile,)
-
-    # ---- Phase 3+4: chunked sanitize + compare-broadcast projection ----
-    n_chunks = bmax_padded // slot_chunk
-    iota_slot = jax.lax.broadcasted_iota(jnp.int32, (beam_tile, slot_chunk), 1)
-    iota_v = jax.lax.broadcasted_iota(
-        jnp.int32, (beam_tile, slot_chunk, vocab), 2
+    _project_and_write(
+        rp_scratch, edge_scratch, logits_ref, out_lp_ref, out_next_ref,
+        bmax_padded=bmax_padded, slot_chunk=slot_chunk, vocab=vocab,
+        beam_tile=beam_tile, fused_logsoftmax=fused_logsoftmax,
     )
 
-    def chunk_body(c, carry):
-        mask, nxt = carry
-        sl = edge_scratch[:, pl.ds(c * slot_chunk, slot_chunk), :]  # (beam_tile, slot_chunk, 2)
-        cols = sl[:, :, 0]
-        vals = sl[:, :, 1]
-        valid = (c * slot_chunk + iota_slot) < n_child[:, None]
-        hit = (cols[:, :, None] == iota_v) & valid[:, :, None]
-        mask = mask | jnp.any(hit, axis=1)
-        nxt = nxt + jnp.sum(
-            hit.astype(jnp.int32) * vals[:, :, None], axis=1, dtype=jnp.int32
+
+def _vntk_stacked_body(
+    nodes_ref,
+    cids_ref,
+    logits_ref,
+    rowptr_hbm,
+    edges_hbm,
+    out_lp_ref,
+    out_next_ref,
+    rp_scratch,
+    edge_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    fused_logsoftmax: bool,
+):
+    """Multi-constraint front end (DESIGN.md §4): the row-pointer and edge
+    DMAs index one extra leading constraint axis — ``rowptr (K, S+1)`` and
+    ``edges (K, E, 2)`` — by each beam's constraint id.  Everything after the
+    fetch is the shared single-matrix projection."""
+    for i in range(beam_tile):
+        cid = cids_ref[i]
+        cp = pltpu.make_async_copy(
+            rowptr_hbm.at[cid, pl.ds(nodes_ref[i], 2)], rp_scratch.at[i], sem_rp
         )
-        return mask, nxt
+        cp.start()
+        cp.wait()
+        start = rp_scratch[i, 0]
+        cp2 = pltpu.make_async_copy(
+            edges_hbm.at[cid, pl.ds(start, bmax_padded)],
+            edge_scratch.at[i],
+            sem_edge,
+        )
+        cp2.start()
+    for i in range(beam_tile):
+        pltpu.make_async_copy(
+            edges_hbm.at[0, pl.ds(0, bmax_padded)], edge_scratch.at[i], sem_edge
+        ).wait()
 
-    mask0 = jnp.zeros((beam_tile, vocab), bool)
-    nxt0 = jnp.zeros((beam_tile, vocab), jnp.int32)
-    mask, nxt = jax.lax.fori_loop(0, n_chunks, chunk_body, (mask0, nxt0))
-
-    x = logits_ref[...]
-    if fused_logsoftmax:
-        xf = x.astype(jnp.float32)
-        m = jnp.max(xf, axis=-1, keepdims=True)
-        lse = jnp.log(jnp.sum(jnp.exp(xf - m), axis=-1, keepdims=True))
-        lp = (xf - m - lse).astype(out_lp_ref.dtype)
-    else:
-        lp = x.astype(out_lp_ref.dtype)
-    out_lp_ref[...] = jnp.where(mask, lp, jnp.asarray(NEG_INF, out_lp_ref.dtype))
-    out_next_ref[...] = nxt
+    _project_and_write(
+        rp_scratch, edge_scratch, logits_ref, out_lp_ref, out_next_ref,
+        bmax_padded=bmax_padded, slot_chunk=slot_chunk, vocab=vocab,
+        beam_tile=beam_tile, fused_logsoftmax=fused_logsoftmax,
+    )
 
 
 def _vntk_call(
@@ -175,6 +250,68 @@ def _vntk_call(
     return out_lp, out_next
 
 
+def _vntk_stacked_call(
+    logits: jax.Array,  # (nb, V)
+    nodes: jax.Array,  # (nb,)
+    cids: jax.Array,  # (nb,)
+    row_pointers: jax.Array,  # (K, S+1)
+    edges: jax.Array,  # (K, E, 2) stacked per constraint set
+    bmax: int,
+    vocab: int,
+    *,
+    fused_logsoftmax: bool,
+    beam_tile: int = 8,
+    slot_chunk: int = 8,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+):
+    nb = nodes.shape[0]
+    beam_tile = min(beam_tile, nb)
+    while nb % beam_tile:
+        beam_tile -= 1
+    bmax_padded = _round_up(max(bmax, 1), slot_chunk)
+    if edges.shape[1] < bmax_padded:
+        raise ValueError("edges tensor smaller than one speculative burst")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (nb // beam_tile,)
+    kern = functools.partial(
+        _vntk_stacked_body,
+        bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk,
+        vocab=vocab,
+        beam_tile=beam_tile,
+        fused_logsoftmax=fused_logsoftmax,
+    )
+    out_lp, out_next = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((beam_tile,), lambda i: (i,)),
+            pl.BlockSpec((beam_tile,), lambda i: (i,)),
+            pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, vocab), out_dtype),
+            jax.ShapeDtypeStruct((nb, vocab), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((beam_tile, 2), jnp.int32),
+            pltpu.VMEM((beam_tile, bmax_padded, 2), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(nodes, cids, logits, row_pointers, edges)
+    return out_lp, out_next
+
+
 def vntk_pallas(
     log_probs: jax.Array,
     nodes: jax.Array,
@@ -214,6 +351,62 @@ def vntk_fused_logsoftmax_pallas(
     lp, nxt = _vntk_call(
         logits.reshape(-1, vocab),
         nodes.reshape(-1),
+        row_pointers,
+        edges,
+        bmax,
+        vocab,
+        fused_logsoftmax=True,
+        out_dtype=jnp.float32,
+        **kw,
+    )
+    return lp.reshape(batch_shape + (vocab,)), nxt.reshape(batch_shape + (vocab,))
+
+
+def vntk_stacked_pallas(
+    log_probs: jax.Array,
+    nodes: jax.Array,
+    constraint_ids: jax.Array,
+    row_pointers: jax.Array,  # (K, S+1)
+    edges: jax.Array,  # (K, E, 2)
+    bmax: int,
+    vocab: int,
+    **kw,
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 2 over a stacked constraint store, pre-normalized log-probs."""
+    batch_shape = nodes.shape
+    cids = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    lp, nxt = _vntk_stacked_call(
+        log_probs.reshape(-1, vocab),
+        nodes.reshape(-1),
+        cids.astype(jnp.int32),
+        row_pointers,
+        edges,
+        bmax,
+        vocab,
+        fused_logsoftmax=False,
+        out_dtype=log_probs.dtype,
+        **kw,
+    )
+    return lp.reshape(batch_shape + (vocab,)), nxt.reshape(batch_shape + (vocab,))
+
+
+def vntk_stacked_fused_logsoftmax_pallas(
+    logits: jax.Array,
+    nodes: jax.Array,
+    constraint_ids: jax.Array,
+    row_pointers: jax.Array,
+    edges: jax.Array,
+    bmax: int,
+    vocab: int,
+    **kw,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused LogSoftmax + stacked Alg. 2 masking in a single HBM pass."""
+    batch_shape = nodes.shape
+    cids = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    lp, nxt = _vntk_stacked_call(
+        logits.reshape(-1, vocab),
+        nodes.reshape(-1),
+        cids.astype(jnp.int32),
         row_pointers,
         edges,
         bmax,

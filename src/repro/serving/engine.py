@@ -6,6 +6,14 @@ over fixed-size batches (static shapes => no recompilation).  The
 whose sequence finished is immediately refilled from the queue, so the batch
 stays full under load (the "continuous batching" serving pattern, simplified
 to slot granularity).
+
+Multi-tenant retrieval mode (DESIGN.md §4): construct the engine with a
+``retriever`` (and optionally a ``registry``) and every request's
+``constraint_id`` rides through the queue into the shared batch — one
+constrained beam search serves rows under *different* business constraint
+sets simultaneously.  The registry's current store is re-read at every batch
+boundary, so a hot-swap takes effect on the next batch with zero
+recompilation (shapes and static metadata are swap-invariant).
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ class Request:
     rid: int
     prompt: np.ndarray  # (S,) int32
     n_tokens: int
+    constraint_id: int = 0  # which registry slot masks this request's SIDs
 
 
 class RequestQueue:
@@ -35,10 +44,13 @@ class RequestQueue:
         self._q: deque = deque()
         self._next = 0
 
-    def submit(self, prompt: np.ndarray, n_tokens: int) -> int:
+    def submit(self, prompt: np.ndarray, n_tokens: int,
+               constraint_id: int = 0) -> int:
         rid = self._next
         self._next += 1
-        self._q.append(Request(rid, np.asarray(prompt, np.int32), n_tokens))
+        self._q.append(
+            Request(rid, np.asarray(prompt, np.int32), n_tokens, constraint_id)
+        )
         return rid
 
     def pop(self) -> Optional[Request]:
@@ -50,11 +62,13 @@ class RequestQueue:
 
 class ServingEngine:
     def __init__(self, params, cfg: TransformerConfig, batch_size: int,
-                 max_len: int):
+                 max_len: int, *, retriever=None, registry=None):
         self.params = params
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_len = max_len
+        self.retriever = retriever  # GenerativeRetriever: SID serving mode
+        self.registry = registry  # ConstraintRegistry: hot-swappable store
         self._prefill = jax.jit(
             lambda p, t: transformer.prefill(p, t, cfg, max_len=max_len)
         )
@@ -82,9 +96,61 @@ class ServingEngine:
             out.append(tok)
         return np.asarray(jnp.concatenate(out, axis=1))
 
+    # -- constrained SID retrieval over a queue -------------------------------
+    def _serve_retrieval(self, queue: RequestQueue) -> dict:
+        """Drain the queue through the constrained retriever in shared batches.
+
+        Each batch mixes requests with different ``constraint_id``s; the
+        per-slot id vector rides into the stacked beam search, so every row's
+        SIDs are masked by its own constraint set.  The registry (when
+        present) is consulted once per batch — the step boundary at which a
+        hot-swapped store becomes visible.
+        """
+        results: dict[int, dict] = {}
+        S = self.max_len // 2  # fixed prompt width => static shapes
+        while len(queue):
+            batch = []
+            while len(batch) < self.batch_size and len(queue):
+                batch.append(queue.pop())
+            version = None
+            if self.registry is not None:
+                self.retriever.tm, version = self.registry.current()
+            # A plain single-matrix retriever serves every request under the
+            # one set: constraint ids stay host-side and must all be 0.
+            num_sets = getattr(self.retriever.tm, "num_sets", None)
+            hist = np.zeros((self.batch_size, S), np.int32)
+            cids = np.zeros(self.batch_size, np.int32)
+            for i, r in enumerate(batch):
+                hist[i, : min(r.prompt.shape[0], S)] = r.prompt[:S]
+                limit = num_sets if num_sets is not None else 1
+                if not 0 <= r.constraint_id < limit:
+                    raise ValueError(
+                        f"request {r.rid}: constraint_id {r.constraint_id} "
+                        f"outside [0, {limit})"
+                    )
+                cids[i] = r.constraint_id
+            beams, scores = self.retriever.retrieve(
+                hist, constraint_ids=cids if num_sets is not None else None
+            )
+            for i, r in enumerate(batch):
+                results[r.rid] = {
+                    "sids": beams[i],
+                    "scores": scores[i],
+                    "constraint_id": r.constraint_id,
+                    "store_version": version,
+                }
+        return results
+
     # -- continuous batching over a queue ------------------------------------
     def serve(self, queue: RequestQueue, max_steps: int = 10_000) -> dict:
-        """Run until the queue drains; returns {rid: generated tokens}."""
+        """Run until the queue drains.
+
+        Plain-LM mode returns {rid: generated token list}; retrieval mode
+        (engine built with a ``retriever``) returns {rid: {sids, scores,
+        constraint_id, store_version}}.
+        """
+        if self.retriever is not None:
+            return self._serve_retrieval(queue)
         results: dict[int, list] = {}
         active: list[Optional[Request]] = [None] * self.batch_size
         remaining = np.zeros(self.batch_size, np.int64)

@@ -5,10 +5,15 @@ the model once per request, then runs the constrained beam search of
 Algorithm 1 over SID tokens — the TransitionMatrix masks every step, so 100%
 of returned Semantic IDs are inside the restricted corpus (paper §5.4:
 "STATIC achieved 100% compliance").
+
+Multi-tenant mode (DESIGN.md §4): pass a stacked
+:class:`~repro.constraints.ConstraintStore` as ``tm`` and a per-request
+``constraint_ids`` vector to ``retrieve`` — each batch row is then decoded
+under its own business constraint set in the same jitted beam search.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +31,7 @@ class GenerativeRetriever:
         self,
         params,
         cfg: TransformerConfig,
-        tm: Optional[TransitionMatrix],
+        tm: Optional[Union[TransitionMatrix, "ConstraintStore"]],  # noqa: F821
         sid_length: int,
         sid_vocab: int,
         beam_size: int = 20,
@@ -41,14 +46,46 @@ class GenerativeRetriever:
         self.M = beam_size
         self.impl = impl
         self.fused = fused
+        # One jitted end-to-end retrieval step (prefill + L constrained beam
+        # steps).  The constraint index rides in as a pytree ARGUMENT, so a
+        # registry hot-swap (new leaf values, identical shapes + static
+        # metadata) reuses the compiled executable — zero recompilation.
+        # Jitting once here (not per call) also keeps the layer scans out of
+        # the per-request eager path, which used to recompile every batch.
+        self._retrieve_jit = jax.jit(self._retrieve_impl)
 
-    def retrieve(self, history: np.ndarray):
-        """history (B, S) int32 -> (sids (B, M, L), scores (B, M))."""
+    def retrieve(self, history: np.ndarray,
+                 constraint_ids: Optional[np.ndarray] = None):
+        """history (B, S) int32 -> (sids (B, M, L), scores (B, M)).
+
+        ``constraint_ids`` (B,) int32 selects each request's constraint set
+        from a stacked ConstraintStore held in ``self.tm``.
+        """
+        cids = None
+        if constraint_ids is not None:
+            cids_np = np.asarray(constraint_ids, np.int32)
+            num_sets = getattr(self.tm, "num_sets", None)
+            if num_sets is not None and (
+                cids_np.min() < 0 or cids_np.max() >= num_sets
+            ):
+                # an out-of-range id would be silently clamped by the stacked
+                # gather — i.e. served under the WRONG business constraint
+                raise ValueError(
+                    f"constraint_ids must be in [0, {num_sets}), got "
+                    f"range [{cids_np.min()}, {cids_np.max()}]"
+                )
+            cids = jnp.asarray(cids_np)
+        tokens, scores = self._retrieve_jit(
+            self.params, jnp.asarray(history), self.tm, cids
+        )
+        return np.asarray(tokens), np.asarray(scores)
+
+    def _retrieve_impl(self, params, history, tm, constraint_ids):
         B, S = history.shape
         M = self.M
         max_len = S + self.L + 1
         pre_logits, cache = transformer.prefill(
-            self.params, jnp.asarray(history), self.cfg, max_len=max_len
+            params, history, self.cfg, max_len=max_len
         )
         # tile the request cache across beams: (L, B, ...) -> (L, B*M, ...)
         def tile(a):
@@ -70,7 +107,7 @@ class GenerativeRetriever:
         def logits_fn(carry, last_tokens, step):
             c = carry
             toks = last_tokens.reshape(B * M, 1)
-            logits, c = transformer.decode_step(self.params, c, toks, self.cfg)
+            logits, c = transformer.decode_step(params, c, toks, self.cfg)
             return logits[:, 0, : self.V].reshape(B, M, self.V), c
 
         def gather_cache(c, beam_idx):
@@ -87,8 +124,9 @@ class GenerativeRetriever:
             )
 
         state, _ = beam_search(
-            logits_fn, cache, B, M, self.L, self.tm,
+            logits_fn, cache, B, M, self.L, tm,
             carry_gather_fn=gather_cache, impl=self.impl, fused=self.fused,
             first_logits=pre_logits[:, 0, : self.V],
+            constraint_ids=constraint_ids,
         )
-        return np.asarray(state.tokens), np.asarray(state.scores)
+        return state.tokens, state.scores

@@ -114,17 +114,28 @@ def test_sink_state_masks_everything(rng):
     assert np.all(np.asarray(nxt) == 0)
 
 
-def test_save_load_roundtrip(tmp_path, rng):
+@pytest.mark.parametrize("dense_d", [0, 1, 2])
+def test_save_load_roundtrip(tmp_path, rng, dense_d):
+    """Full roundtrip incl. the dense_d==0 dummy-array path (all-ones l0
+    mask, (1, 1) l1 tables) that ConstraintStore.save/load reuses."""
     sids = make_sids(rng, 100, 16, 4)
-    tm = TransitionMatrix.from_sids(sids, 16)
+    tm = TransitionMatrix.from_sids(sids, 16, dense_d=dense_d)
     path = str(tmp_path / "tm.npz")
     tm.save(path)
     tm2 = TransitionMatrix.load(path)
     assert tm2.level_bmax == tm.level_bmax
     assert tm2.n_states == tm.n_states
-    np.testing.assert_array_equal(np.asarray(tm.edges), np.asarray(tm2.edges))
-    lp = jnp.zeros((2, 16), jnp.float32)
+    assert tm2.dense_d == tm.dense_d
+    assert tm2.n_constraints == tm.n_constraints
+    for f in ("row_pointers", "edges", "l0_mask_packed", "l0_states",
+              "l1_mask_packed", "l1_states"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(tm, f)), np.asarray(getattr(tm2, f)), err_msg=f
+        )
+    lp = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
     nodes = jnp.ones((2,), jnp.int32)
-    a, _ = constrain_log_probs(lp, nodes, tm, 0)
-    b, _ = constrain_log_probs(lp, nodes, tm2, 0)
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for step in range(4):
+        a, an = constrain_log_probs(lp, nodes, tm, step)
+        b, bn = constrain_log_probs(lp, nodes, tm2, step)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(an), np.asarray(bn))

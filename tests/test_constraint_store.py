@@ -1,0 +1,378 @@
+"""ConstraintStore / ConstraintRegistry: stacked multi-tenant constraints.
+
+The load-bearing property (DESIGN.md §4): masking a batch through the stacked
+store with per-row constraint ids must be BIT-IDENTICAL, row for row, to
+masking each row through its own standalone TransitionMatrix — across the
+dense l0/l1 lookups and the sparse VNTK, on both the XLA and Pallas paths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.constraints import (
+    ConstraintRegistry,
+    ConstraintStore,
+    ItemCatalog,
+    category_allowlist,
+    freshness_window,
+)
+from repro.core import NEG_INF, TransitionMatrix, beam_search, constrain_log_probs
+from repro.core.constrained import constrained_decoding_step
+from repro.models import transformer
+from repro.serving.engine import RequestQueue, ServingEngine
+from repro.serving.generative_retrieval import GenerativeRetriever
+from conftest import make_sids
+
+V, L = 16, 4
+SET_SIZES = (40, 120, 300)
+
+
+def build_sets(rng, dense_d):
+    sid_sets = [make_sids(rng, n, V, L, clustered=True) for n in SET_SIZES]
+    mats = [TransitionMatrix.from_sids(s, V, dense_d=dense_d) for s in sid_sets]
+    return sid_sets, mats
+
+
+def walk_row(tm, prefix, step):
+    """Trie state reached by ``prefix[:step]`` under a standalone matrix."""
+    node = jnp.ones((1,), jnp.int32)
+    for t in range(step):
+        lp = jnp.zeros((1, V), jnp.float32)
+        _, nxt = constrain_log_probs(lp, node, tm, t)
+        node = nxt[jnp.arange(1), prefix[t : t + 1]]
+    return int(node[0])
+
+
+# ---------------------------------------------------------------------------
+# construction / validation
+# ---------------------------------------------------------------------------
+def test_from_matrices_validation(rng):
+    mats = [TransitionMatrix.from_sids(make_sids(rng, 20, V, L), V)]
+    other_vocab = TransitionMatrix.from_sids(make_sids(rng, 20, 8, L), 8)
+    with pytest.raises(ValueError, match="vocab"):
+        ConstraintStore.from_matrices(mats + [other_vocab])
+    other_dense = TransitionMatrix.from_sids(make_sids(rng, 20, V, L), V, dense_d=0)
+    with pytest.raises(ValueError, match="dense_d"):
+        ConstraintStore.from_matrices(mats + [other_dense])
+    with pytest.raises(ValueError, match="at least one"):
+        ConstraintStore.from_matrices([])
+
+
+def test_envelope_covers_members(rng):
+    _, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats, headroom=0.25)
+    assert store.num_sets == 3
+    assert store.n_states >= max(m.n_states for m in mats)
+    for l in range(L):
+        assert store.level_bmax[l] >= max(m.level_bmax[l] for m in mats)
+    assert store.row_pointers.shape == (3, store.n_states + 1)
+    assert store.edges.shape == (3, store.n_edges, 2)
+    np.testing.assert_array_equal(
+        np.asarray(store.member_n_constraints),
+        [m.n_constraints for m in mats],
+    )
+
+
+# ---------------------------------------------------------------------------
+# the acceptance cross-check: bit-identical vs standalone matrices
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dense_d", [0, 1, 2])
+def test_stacked_lookup_bit_identical_all_paths(rng, dense_d):
+    """Store + constraint_ids == per-row standalone matrix, bit for bit,
+    at every decode level (dense l0/l1 + VNTK) on XLA, Pallas and fused."""
+    sid_sets, mats = build_sets(rng, dense_d)
+    store = ConstraintStore.from_matrices(mats, headroom=0.3)
+    nb = 9
+    cids_np = np.array([0, 1, 2] * 3, np.int32)
+    cids = jnp.asarray(cids_np)
+    prefixes = np.stack(
+        [sid_sets[c][rng.integers(0, len(sid_sets[c]))] for c in cids_np]
+    ).astype(np.int32)
+
+    for step in range(L):
+        nodes = jnp.asarray(
+            np.array(
+                [walk_row(mats[c], prefixes[i], step)
+                 for i, c in enumerate(cids_np)],
+                np.int32,
+            )
+        )
+        lp = jnp.asarray(rng.normal(size=(nb, V)).astype(np.float32))
+        want_m = np.empty((nb, V), np.float32)
+        want_n = np.empty((nb, V), np.int32)
+        for i, c in enumerate(cids_np):
+            m_, n_ = constrain_log_probs(lp[i : i + 1], nodes[i : i + 1],
+                                         mats[c], step)
+            want_m[i], want_n[i] = np.asarray(m_)[0], np.asarray(n_)[0]
+
+        got_m, got_n = constrain_log_probs(lp, nodes, store, step,
+                                           constraint_ids=cids)
+        np.testing.assert_array_equal(np.asarray(got_m), want_m)
+        np.testing.assert_array_equal(np.asarray(got_n), want_n)
+
+        if step >= dense_d:  # sparse levels: also the kernel paths
+            pm, pn = constrain_log_probs(lp, nodes, store, step,
+                                         impl="pallas", constraint_ids=cids)
+            np.testing.assert_array_equal(np.asarray(pm), want_m)
+            np.testing.assert_array_equal(np.asarray(pn), want_n)
+            fm, fn = constrained_decoding_step(lp, nodes, store, step,
+                                               fused=True, constraint_ids=cids)
+            np.testing.assert_array_equal(np.asarray(fn), want_n)
+            # fused path normalizes first; masked positions must agree
+            ref_lp = jax.nn.log_softmax(lp, axis=-1)
+            valid = want_n > 0
+            np.testing.assert_allclose(
+                np.asarray(fm)[valid], np.asarray(ref_lp)[valid], rtol=1e-6
+            )
+
+
+def test_constraint_ids_guardrails(rng):
+    _, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats)
+    lp = jnp.zeros((2, V), jnp.float32)
+    nodes = jnp.ones((2,), jnp.int32)
+    with pytest.raises(ValueError, match="constraint_ids"):
+        constrain_log_probs(lp, nodes, store, 0)  # store without ids
+    with pytest.raises(ValueError, match="ConstraintStore"):
+        constrain_log_probs(lp, nodes, mats[0], 0,
+                            constraint_ids=jnp.zeros(2, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# member slicing / persistence / hot-swap
+# ---------------------------------------------------------------------------
+def test_member_lookup_matches_original(rng):
+    sid_sets, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats, headroom=0.5)
+    for k, tm in enumerate(mats):
+        member = store.member(k)
+        assert member.n_constraints == tm.n_constraints
+        lp = jnp.asarray(rng.normal(size=(4, V)).astype(np.float32))
+        nodes = jnp.ones((4,), jnp.int32)
+        for step in range(2):
+            a, an = constrain_log_probs(lp, nodes, tm, step)
+            b, bn = constrain_log_probs(lp, nodes, member, step)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(an), np.asarray(bn))
+            nodes = an[jnp.arange(4), jnp.argmax(a, axis=-1)]
+
+
+def test_store_save_load_roundtrip(tmp_path, rng):
+    _, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats, headroom=0.4)
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    loaded = ConstraintStore.load(path)
+    assert loaded.level_bmax == store.level_bmax
+    assert loaded.num_sets == store.num_sets
+    assert jax.tree_util.tree_structure(loaded) == jax.tree_util.tree_structure(store)
+    for a, b in zip(jax.tree.leaves(store), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_with_member_hot_swap(rng):
+    _, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats, headroom=0.5)
+    fresh_sids = make_sids(rng, 150, V, L, clustered=True)
+    fresh = TransitionMatrix.from_sids(fresh_sids, V, dense_d=2)
+    swapped = store.with_member(1, fresh)
+    # static metadata and tree structure are swap-invariant (=> no recompile)
+    assert jax.tree_util.tree_structure(swapped) == jax.tree_util.tree_structure(store)
+    assert swapped.level_bmax == store.level_bmax
+    assert swapped.n_states == store.n_states
+    # slot 1 now masks by the fresh set; other slots untouched
+    lp = jnp.asarray(rng.normal(size=(3, V)).astype(np.float32))
+    nodes = jnp.ones((3,), jnp.int32)
+    cids = jnp.asarray([0, 1, 2], jnp.int32)
+    got_m, _ = constrain_log_probs(lp, nodes, swapped, 0, constraint_ids=cids)
+    for i, tm in enumerate([mats[0], fresh, mats[2]]):
+        want_m, _ = constrain_log_probs(lp[i : i + 1], nodes[i : i + 1], tm, 0)
+        np.testing.assert_array_equal(np.asarray(got_m)[i], np.asarray(want_m)[0])
+
+
+def test_with_members_bulk_swap_matches_per_slot(rng):
+    """The registry refresh path (one-shot bulk replace) must land the same
+    store as chaining with_member per slot."""
+    _, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats, headroom=0.5)
+    fresh = [TransitionMatrix.from_sids(make_sids(rng, n, V, L, clustered=True),
+                                        V, dense_d=2)
+             for n in (50, 90, 200)]
+    bulk = store.with_members(fresh)
+    chained = store
+    for k, tm in enumerate(fresh):
+        chained = chained.with_member(k, tm)
+    for a, b in zip(jax.tree.leaves(bulk), jax.tree.leaves(chained)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="matrices"):
+        store.with_members(fresh[:2])
+
+
+def test_with_member_envelope_rejection(rng):
+    mats = [TransitionMatrix.from_sids(make_sids(rng, 30, V, L), V)
+            for _ in range(2)]
+    store = ConstraintStore.from_matrices(mats)  # no headroom
+    big = TransitionMatrix.from_sids(make_sids(rng, 2000, V, L), V)
+    with pytest.raises(ValueError, match="headroom"):
+        store.with_member(0, big)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def _catalog(rng, n=400):
+    return ItemCatalog(
+        sids=make_sids(rng, n, V, L, clustered=True),
+        age_days=rng.uniform(0, 60, size=n),
+        category=rng.integers(0, 4, size=n),
+    )
+
+
+def test_registry_slots_versions_and_predicates(rng):
+    cat = _catalog(rng)
+    reg = ConstraintRegistry(V, headroom=0.5)
+    assert reg.register("fresh", freshness_window(10)) == 0
+    assert reg.register("cats", category_allowlist(1, 2)) == 1
+    store = reg.build(cat)
+    assert reg.version == 1 and store.num_sets == 2
+    # members reflect the predicate-selected SID subsets
+    want_fresh = TransitionMatrix.from_sids(
+        cat.sids[cat.age_days <= 10], V, dense_d=2
+    )
+    lp = jnp.asarray(rng.normal(size=(1, V)).astype(np.float32))
+    nodes = jnp.ones((1,), jnp.int32)
+    a, _ = constrain_log_probs(lp, nodes, want_fresh, 0)
+    b, _ = constrain_log_probs(lp, nodes, store, 0,
+                               constraint_ids=jnp.zeros(1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # versioned swap
+    v = reg.swap(_catalog(rng, 420))
+    assert v == 2 and reg.current()[1] == 2
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("fresh", freshness_window(5))
+    with pytest.raises(RuntimeError, match="cannot register"):
+        reg.register("late", freshness_window(5))
+
+
+def test_registry_empty_predicate_rejected(rng):
+    reg = ConstraintRegistry(V)
+    reg.register("nothing", freshness_window(-1.0))
+    with pytest.raises(ValueError, match="zero items"):
+        reg.build(_catalog(rng))
+
+
+# ---------------------------------------------------------------------------
+# decode integration: beam search + engine + hot-swap without recompilation
+# ---------------------------------------------------------------------------
+def test_beam_search_mixed_constraints_compliance(rng):
+    sid_sets, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats, headroom=0.3)
+    B, M = 3, 5
+    fixed = jnp.asarray(rng.normal(size=(B, M, V)).astype(np.float32))
+    state, _ = beam_search(
+        lambda carry, last, step: (fixed, carry), None, B, M, L, store,
+        constraint_ids=jnp.arange(B, dtype=jnp.int32),
+    )
+    toks, scores = np.asarray(state.tokens), np.asarray(state.scores)
+    for b in range(B):
+        valid = {tuple(r) for r in sid_sets[b]}
+        for m in range(M):
+            if scores[b, m] > NEG_INF / 2:
+                assert tuple(toks[b, m]) in valid
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = smoke_config("stablelm-12b")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    return params, cfg
+
+
+def test_engine_mixed_queue_and_hot_swap_zero_recompile(small_lm, rng):
+    """Acceptance: 3+ constraint ids in one shared batch, 100% per-request
+    compliance, and a registry hot-swap mid-serve compiles NOTHING new."""
+    params, cfg = small_lm
+    Vm, Lm = cfg.vocab_size, 4
+    cat = ItemCatalog(
+        sids=make_sids(rng, 300, Vm, Lm, clustered=True),
+        age_days=rng.uniform(0, 60, size=300),
+        category=rng.integers(0, 4, size=300),
+    )
+    reg = ConstraintRegistry(Vm, headroom=0.5)
+    preds = {
+        reg.register("fresh_20", freshness_window(20)): freshness_window(20),
+        reg.register("fresh_45", freshness_window(45)): freshness_window(45),
+        reg.register("cat_0_1", category_allowlist(0, 1)): category_allowlist(0, 1),
+    }
+    store = reg.build(cat)
+    retr = GenerativeRetriever(params, cfg, store, sid_length=Lm,
+                               sid_vocab=Vm, beam_size=4)
+    eng = ServingEngine(params, cfg, batch_size=4, max_len=24,
+                        retriever=retr, registry=reg)
+
+    def check_compliance(results, catalog):
+        for r in results.values():
+            valid = {tuple(x)
+                     for x in catalog.sids[preds[r["constraint_id"]](catalog)]}
+            for m, sid in enumerate(r["sids"]):
+                if r["scores"][m] > NEG_INF / 2:
+                    assert tuple(sid) in valid, (r["constraint_id"], sid)
+
+    q = RequestQueue()
+    rids = [q.submit(rng.integers(0, Vm, (8,)), n_tokens=Lm, constraint_id=i % 3)
+            for i in range(7)]
+    results = eng.serve(q)
+    assert set(results) == set(rids) and len(q) == 0
+    assert {r["constraint_id"] for r in results.values()} == {0, 1, 2}
+    assert all(r["store_version"] == 1 for r in results.values())
+    check_compliance(results, cat)
+
+    # ---- hot-swap a refreshed snapshot, then count backend compiles ----
+    cat2 = ItemCatalog(
+        sids=make_sids(rng, 320, Vm, Lm, clustered=True),
+        age_days=rng.uniform(0, 60, size=320),
+        category=rng.integers(0, 4, size=320),
+    )
+    assert reg.swap(cat2) == 2
+    compiles = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda name, *a, **kw: compiles.append(name)
+        if "backend_compile" in name else None
+    )
+    for i in range(5):
+        q.submit(rng.integers(0, Vm, (8,)), n_tokens=Lm, constraint_id=i % 3)
+    results2 = eng.serve(q)
+    assert len(compiles) == 0, f"hot-swap recompiled: {compiles}"
+    assert all(r["store_version"] == 2 for r in results2.values())
+    check_compliance(results2, cat2)
+
+    # out-of-range constraint id is rejected, not silently clamped
+    q.submit(rng.integers(0, Vm, (8,)), n_tokens=Lm, constraint_id=99)
+    with pytest.raises(ValueError, match="constraint_id 99"):
+        eng.serve(q)
+
+
+def test_engine_retrieval_mode_single_matrix(small_lm, rng):
+    """Retrieval-mode serving with a plain TransitionMatrix (no store, no
+    registry) must work — constraint ids stay host-side and must be 0."""
+    params, cfg = small_lm
+    Vm, Lm = cfg.vocab_size, 3
+    sids = make_sids(rng, 60, Vm, Lm, clustered=True)
+    tm = TransitionMatrix.from_sids(sids, Vm)
+    retr = GenerativeRetriever(params, cfg, tm, sid_length=Lm, sid_vocab=Vm,
+                               beam_size=4)
+    eng = ServingEngine(params, cfg, batch_size=2, max_len=24, retriever=retr)
+    q = RequestQueue()
+    rids = [q.submit(rng.integers(0, Vm, (8,)), n_tokens=Lm) for _ in range(3)]
+    results = eng.serve(q)
+    assert set(results) == set(rids)
+    valid = {tuple(r) for r in sids}
+    for r in results.values():
+        for m, sid in enumerate(r["sids"]):
+            if r["scores"][m] > NEG_INF / 2:
+                assert tuple(sid) in valid
+    q.submit(rng.integers(0, Vm, (8,)), n_tokens=Lm, constraint_id=1)
+    with pytest.raises(ValueError, match="constraint_id 1"):
+        eng.serve(q)
