@@ -9,6 +9,7 @@ import numpy as np
 from repro.core import (
     NEG_INF, TransitionMatrix, beam_search, constrained_decoding_step,
 )
+from repro.decoding import DecodePolicy
 
 
 def main():
@@ -31,7 +32,12 @@ def main():
     n_valid = int((np.asarray(masked[0, 0]) > NEG_INF / 2).sum())
     print(f"step 0: {n_valid} valid first tokens out of {vocab}")
 
-    # 4. Full constrained beam search with a toy scorer.
+    # 4. Full constrained beam search under a DecodePolicy: the per-level
+    # plan binds dense bit-packed lookups for the first dense_d levels and
+    # the VNTK for the rest (swap in impl="pallas" / fused=True, a stacked
+    # ConstraintStore, or a §5.2 baseline without touching the loop).
+    policy = DecodePolicy.static(tm)
+    print(f"decode policy: {policy.describe()}")
     table = jnp.asarray(rng.normal(size=(length, vocab)).astype(np.float32))
 
     def logits_fn(carry, last, step):
@@ -39,7 +45,7 @@ def main():
         return jnp.broadcast_to(table[step], (B, M, vocab)), carry
 
     state, _ = beam_search(logits_fn, None, batch_size=2, beam_size=8,
-                           length=length, tm=tm)
+                           length=length, policy=policy)
     valid = {tuple(r) for r in sids}
     beams = np.asarray(state.tokens)
     ok = all(

@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core import TransitionMatrix
 from repro.core.vntk import NEG_INF
+from repro.decoding import DecodePolicy
 from repro.models import transformer
 from repro.pipelines import gr_model_config
 from repro.serving.engine import RequestQueue, ServingEngine
@@ -32,7 +33,9 @@ def main():
     print(f"built CSR constraint index for |C|=50k in {time.time()-t0:.2f}s "
           f"({tm.n_states} states)")
 
-    retriever = GenerativeRetriever(params, cfg, tm, sid_length=L,
+    policy = DecodePolicy.static(tm)
+    print(f"decode policy: {policy.describe()}")
+    retriever = GenerativeRetriever(params, cfg, policy, sid_length=L,
                                     sid_vocab=V, beam_size=M)
     B = 4
     hist = rng.integers(0, V, size=(B, 16)).astype(np.int32)

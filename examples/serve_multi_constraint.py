@@ -21,6 +21,7 @@ from repro.constraints import (
     freshness_window,
 )
 from repro.core.vntk import NEG_INF
+from repro.decoding import DecodePolicy
 from repro.models import transformer
 from repro.pipelines import gr_model_config
 from repro.serving.engine import RequestQueue, ServingEngine
@@ -68,7 +69,9 @@ def main():
           f"{store.nbytes()/1e6:.2f} MB stacked store "
           f"({time.time()-t0:.2f}s build)")
 
-    retriever = GenerativeRetriever(params, cfg, store, sid_length=L,
+    policy = DecodePolicy.stacked(store)
+    print(f"decode policy: {policy.describe()}")
+    retriever = GenerativeRetriever(params, cfg, policy, sid_length=L,
                                     sid_vocab=V, beam_size=M)
     engine = ServingEngine(params, cfg, batch_size=B, max_len=32,
                            retriever=retriever, registry=registry)

@@ -4,6 +4,7 @@ training/serving framework.
 
 Subpackages:
   core         the paper's contribution (trie->CSR, VNTK, Alg. 1, beam search)
+  decoding     DecodePolicy / ConstraintBackend: one compiled constraint API
   kernels      Pallas TPU kernels + XLA oracles
   models       transformer LM family / GNN / recsys / RQ-VAE
   configs      assigned architectures + registry

@@ -129,6 +129,11 @@ class ConstraintStore:
         )
 
     # ------------------------------------------------------------------
+    @property
+    def is_stacked(self) -> bool:
+        """K constraint sets on a leading axis; lookups need per-row ids."""
+        return True
+
     def bmax_for_step(self, step: int) -> int:
         """Envelope branch factor at ``step`` (max over members + headroom)."""
         return int(self.level_bmax[step])

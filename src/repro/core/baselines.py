@@ -1,8 +1,10 @@
 """Constrained-decoding baselines reproduced from the paper (§5.2).
 
-All baselines expose the same interface as STATIC's ``constrain_log_probs``:
-``mask(log_probs, prefix_tokens, step) -> masked_log_probs`` so the Table 1
-benchmark times them interchangeably.
+All baselines expose ``mask(log_probs, prefix_tokens, step) ->
+masked_log_probs`` plus ``mask_step(...) -> (masked_log_probs, next_states)``
+with vocab-aligned next states (DESIGN.md §3.1), so the Table 1 benchmark and
+the ``repro.decoding`` backend wrappers drive them interchangeably with
+STATIC inside the same ``DecodePolicy``-driven beam search.
 
   * ``CpuTrieBaseline``   — pointer-chasing host trie; every decode step does a
     device->host->device round-trip (``io_callback``), reproducing the
@@ -19,9 +21,7 @@ requires jax_enable_x64.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,29 @@ __all__ = [
 ]
 
 _MAX_L = 8  # key packing supports SIDs up to length 8 (paper: L=8)
+
+
+def _validate_sid_length(sid_length: int, who: str) -> None:
+    """Fail at construction, not deep inside a jitted mask, on long SIDs.
+
+    The packed-key layout (4x uint32 lanes, 2 tokens per lane) covers at most
+    ``_MAX_L`` positions; beyond that, in-jit scatters into the key buffer
+    are silently dropped and prefixes would alias."""
+    if sid_length > _MAX_L:
+        raise ValueError(
+            f"{who}: sid_length {sid_length} exceeds the key-packing limit "
+            f"_MAX_L={_MAX_L}; rebuild with shorter SIDs"
+        )
+
+
+def _alive_next(masked: jax.Array) -> jax.Array:
+    """Vocab-aligned next states for prefix-tracking baselines.
+
+    The baselines walk a 2-state automaton per candidate (prefix alive = 1,
+    sink = 0), so the DESIGN.md §3.1 convention — ``next[..., v] == 0`` iff
+    emitting ``v`` is invalid — makes Phase 4 of Alg. 1 the same single
+    gather as for STATIC backends."""
+    return (masked > NEG_INF / 2).astype(jnp.int32)
 
 
 def unconstrained_mask(log_probs, prefix_tokens, step):
@@ -88,6 +111,7 @@ class CpuTrieBaseline:
     def __init__(self, sids: np.ndarray, vocab_size: int):
         self.vocab_size = int(vocab_size)
         self.sid_length = int(sids.shape[1])
+        _validate_sid_length(self.sid_length, "CpuTrieBaseline")
         self.root: dict = {}
         for row in np.asarray(sids):
             node = self.root
@@ -121,6 +145,11 @@ class CpuTrieBaseline:
         )
         return jnp.where(mask, lp, NEG_INF).reshape(shape)
 
+    def mask_step(self, log_probs, prefix_tokens, step):
+        """(masked_lp, next_states), both vocab-aligned (DESIGN.md §3.1)."""
+        masked = self.mask(log_probs, prefix_tokens, step)
+        return masked, _alive_next(masked)
+
 
 # ---------------------------------------------------------------------------
 # PPV (DISC-PPV [32]): sorted flat SID array + parallel binary search
@@ -131,6 +160,7 @@ class PPVBaseline:
     def __init__(self, sids: np.ndarray, vocab_size: int, exact: bool = True,
                  top_k: int = 50):
         sids = np.unique(np.asarray(sids), axis=0)  # lexicographically sorted
+        _validate_sid_length(int(sids.shape[1]), "PPVBaseline")
         self.sids_sorted = jnp.asarray(sids.astype(np.int32))
         self.keys = jnp.asarray(_pack_keys_np(sids, sids.shape[1]))  # (N, 4)
         self.n = int(sids.shape[0])
@@ -187,6 +217,11 @@ class PPVBaseline:
         out = out.at[rows, top_idx].set(jnp.where(valid, top_lp, NEG_INF))
         return out.reshape(shape)
 
+    def mask_step(self, log_probs, prefix_tokens, step):
+        """(masked_lp, next_states), both vocab-aligned (DESIGN.md §3.1)."""
+        masked = self.mask(log_probs, prefix_tokens, step)
+        return masked, _alive_next(masked)
+
 
 # ---------------------------------------------------------------------------
 # Hash bitmap (Bloom-style, false positives)
@@ -219,6 +254,7 @@ class HashBitmapBaseline:
         sids = np.asarray(sids)
         self.vocab_size = int(vocab_size)
         self.sid_length = int(sids.shape[1])
+        _validate_sid_length(self.sid_length, "HashBitmapBaseline")
         self.log2_bits = int(log2_bits)
         nbits = 1 << log2_bits
         bitmap = np.zeros(nbits // 8, np.uint8)
@@ -261,6 +297,11 @@ class HashBitmapBaseline:
         word = self.bitmap[(h >> 3).astype(jnp.int32)]
         bit = (word >> (h & 7).astype(jnp.uint8)) & 1
         return jnp.where(bit.astype(bool), lp, NEG_INF).reshape(shape)
+
+    def mask_step(self, log_probs, prefix_tokens, step):
+        """(masked_lp, next_states), both vocab-aligned (DESIGN.md §3.1)."""
+        masked = self.mask(log_probs, prefix_tokens, step)
+        return masked, _alive_next(masked)
 
     def false_positive_rate(self, sids: np.ndarray, n_probe: int = 20000,
                             seed: int = 0) -> float:

@@ -1,9 +1,14 @@
 """Batched constrained beam search over Semantic IDs (paper §3.2 + Alg. 1).
 
 The search maintains, per batch element, the ``M`` best prefixes, their
-cumulative log-probabilities, and — when a :class:`TransitionMatrix` is
-supplied — the trie state of every beam (Phase 4 of Alg. 1 advances it with a
-single vocab-aligned gather).
+cumulative log-probabilities, and the per-beam constraint state: trie nodes
+for STATIC backends, the emitted-token history for the prefix-interface
+baselines (paper §5.2), and per-row constraint ids for the stacked store.
+Constraint enforcement is delegated to a
+:class:`~repro.decoding.DecodePolicy` — the same search loop drives STATIC
+(dense + VNTK, XLA/Pallas/fused), the multi-tenant store, and every Table 1
+baseline, which is what makes the paper's method comparison apples-to-apples
+end-to-end.
 
 The decoder is abstracted as ``logits_fn(carry, last_tokens, step)`` returning
 ``(logits, carry)`` so the same search drives toy scorers, full transformers
@@ -11,6 +16,10 @@ with KV caches, and the latency benchmarks.  Because each decode step
 specializes on the per-level max branch factor (a static constant, paper
 §4.4), the step loop is a Python loop over the fixed SID length L; every
 iteration is one fused XLA computation.
+
+Phase 4 (beam advance) is one gather for *every* backend: policies return
+vocab-aligned next states (DESIGN.md §3.1), with the baselines reporting a
+2-state alive/sink automaton in the same convention.
 """
 from __future__ import annotations
 
@@ -20,8 +29,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.constrained import constrained_decoding_step
-from repro.core.transition_matrix import TransitionMatrix
+from repro.core.types import LEGACY_UNSET as _LEGACY_UNSET
+from repro.core.types import Impl
 from repro.core.vntk import NEG_INF
 
 __all__ = ["BeamState", "beam_search", "recall_at_k"]
@@ -35,7 +44,7 @@ CarryGatherFn = Callable  # (carry, beam_idx (B, M) int32) -> carry
 class BeamState:
     tokens: jax.Array  # (B, M, L) int32 decoded prefixes
     scores: jax.Array  # (B, M) float32 cumulative log-probs
-    nodes: jax.Array  # (B, M) int32 trie states (ROOT when unconstrained)
+    nodes: jax.Array  # (B, M) int32 per-beam constraint states (ROOT init)
 
 
 def _init_state(batch: int, beams: int, length: int) -> BeamState:
@@ -53,25 +62,44 @@ def beam_search(
     batch_size: int,
     beam_size: int,
     length: int,
-    tm: Optional[TransitionMatrix],
+    policy=None,  # DecodePolicy | TransitionMatrix | ConstraintStore | None
     carry_gather_fn: Optional[CarryGatherFn] = None,
-    impl: str = "xla",
-    fused: bool = False,
+    impl: Optional[Impl] = _LEGACY_UNSET,  # deprecated: bake into the policy
+    fused: bool = _LEGACY_UNSET,  # deprecated: bake into the policy
     first_logits: Optional[jax.Array] = None,
     constraint_ids: Optional[jax.Array] = None,
+    tm=_LEGACY_UNSET,  # deprecated alias of ``policy``
 ) -> tuple[BeamState, object]:
     """Run L constrained decode steps; returns final beams sorted by score.
+
+    ``policy`` is the constraint plan (see :mod:`repro.decoding`); passing a
+    bare ``TransitionMatrix`` / ``ConstraintStore`` / baseline / ``None``
+    still works via :func:`~repro.decoding.as_policy`.
 
     ``first_logits`` (B, V) short-circuits step 0 with logits already
     available from the prefill's last position (a prefill pass ends exactly
     where SID decoding starts, so re-deriving them would waste one decode).
 
     ``constraint_ids`` (B,) int32 selects, per batch row, which member of a
-    stacked :class:`~repro.constraints.ConstraintStore` (passed as ``tm``)
-    masks that row — every beam of a row shares its request's constraint set,
-    so the ids broadcast over the beam axis and beam reordering never moves
-    them (DESIGN.md §4).
+    stacked :class:`~repro.constraints.ConstraintStore` masks that row —
+    every beam of a row shares its request's constraint set, so the ids
+    broadcast over the beam axis and beam reordering never moves them
+    (DESIGN.md §4).
     """
+    from repro.decoding.policy import coerce_policy  # lazy: import cycle
+
+    if tm is not _LEGACY_UNSET:
+        if policy is not None:
+            raise TypeError("pass either policy= or the legacy tm=, not both")
+        policy = tm
+    policy = coerce_policy(policy, impl, fused, caller="beam_search")
+    if policy.requires_constraint_ids and constraint_ids is None:
+        raise ValueError("ConstraintStore lookups need per-row constraint_ids")
+    if constraint_ids is not None and not policy.requires_constraint_ids:
+        raise ValueError(
+            "constraint_ids requires a stacked ConstraintStore policy"
+        )
+
     state = _init_state(batch_size, beam_size, length)
     B, M = batch_size, beam_size
     cids_bm = (
@@ -95,8 +123,9 @@ def beam_search(
         else:
             logits, carry = logits_fn(carry, last, step)  # (B, M, V)
         V = logits.shape[-1]
-        lp, next_dense = constrained_decoding_step(
-            logits, state.nodes, tm, step, impl=impl, fused=fused,
+        lp, next_dense = policy.step(
+            logits, state.nodes, step,
+            prefix_tokens=state.tokens if policy.needs_prefix else None,
             constraint_ids=cids_bm,
         )
         total = state.scores[:, :, None] + lp  # (B, M, V)
@@ -105,14 +134,12 @@ def beam_search(
         beam_idx = top_idx // V
         token = (top_idx % V).astype(jnp.int32)
 
-        # Phase 4: state update via gathers.
+        # Phase 4: state update via gathers — one gather for every backend
+        # (vocab-aligned next states, DESIGN.md §3.1).
         batch_ix = jnp.arange(B)[:, None]
         new_tokens = state.tokens[batch_ix, beam_idx]  # (B, M, L)
         new_tokens = new_tokens.at[:, :, step].set(token)
-        if tm is not None:
-            new_nodes = next_dense[batch_ix, beam_idx, token]
-        else:
-            new_nodes = state.nodes[batch_ix, beam_idx]
+        new_nodes = next_dense[batch_ix, beam_idx, token]
         state = BeamState(tokens=new_tokens, scores=top_scores, nodes=new_nodes)
         if carry_gather_fn is not None:
             carry = carry_gather_fn(carry, beam_idx)

@@ -2,9 +2,13 @@
 
 ``constrain_log_probs`` is the composable primitive: given normalized
 log-probs, the current trie states and the (static) decode step index, it
-returns masked log-probs plus the vocab-aligned next-state tensor.  It routes
-to the dense bit-packed lookup for steps < dense_d and to the VNTK for deeper
-steps, and can dispatch either the XLA formulation or the Pallas TPU kernel.
+returns masked log-probs plus the vocab-aligned next-state tensor.  Since the
+DecodePolicy redesign (DESIGN.md §5) the per-level routing — dense bit-packed
+lookup below ``dense_d``, VNTK (XLA or Pallas, optionally fused) above — lives
+in :mod:`repro.decoding.backends`; these functions are thin single-matrix /
+single-store conveniences over :class:`~repro.decoding.StaticBackend` and
+:class:`~repro.decoding.StackedStaticBackend` kept for composing custom
+decode loops and for the level-wise benchmarks.
 
 Multi-tenant serving (DESIGN.md §4): pass a stacked
 :class:`~repro.constraints.ConstraintStore` as ``tm`` together with a per-row
@@ -16,27 +20,32 @@ original.
 The full per-step driver (`constrained_decoding_step`) composes it with
 log-softmax normalization exactly as in the paper's Algorithm 1 Phases 1-2;
 Phases 3-4 (beam-search selection + state gather) live in
-``repro.core.beam_search``.
+``repro.core.beam_search``, which — like the serving stack — prefers a full
+:class:`~repro.decoding.DecodePolicy`.
 """
 from __future__ import annotations
 
-from typing import Literal, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dense_mask
 from repro.core.transition_matrix import TransitionMatrix
-from repro.core.vntk import NEG_INF, vntk_stacked_xla, vntk_xla
+from repro.core.types import Impl
+from repro.core.vntk import NEG_INF
 
-__all__ = ["constrain_log_probs", "constrained_decoding_step", "NEG_INF"]
+__all__ = ["constrain_log_probs", "constrained_decoding_step", "Impl",
+           "NEG_INF"]
 
-Impl = Literal["xla", "pallas"]
 
+def _backend(tm, impl: Impl, fused: bool = False):
+    """The StaticBackend / StackedStaticBackend for ``tm`` (lazy import —
+    repro.decoding imports this module for the Impl alias)."""
+    from repro.decoding.backends import StackedStaticBackend, StaticBackend
 
-def _is_stacked(tm) -> bool:
-    """ConstraintStore detection without importing repro.constraints (cycle)."""
-    return tm.row_pointers.ndim == 2
+    if tm.is_stacked:
+        return StackedStaticBackend(tm, impl=impl, fused=fused)
+    return StaticBackend(tm, impl=impl, fused=fused)
 
 
 def constrain_log_probs(
@@ -48,34 +57,11 @@ def constrain_log_probs(
     constraint_ids: Optional[jax.Array] = None,  # (...,) int32 set ids
 ) -> tuple[jax.Array, jax.Array]:
     """Phase 2 of Alg. 1: constraint masking. ``step`` must be static."""
-    if step < 0 or step >= tm.sid_length:
-        raise ValueError(f"step {step} outside [0, {tm.sid_length})")
-    if constraint_ids is not None and not _is_stacked(tm):
-        raise ValueError(
-            "constraint_ids requires a stacked ConstraintStore, got a "
-            "single TransitionMatrix"
-        )
-    if constraint_ids is None and _is_stacked(tm):
+    if constraint_ids is None and tm.is_stacked:
         raise ValueError("ConstraintStore lookups need per-row constraint_ids")
-    if step == 0 and tm.dense_d >= 1:
-        return dense_mask.dense_lookup_l0(
-            log_probs, tm, constraint_ids=constraint_ids
-        )
-    if step == 1 and tm.dense_d >= 2:
-        return dense_mask.dense_lookup_l1(
-            log_probs, nodes, tm, constraint_ids=constraint_ids
-        )
-    bmax = max(tm.bmax_for_step(step), 1)
-    if impl == "pallas":
-        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
-
-        return kernel_ops.vntk(
-            log_probs, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size,
-            constraint_ids=constraint_ids,
-        )
-    if constraint_ids is not None:
-        return vntk_stacked_xla(log_probs, nodes, tm, bmax, constraint_ids)
-    return vntk_xla(log_probs, nodes, tm, bmax)
+    return _backend(tm, impl).mask_step(
+        log_probs, nodes, step, constraint_ids=constraint_ids
+    )
 
 
 def constrained_decoding_step(
@@ -98,17 +84,20 @@ def constrained_decoding_step(
     """
     if tm is None:
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        nxt = jnp.zeros(logits.shape, jnp.int32)
+        # Vocab-aligned convention (DESIGN.md §3.1): next == 0 iff invalid.
+        # Unconstrained means every token is valid and beams stay parked at
+        # the root — all ones, matching UnconstrainedBackend, so a Phase-4
+        # gather composed on top of this step keeps beams alive.
+        nxt = jnp.ones(logits.shape, jnp.int32)
         return lp, nxt
-    if fused and not (step < tm.dense_d):
-        from repro.kernels import ops as kernel_ops
-
-        bmax = max(tm.bmax_for_step(step), 1)
-        return kernel_ops.vntk_fused_logsoftmax(
-            logits, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size,
-            constraint_ids=constraint_ids,
+    if constraint_ids is None and tm.is_stacked:
+        raise ValueError("ConstraintStore lookups need per-row constraint_ids")
+    backend = _backend(tm, impl, fused=fused)
+    if fused:
+        return backend.fused_step(
+            logits, nodes, step, constraint_ids=constraint_ids
         )
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    return constrain_log_probs(
-        lp, nodes, tm, step, impl=impl, constraint_ids=constraint_ids
+    return backend.mask_step(
+        lp, nodes, step, constraint_ids=constraint_ids
     )

@@ -14,7 +14,6 @@ replicated NamedShardings for use in pjit'd serve steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +91,11 @@ class TransitionMatrix:
         )
 
     # ------------------------------------------------------------------
+    @property
+    def is_stacked(self) -> bool:
+        """Single constraint set (a ConstraintStore reports ``True``)."""
+        return False
+
     def bmax_for_step(self, step: int) -> int:
         """Max branch factor consulted at decode step ``step`` (level index)."""
         return int(self.level_bmax[step])

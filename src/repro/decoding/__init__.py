@@ -1,0 +1,51 @@
+"""Decode-policy layer: one compiled constraint-backend API (DESIGN.md §5).
+
+The paper's Table 1 compares constraint methods *inside the same decoding
+loop*; this package is the repo's expression of that: every method — STATIC
+dense/VNTK (XLA, Pallas, fused), the stacked multi-tenant store, and the
+§5.2 baselines (CPU trie, DISC-PPV, hash bitmap, unconstrained) — is a
+:class:`ConstraintBackend`, and a :class:`DecodePolicy` binds a per-level
+backend plan that ``beam_search`` / ``GenerativeRetriever`` /
+``ServingEngine`` drive without knowing which method is underneath.
+
+Public surface:
+  * ``DecodePolicy``        — per-level backend plan; the object serving code
+                              passes around (a pytree: hot-swap safe).
+  * ``as_policy``           — legacy shim: matrix / store / baseline / None
+                              -> policy.
+  * ``ConstraintBackend``   — the protocol (mask_step + static metadata).
+  * Backends: ``StaticBackend``, ``StackedStaticBackend``,
+    ``CpuTrieBackend``, ``PPVBackend``, ``HashBitmapBackend``,
+    ``UnconstrainedBackend``.
+"""
+from repro.decoding.backends import (
+    ConstraintBackend,
+    CpuTrieBackend,
+    HashBitmapBackend,
+    Impl,
+    PPVBackend,
+    StackedStaticBackend,
+    StaticBackend,
+    UnconstrainedBackend,
+)
+from repro.decoding.policy import (
+    LEGACY_UNSET,
+    DecodePolicy,
+    as_policy,
+    coerce_policy,
+)
+
+__all__ = [
+    "ConstraintBackend",
+    "DecodePolicy",
+    "as_policy",
+    "coerce_policy",
+    "LEGACY_UNSET",
+    "Impl",
+    "StaticBackend",
+    "StackedStaticBackend",
+    "CpuTrieBackend",
+    "PPVBackend",
+    "HashBitmapBackend",
+    "UnconstrainedBackend",
+]

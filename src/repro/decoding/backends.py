@@ -1,0 +1,421 @@
+"""Constraint backends — one compiled interface for STATIC and the baselines.
+
+A *backend* is the unit a :class:`~repro.decoding.DecodePolicy` composes: it
+masks one decode step and reports, vocab-aligned, where each token emission
+would lead (DESIGN.md §3.1 convention) so Phase 4 of Algorithm 1 is a single
+gather ``next_dense[batch, beam, token]`` no matter which method produced the
+mask.  All state a backend needs at step ``t`` rides in the beam state the
+policy-driven ``beam_search`` already maintains:
+
+  * ``nodes``          — per-beam trie states (STATIC family);
+  * ``prefix_tokens``  — per-beam emitted-token history (the baselines'
+                         prefix interface, paper §5.2);
+  * ``constraint_ids`` — per-row constraint-set ids (stacked multi-tenant
+                         store, DESIGN.md §4).
+
+Backends are frozen pytree dataclasses: device tables are leaves (so jitted
+steps take them as *arguments*, never as constant-folded HLO literals) and
+configuration is static aux data (so it participates in jit specialization
+and is invariant under a registry hot-swap).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.constraints.store import ConstraintStore
+from repro.core import dense_mask
+from repro.core.baselines import (
+    CpuTrieBaseline,
+    HashBitmapBaseline,
+    PPVBaseline,
+)
+from repro.core.transition_matrix import TransitionMatrix
+from repro.core.types import Impl
+from repro.core.vntk import vntk_stacked_xla, vntk_xla
+
+__all__ = [
+    "Impl",
+    "Levels",
+    "ConstraintBackend",
+    "StaticBackend",
+    "StackedStaticBackend",
+    "CpuTrieBackend",
+    "PPVBackend",
+    "HashBitmapBackend",
+    "UnconstrainedBackend",
+]
+
+Levels = Literal["auto", "dense", "sparse"]
+
+
+@runtime_checkable
+class ConstraintBackend(Protocol):
+    """Protocol every constraint backend implements.
+
+    Static metadata (read by the policy, stable across hot-swaps):
+      * ``sid_length``       — SID length the backend was built for (``None``
+                               for the unconstrained lower bound);
+      * ``supports_fused``   — has a ``fused_step`` that folds the Phase-1
+                               log-softmax into the masking pass;
+      * ``supports_stacked`` — consumes per-row ``constraint_ids``;
+      * ``needs_prefix``     — consumes the emitted-token history instead of
+                               (or in addition to) trie states.
+    """
+
+    sid_length: Optional[int]
+    supports_fused: bool
+    supports_stacked: bool
+    needs_prefix: bool
+
+    def mask_step(
+        self,
+        log_probs: jax.Array,  # (..., V) normalized log-probs
+        nodes: jax.Array,  # (...,) int32 per-beam states
+        step: int,  # static decode level
+        *,
+        prefix_tokens: Optional[jax.Array] = None,  # (..., L) emitted history
+        constraint_ids: Optional[jax.Array] = None,  # (...,) int32 set ids
+    ) -> tuple[jax.Array, jax.Array]:
+        """Phase 2 of Alg. 1: returns ``(masked_lp, next_dense)``, both
+        vocab-aligned ``(..., V)``; ``next_dense[..., v] == 0`` iff emitting
+        ``v`` is invalid."""
+        ...
+
+
+def _check_step(step: int, sid_length: int) -> None:
+    if step < 0 or step >= sid_length:
+        raise ValueError(f"step {step} outside [0, {sid_length})")
+
+
+def _reject_constraint_ids(constraint_ids, who: str) -> None:
+    if constraint_ids is not None:
+        raise ValueError(
+            f"constraint_ids requires a stacked ConstraintStore backend, "
+            f"got {who}"
+        )
+
+
+def _dense_at(step: int, dense_d: int, levels: Levels, who: str) -> bool:
+    """Route ``step`` to the dense bit-packed tables or the sparse VNTK.
+
+    ``levels`` narrows which band this backend instance serves — a
+    :class:`~repro.decoding.DecodePolicy` plan composes a ``"dense"`` and a
+    ``"sparse"`` instance per-level instead of branching inside one opaque
+    function (the old ``constrain_log_probs`` hardcoded routing).
+    """
+    dense = step < dense_d
+    if levels == "dense" and not dense:
+        raise ValueError(
+            f"{who}(levels='dense') consulted at sparse step {step} "
+            f"(dense_d={dense_d}); fix the policy plan"
+        )
+    if levels == "sparse" and dense:
+        raise ValueError(
+            f"{who}(levels='sparse') consulted at dense step {step} "
+            f"(dense_d={dense_d}); fix the policy plan"
+        )
+    return dense
+
+
+# ---------------------------------------------------------------------------
+# STATIC (paper Alg. 1/2): single TransitionMatrix
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StaticBackend:
+    """STATIC constraint enforcement over one :class:`TransitionMatrix`.
+
+    ``levels`` selects the band this instance serves: ``"dense"`` (bit-packed
+    lookups for steps < ``dense_d``), ``"sparse"`` (VNTK for the rest), or
+    ``"auto"`` (route per step, the legacy one-backend-for-all-levels shape).
+    ``impl`` picks the XLA formulation or the Pallas TPU kernel for sparse
+    steps; ``fused`` opts into the fused masked-logsoftmax kernel.
+    """
+
+    tm: TransitionMatrix
+    impl: Impl = dataclasses.field(default="xla", metadata=dict(static=True))
+    fused: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    levels: Levels = dataclasses.field(
+        default="auto", metadata=dict(static=True)
+    )
+
+    supports_fused = True
+    supports_stacked = False
+    needs_prefix = False
+
+    @property
+    def sid_length(self) -> int:
+        return self.tm.sid_length
+
+    def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
+                  constraint_ids=None):
+        del prefix_tokens
+        _reject_constraint_ids(constraint_ids, "a single TransitionMatrix")
+        _check_step(step, self.tm.sid_length)
+        if _dense_at(step, self.tm.dense_d, self.levels, "StaticBackend"):
+            if step == 0:
+                return dense_mask.dense_lookup_l0(log_probs, self.tm)
+            return dense_mask.dense_lookup_l1(log_probs, nodes, self.tm)
+        bmax = max(self.tm.bmax_for_step(step), 1)
+        if self.impl == "pallas":
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            return kernel_ops.vntk(
+                log_probs, nodes, self.tm.row_pointers, self.tm.edges, bmax,
+                self.tm.vocab_size,
+            )
+        return vntk_xla(log_probs, nodes, self.tm, bmax)
+
+    def fused_step(self, logits, nodes, step, *, prefix_tokens=None,
+                   constraint_ids=None):
+        """Phases 1-2 in one HBM pass (sparse steps; dense steps fall back
+        to normalize-then-lookup, exactly as the legacy ``fused=True``)."""
+        del prefix_tokens
+        _reject_constraint_ids(constraint_ids, "a single TransitionMatrix")
+        _check_step(step, self.tm.sid_length)
+        if _dense_at(step, self.tm.dense_d, self.levels, "StaticBackend"):
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            return self.mask_step(lp, nodes, step)
+        from repro.kernels import ops as kernel_ops
+
+        bmax = max(self.tm.bmax_for_step(step), 1)
+        return kernel_ops.vntk_fused_logsoftmax(
+            logits, nodes, self.tm.row_pointers, self.tm.edges, bmax,
+            self.tm.vocab_size,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Stacked STATIC: ConstraintStore + per-row constraint ids (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StackedStaticBackend:
+    """STATIC over a stacked multi-tenant :class:`ConstraintStore`.
+
+    Every lookup gathers through one extra leading constraint axis indexed by
+    the per-row ``constraint_ids``.  The store rides as a pytree leaf with
+    swap-invariant static metadata, so a registry hot-swap never recompiles
+    a jitted step holding this backend.
+    """
+
+    store: ConstraintStore
+    impl: Impl = dataclasses.field(default="xla", metadata=dict(static=True))
+    fused: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    levels: Levels = dataclasses.field(
+        default="auto", metadata=dict(static=True)
+    )
+
+    supports_fused = True
+    supports_stacked = True
+    needs_prefix = False
+
+    @property
+    def sid_length(self) -> int:
+        return self.store.sid_length
+
+    @property
+    def num_sets(self) -> int:
+        return self.store.num_sets
+
+    def _require_ids(self, constraint_ids):
+        if constraint_ids is None:
+            raise ValueError(
+                "ConstraintStore lookups need per-row constraint_ids"
+            )
+
+    def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
+                  constraint_ids=None):
+        del prefix_tokens
+        self._require_ids(constraint_ids)
+        _check_step(step, self.store.sid_length)
+        if _dense_at(step, self.store.dense_d, self.levels,
+                     "StackedStaticBackend"):
+            if step == 0:
+                return dense_mask.dense_lookup_l0(
+                    log_probs, self.store, constraint_ids=constraint_ids
+                )
+            return dense_mask.dense_lookup_l1(
+                log_probs, nodes, self.store, constraint_ids=constraint_ids
+            )
+        bmax = max(self.store.bmax_for_step(step), 1)
+        if self.impl == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.vntk(
+                log_probs, nodes, self.store.row_pointers, self.store.edges,
+                bmax, self.store.vocab_size, constraint_ids=constraint_ids,
+            )
+        return vntk_stacked_xla(
+            log_probs, nodes, self.store, bmax, constraint_ids
+        )
+
+    def fused_step(self, logits, nodes, step, *, prefix_tokens=None,
+                   constraint_ids=None):
+        del prefix_tokens
+        self._require_ids(constraint_ids)
+        _check_step(step, self.store.sid_length)
+        if _dense_at(step, self.store.dense_d, self.levels,
+                     "StackedStaticBackend"):
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            return self.mask_step(lp, nodes, step,
+                                  constraint_ids=constraint_ids)
+        from repro.kernels import ops as kernel_ops
+
+        bmax = max(self.store.bmax_for_step(step), 1)
+        return kernel_ops.vntk_fused_logsoftmax(
+            logits, nodes, self.store.row_pointers, self.store.edges, bmax,
+            self.store.vocab_size, constraint_ids=constraint_ids,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Baseline backends: prefix-token interface (paper §5.2) behind the protocol
+# ---------------------------------------------------------------------------
+def _require_prefix(prefix_tokens, who: str):
+    if prefix_tokens is None:
+        raise ValueError(
+            f"{who} masks by emitted-token history; run it through a "
+            "DecodePolicy-driven beam_search (which carries the prefix in "
+            "its beam state) or pass prefix_tokens explicitly"
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CpuTrieBackend:
+    """Host pointer-chasing trie behind ``io_callback`` (Table 1 baseline).
+
+    The nested-dict trie lives on the host, so the baseline object is static
+    aux data rather than a pytree leaf; two jitted steps share a compilation
+    only when they hold the *same* baseline instance.
+    """
+
+    baseline: CpuTrieBaseline = dataclasses.field(metadata=dict(static=True))
+
+    supports_fused = False
+    supports_stacked = False
+    needs_prefix = True
+
+    @property
+    def sid_length(self) -> int:
+        return self.baseline.sid_length
+
+    def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
+                  constraint_ids=None):
+        del nodes
+        _reject_constraint_ids(constraint_ids, "CpuTrieBackend")
+        _require_prefix(prefix_tokens, "CpuTrieBackend")
+        _check_step(step, self.baseline.sid_length)
+        return self.baseline.mask_step(log_probs, prefix_tokens, step)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PPVBackend(PPVBaseline):
+    """DISC-PPV: parallel binary search over the sorted SID matrix.
+
+    Subclasses :class:`PPVBaseline` to reuse its (jit-traceable) search and
+    verification math, but re-declares the state as a frozen pytree: the
+    sorted SID/key tables are leaves so jitted policy steps take them as
+    runtime arguments (closing over them would constant-fold multi-MB tables
+    into the HLO — see ``benchmarks.common.jit_masker``'s war story).
+    """
+
+    sids_sorted: jax.Array  # (N, L) int32, lexicographically sorted
+    keys: jax.Array  # (N, 4) uint32 packed keys
+    n: int = dataclasses.field(metadata=dict(static=True))
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+    sid_length: int = dataclasses.field(metadata=dict(static=True))
+    exact: bool = dataclasses.field(metadata=dict(static=True))
+    top_k: int = dataclasses.field(metadata=dict(static=True))
+    n_search_steps: int = dataclasses.field(metadata=dict(static=True))
+
+    supports_fused = False
+    supports_stacked = False
+    needs_prefix = True
+
+    @classmethod
+    def from_baseline(cls, b: PPVBaseline) -> "PPVBackend":
+        return cls(
+            sids_sorted=b.sids_sorted, keys=b.keys, n=b.n,
+            vocab_size=b.vocab_size, sid_length=b.sid_length, exact=b.exact,
+            top_k=b.top_k, n_search_steps=b.n_search_steps,
+        )
+
+    @classmethod
+    def from_sids(cls, sids, vocab_size: int, *, exact: bool = True,
+                  top_k: int = 50) -> "PPVBackend":
+        return cls.from_baseline(
+            PPVBaseline(sids, vocab_size, exact=exact, top_k=top_k)
+        )
+
+    def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
+                  constraint_ids=None):
+        del nodes
+        _reject_constraint_ids(constraint_ids, "PPVBackend")
+        _require_prefix(prefix_tokens, "PPVBackend")
+        _check_step(step, self.sid_length)
+        return PPVBaseline.mask_step(self, log_probs, prefix_tokens, step)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HashBitmapBackend(HashBitmapBaseline):
+    """Bloom-style hashed-prefix bitmap (constant time, false positives).
+
+    Subclasses :class:`HashBitmapBaseline` for the hash/probe math; the
+    bitmap is a pytree leaf (see :class:`PPVBackend` for why)."""
+
+    bitmap: jax.Array  # (2^log2_bits / 8,) uint8
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+    sid_length: int = dataclasses.field(metadata=dict(static=True))
+    log2_bits: int = dataclasses.field(metadata=dict(static=True))
+
+    supports_fused = False
+    supports_stacked = False
+    needs_prefix = True
+
+    @classmethod
+    def from_baseline(cls, b: HashBitmapBaseline) -> "HashBitmapBackend":
+        return cls(bitmap=b.bitmap, vocab_size=b.vocab_size,
+                   sid_length=b.sid_length, log2_bits=b.log2_bits)
+
+    @classmethod
+    def from_sids(cls, sids, vocab_size: int, *,
+                  log2_bits: int = 27) -> "HashBitmapBackend":
+        return cls.from_baseline(
+            HashBitmapBaseline(sids, vocab_size, log2_bits=log2_bits)
+        )
+
+    def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
+                  constraint_ids=None):
+        del nodes
+        _reject_constraint_ids(constraint_ids, "HashBitmapBackend")
+        _require_prefix(prefix_tokens, "HashBitmapBackend")
+        _check_step(step, self.sid_length)
+        return HashBitmapBaseline.mask_step(
+            self, log_probs, prefix_tokens, step
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class UnconstrainedBackend:
+    """No validity check at all — the latency lower bound of Table 1."""
+
+    supports_fused = False
+    supports_stacked = False
+    needs_prefix = False
+    sid_length = None
+
+    def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
+                  constraint_ids=None):
+        del nodes, step, prefix_tokens
+        _reject_constraint_ids(constraint_ids, "UnconstrainedBackend")
+        # Every token is "valid"; beams stay parked at the root state.
+        return log_probs, jnp.ones(log_probs.shape, jnp.int32)

@@ -1,0 +1,356 @@
+"""DecodePolicy — a compiled per-level constraint plan for beam decoding.
+
+The policy is the single object the decoding stack passes around instead of
+the old ``(tm, impl, fused, constraint_ids)`` kwarg tunnel: it binds, at
+construction, which :mod:`~repro.decoding.backends` backend masks each decode
+level, and normalizes Phase 1 (log-softmax) unless the chosen backend fuses
+it.  ``beam_search``, ``GenerativeRetriever`` and ``ServingEngine`` all take
+a policy; the Table 1 harness times every backend through the same
+``policy.step`` entry point.
+
+The policy is a frozen pytree: backends are children (their device tables are
+jit *arguments*), the per-level plan is static aux data.  Swapping the
+underlying :class:`~repro.constraints.ConstraintStore` via
+:meth:`DecodePolicy.with_constraints` preserves tree structure and every
+static field, so jitted steps keyed on a policy never recompile across a
+registry hot-swap (DESIGN.md §4, asserted in ``tests/test_constraint_store``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.constraints.store import ConstraintStore
+from repro.core.baselines import (
+    CpuTrieBaseline,
+    HashBitmapBaseline,
+    PPVBaseline,
+)
+from repro.core.transition_matrix import TransitionMatrix
+from repro.core.types import LEGACY_UNSET
+from repro.decoding.backends import (
+    ConstraintBackend,
+    CpuTrieBackend,
+    HashBitmapBackend,
+    Impl,
+    PPVBackend,
+    StackedStaticBackend,
+    StaticBackend,
+    UnconstrainedBackend,
+)
+
+__all__ = ["DecodePolicy", "as_policy", "coerce_policy", "LEGACY_UNSET"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DecodePolicy:
+    """Per-level backend plan: ``backends[plan[step]]`` masks step ``step``.
+
+    Steps beyond ``len(plan)`` reuse the final entry (relevant only for the
+    unconstrained policy, whose length is unbounded).
+    """
+
+    backends: tuple  # of ConstraintBackend pytrees (children)
+    plan: tuple = dataclasses.field(metadata=dict(static=True))
+
+    def __post_init__(self):
+        if not self.backends:
+            raise ValueError("DecodePolicy needs at least one backend")
+        if not self.plan:
+            raise ValueError("DecodePolicy needs a non-empty plan")
+        bad = [i for i in self.plan if not 0 <= i < len(self.backends)]
+        if bad:
+            raise ValueError(f"plan references unknown backends: {bad}")
+
+    # -- static introspection (stable across hot-swaps) ---------------------
+    def backend_for(self, step: int) -> ConstraintBackend:
+        return self.backends[self.plan[min(step, len(self.plan) - 1)]]
+
+    @property
+    def sid_length(self) -> Optional[int]:
+        for b in self.backends:
+            if b.sid_length is not None:
+                return b.sid_length
+        return None
+
+    @property
+    def is_constrained(self) -> bool:
+        return any(
+            not isinstance(b, UnconstrainedBackend) for b in self.backends
+        )
+
+    @property
+    def requires_constraint_ids(self) -> bool:
+        return any(b.supports_stacked for b in self.backends)
+
+    @property
+    def needs_prefix(self) -> bool:
+        return any(b.needs_prefix for b in self.backends)
+
+    @property
+    def num_sets(self) -> Optional[int]:
+        """Member count of the stacked store, or ``None`` if single-tenant."""
+        for b in self.backends:
+            if b.supports_stacked:
+                return b.num_sets
+        return None
+
+    @property
+    def constraints(self):
+        """The underlying TransitionMatrix / ConstraintStore (or ``None``)."""
+        for b in self.backends:
+            if isinstance(b, StackedStaticBackend):
+                return b.store
+            if isinstance(b, StaticBackend):
+                return b.tm
+        return None
+
+    def describe(self) -> str:
+        """Human-readable per-level plan, e.g. for benchmark/CLI banners."""
+        def label(b):
+            if isinstance(b, (StaticBackend, StackedStaticBackend)):
+                kind = "dense-bitpack" if b.levels == "dense" else (
+                    f"vntk[{b.impl}{'+fused' if b.fused else ''}]")
+                if isinstance(b, StackedStaticBackend):
+                    return f"stacked(K={b.num_sets}):{kind}"
+                return kind
+            return type(b).__name__.replace("Backend", "").lower()
+
+        parts, start = [], 0
+        for s in range(1, len(self.plan) + 1):
+            if s == len(self.plan) or self.plan[s] != self.plan[start]:
+                band = (f"L{start}" if s - start == 1 else f"L{start}-{s - 1}")
+                parts.append(f"{band}:{label(self.backends[self.plan[start]])}")
+                start = s
+        return " ".join(parts)
+
+    # -- the per-step entry point ------------------------------------------
+    def step(
+        self,
+        logits: jax.Array,  # (..., V) raw logits (or log-probs, see below)
+        nodes: jax.Array,  # (...,) int32 per-beam states
+        step: int,  # static decode level
+        *,
+        prefix_tokens: Optional[jax.Array] = None,  # (..., L) history
+        constraint_ids: Optional[jax.Array] = None,  # (...,) set ids
+        normalized: bool = False,  # True: ``logits`` are already log-probs
+    ) -> tuple[jax.Array, jax.Array]:
+        """Phases 1-2 of Alg. 1 under this policy's backend for ``step``.
+
+        Returns ``(masked_log_probs, next_dense)``, both vocab-aligned; the
+        caller advances beams with one gather (Phase 4, DESIGN.md §3.1).
+        """
+        b = self.backend_for(step)
+        if b.needs_prefix and prefix_tokens is None:
+            raise ValueError(
+                f"{type(b).__name__} needs prefix_tokens at step {step}"
+            )
+        if constraint_ids is not None and not self.requires_constraint_ids:
+            raise ValueError(
+                "constraint_ids requires a stacked ConstraintStore policy"
+            )
+        # Per-level plans may mix stacked and single-set backends; ids are
+        # only handed to the backends that consume them.
+        cids = constraint_ids if b.supports_stacked else None
+        if not normalized and getattr(b, "fused", False) and b.supports_fused:
+            return b.fused_step(
+                logits, nodes, step, prefix_tokens=prefix_tokens,
+                constraint_ids=cids,
+            )
+        lp = logits if normalized else jax.nn.log_softmax(
+            logits.astype(jnp.float32), axis=-1
+        )
+        return b.mask_step(
+            lp, nodes, step, prefix_tokens=prefix_tokens,
+            constraint_ids=cids,
+        )
+
+    # -- hot-swap ----------------------------------------------------------
+    def with_constraints(self, obj) -> "DecodePolicy":
+        """A new policy with ``obj`` (matrix or store) in place of the old.
+
+        Only the backends whose kind matches ``obj`` are swapped — a
+        mixed per-level plan keeps its other backends untouched.  Tree
+        structure and static metadata are preserved — this is the registry
+        hot-swap path, so jitted steps never recompile across it.
+        """
+        stacked = bool(getattr(obj, "is_stacked", False))
+        swapped, hit = [], False
+        for b in self.backends:
+            if isinstance(b, StackedStaticBackend) and stacked:
+                swapped.append(dataclasses.replace(b, store=obj))
+                hit = True
+            elif (isinstance(b, StaticBackend) and not stacked
+                    and isinstance(obj, TransitionMatrix)):
+                swapped.append(dataclasses.replace(b, tm=obj))
+                hit = True
+            else:
+                swapped.append(b)
+        if not hit:
+            raise TypeError(
+                f"[{self.describe()}]: no swappable backend accepts "
+                f"{type(obj).__name__} (StackedStaticBackend hot-swaps a "
+                "ConstraintStore, StaticBackend a TransitionMatrix)"
+            )
+        return dataclasses.replace(self, backends=tuple(swapped))
+
+    # -- factories ---------------------------------------------------------
+    @classmethod
+    def static(cls, tm: TransitionMatrix, *, impl: Impl = "xla",
+               fused: bool = False) -> "DecodePolicy":
+        """STATIC plan: dense bit-packed lookups for levels < ``dense_d``,
+        VNTK (``impl``, optionally ``fused``) for the deeper levels."""
+        if getattr(tm, "is_stacked", False):
+            return cls.stacked(tm, impl=impl, fused=fused)
+        L, d = tm.sid_length, min(tm.dense_d, tm.sid_length)
+        if d == 0:
+            return cls(
+                backends=(StaticBackend(tm, impl=impl, fused=fused,
+                                        levels="sparse"),),
+                plan=(0,) * L,
+            )
+        if d >= L:
+            return cls(backends=(StaticBackend(tm, levels="dense"),),
+                       plan=(0,) * L)
+        return cls(
+            backends=(
+                StaticBackend(tm, levels="dense"),
+                StaticBackend(tm, impl=impl, fused=fused, levels="sparse"),
+            ),
+            plan=tuple(0 if s < d else 1 for s in range(L)),
+        )
+
+    @classmethod
+    def stacked(cls, store: ConstraintStore, *, impl: Impl = "xla",
+                fused: bool = False) -> "DecodePolicy":
+        """Multi-tenant STATIC plan over a stacked ConstraintStore."""
+        L, d = store.sid_length, min(store.dense_d, store.sid_length)
+        if d == 0:
+            return cls(
+                backends=(StackedStaticBackend(store, impl=impl, fused=fused,
+                                               levels="sparse"),),
+                plan=(0,) * L,
+            )
+        if d >= L:
+            return cls(backends=(StackedStaticBackend(store, levels="dense"),),
+                       plan=(0,) * L)
+        return cls(
+            backends=(
+                StackedStaticBackend(store, levels="dense"),
+                StackedStaticBackend(store, impl=impl, fused=fused,
+                                     levels="sparse"),
+            ),
+            plan=tuple(0 if s < d else 1 for s in range(L)),
+        )
+
+    @classmethod
+    def cpu_trie(cls, sids=None, vocab_size: Optional[int] = None, *,
+                 baseline: Optional[CpuTrieBaseline] = None) -> "DecodePolicy":
+        b = baseline or CpuTrieBaseline(sids, vocab_size)
+        return cls(backends=(CpuTrieBackend(b),), plan=(0,) * b.sid_length)
+
+    @classmethod
+    def ppv(cls, sids=None, vocab_size: Optional[int] = None, *,
+            exact: bool = True, top_k: int = 50,
+            baseline: Optional[PPVBaseline] = None) -> "DecodePolicy":
+        b = (PPVBackend.from_baseline(baseline) if baseline is not None
+             else PPVBackend.from_sids(sids, vocab_size, exact=exact,
+                                       top_k=top_k))
+        return cls(backends=(b,), plan=(0,) * b.sid_length)
+
+    @classmethod
+    def hash_bitmap(cls, sids=None, vocab_size: Optional[int] = None, *,
+                    log2_bits: int = 27,
+                    baseline: Optional[HashBitmapBaseline] = None,
+                    ) -> "DecodePolicy":
+        b = (HashBitmapBackend.from_baseline(baseline)
+             if baseline is not None
+             else HashBitmapBackend.from_sids(sids, vocab_size,
+                                              log2_bits=log2_bits))
+        return cls(backends=(b,), plan=(0,) * b.sid_length)
+
+    @classmethod
+    def unconstrained(cls) -> "DecodePolicy":
+        return cls(backends=(UnconstrainedBackend(),), plan=(0,))
+
+    @classmethod
+    def per_level(cls, backends: Sequence[ConstraintBackend],
+                  plan: Sequence[int]) -> "DecodePolicy":
+        """Escape hatch: an arbitrary per-level composition."""
+        return cls(backends=tuple(backends), plan=tuple(plan))
+
+
+def coerce_policy(policy, impl=LEGACY_UNSET, fused=LEGACY_UNSET, *,
+                  caller: str) -> DecodePolicy:
+    """One-release deprecation shim shared by ``beam_search`` and
+    ``GenerativeRetriever``.
+
+    Accepts a DecodePolicy or any legacy constraint carrier.  The deprecated
+    ``impl=``/``fused=`` kwargs are honored (with a DeprecationWarning) when
+    converting a legacy carrier, and rejected alongside a real policy — the
+    policy already fixed them at construction.
+    """
+    legacy = {}
+    if impl is not LEGACY_UNSET:
+        legacy["impl"] = impl
+    if fused is not LEGACY_UNSET:
+        legacy["fused"] = fused
+    if isinstance(policy, DecodePolicy):
+        if legacy:
+            raise TypeError(
+                "impl=/fused= cannot be combined with a DecodePolicy; bake "
+                "them into the policy (DecodePolicy.static(tm, impl=..., "
+                "fused=...))"
+            )
+        return policy
+    if legacy:
+        warnings.warn(
+            f"{caller}(impl=..., fused=...) is deprecated; pass a "
+            "DecodePolicy (e.g. DecodePolicy.static(tm, impl=..., "
+            "fused=...)) — the kwarg tunnel will be removed next release",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return as_policy(
+        policy,
+        impl=legacy.get("impl") or "xla",
+        fused=bool(legacy.get("fused") or False),
+    )
+
+
+def as_policy(obj, *, impl: Impl = "xla", fused: bool = False) -> DecodePolicy:
+    """Coerce legacy constraint carriers into a :class:`DecodePolicy`.
+
+    Accepts ``None`` (unconstrained), a ``TransitionMatrix``, a
+    ``ConstraintStore``, any of the §5.2 baseline objects, a single backend,
+    or an existing policy (returned as-is; ``impl``/``fused`` then must match
+    what the policy was built with — they are not re-applied).
+    """
+    if isinstance(obj, DecodePolicy):
+        return obj
+    if obj is None:
+        return DecodePolicy.unconstrained()
+    if isinstance(obj, ConstraintStore) or getattr(obj, "is_stacked", False):
+        return DecodePolicy.stacked(obj, impl=impl, fused=fused)
+    if isinstance(obj, TransitionMatrix):
+        return DecodePolicy.static(obj, impl=impl, fused=fused)
+    if isinstance(obj, CpuTrieBaseline):
+        return DecodePolicy.cpu_trie(baseline=obj)
+    if isinstance(obj, PPVBaseline) and not isinstance(obj, PPVBackend):
+        return DecodePolicy.ppv(baseline=obj)
+    if isinstance(obj, HashBitmapBaseline) and not isinstance(
+            obj, HashBitmapBackend):
+        return DecodePolicy.hash_bitmap(baseline=obj)
+    if isinstance(obj, ConstraintBackend):
+        length = obj.sid_length or 1
+        return DecodePolicy(backends=(obj,), plan=(0,) * length)
+    raise TypeError(
+        f"cannot build a DecodePolicy from {type(obj).__name__}; pass a "
+        "DecodePolicy, TransitionMatrix, ConstraintStore, baseline, backend, "
+        "or None"
+    )

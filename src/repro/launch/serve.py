@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core import TransitionMatrix
 from repro.core.vntk import NEG_INF
+from repro.decoding import DecodePolicy
 from repro.models import transformer
 from repro.pipelines import gr_model_config
 from repro.serving.generative_retrieval import GenerativeRetriever
@@ -27,6 +28,10 @@ def main():
     ap.add_argument("--beam", type=int, default=8)
     ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--unconstrained", action="store_true")
+    ap.add_argument("--impl", choices=["xla", "pallas"], default="xla",
+                    help="VNTK formulation for sparse decode levels")
+    ap.add_argument("--fused", action="store_true",
+                    help="fuse Phase-1 log-softmax into the masking kernel")
     ap.add_argument("--num-constraint-sets", type=int, default=0, metavar="K",
                     help="also build K synthetic business-constraint sets via "
                          "the ConstraintRegistry and report the stacked "
@@ -39,12 +44,14 @@ def main():
     params = transformer.init_params(cfg, jax.random.key(0))
     sids = rng.integers(0, args.vocab, size=(args.constraints, args.sid_length))
     tm = None
+    policy = DecodePolicy.unconstrained()
     if not args.unconstrained:
         t0 = time.time()
         tm = TransitionMatrix.from_sids(sids, args.vocab, dense_d=2)
+        policy = DecodePolicy.static(tm, impl=args.impl, fused=args.fused)
         print(f"constraint index: {tm.n_states} states "
-              f"({time.time()-t0:.2f}s build)")
-    r = GenerativeRetriever(params, cfg, tm, args.sid_length, args.vocab,
+              f"({time.time()-t0:.2f}s build); policy {policy.describe()}")
+    r = GenerativeRetriever(params, cfg, policy, args.sid_length, args.vocab,
                             beam_size=args.beam)
     hist = rng.integers(0, args.vocab, (args.batch, 16)).astype(np.int32)
     beams, scores = r.retrieve(hist)  # compile
@@ -83,7 +90,9 @@ def main():
         print(f"  stacked store {store.nbytes()/1e6:.2f} MB vs single matrix "
               f"{tm.nbytes()/1e6:.2f} MB "
               f"({store.nbytes()/max(tm.nbytes(),1):.1f}x for {K} tenants)")
-        r_mc = GenerativeRetriever(params, cfg, store, args.sid_length,
+        mc_policy = DecodePolicy.stacked(store, impl=args.impl,
+                                         fused=args.fused)
+        r_mc = GenerativeRetriever(params, cfg, mc_policy, args.sid_length,
                                    args.vocab, beam_size=args.beam)
         cids = np.arange(args.batch, dtype=np.int32) % K
         beams_mc, scores_mc = r_mc.retrieve(hist, constraint_ids=cids)

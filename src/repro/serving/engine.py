@@ -11,15 +11,17 @@ Multi-tenant retrieval mode (DESIGN.md §4): construct the engine with a
 ``retriever`` (and optionally a ``registry``) and every request's
 ``constraint_id`` rides through the queue into the shared batch — one
 constrained beam search serves rows under *different* business constraint
-sets simultaneously.  The registry's current store is re-read at every batch
-boundary, so a hot-swap takes effect on the next batch with zero
-recompilation (shapes and static metadata are swap-invariant).
+sets simultaneously.  The retriever's constraint method is bound by its
+:class:`~repro.decoding.DecodePolicy`; the registry's current store is
+re-read at every batch boundary and installed via
+``retriever.set_constraints``, so a hot-swap takes effect on the next batch
+with zero recompilation (shapes and static metadata are swap-invariant).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -114,10 +116,13 @@ class ServingEngine:
                 batch.append(queue.pop())
             version = None
             if self.registry is not None:
-                self.retriever.tm, version = self.registry.current()
+                store, version = self.registry.current()
+                # hot-swap path: only policy pytree leaves change, so the
+                # retriever's jitted step is reused without recompiling
+                self.retriever.set_constraints(store)
             # A plain single-matrix retriever serves every request under the
             # one set: constraint ids stay host-side and must all be 0.
-            num_sets = getattr(self.retriever.tm, "num_sets", None)
+            num_sets = self.retriever.num_sets
             hist = np.zeros((self.batch_size, S), np.int32)
             cids = np.zeros(self.batch_size, np.int32)
             for i, r in enumerate(batch):

@@ -2,25 +2,31 @@
 
 ``GenerativeRetriever.retrieve`` takes user-history token sequences, prefills
 the model once per request, then runs the constrained beam search of
-Algorithm 1 over SID tokens — the TransitionMatrix masks every step, so 100%
-of returned Semantic IDs are inside the restricted corpus (paper §5.4:
-"STATIC achieved 100% compliance").
+Algorithm 1 over SID tokens.  Which constraint method masks each decode level
+is bound by a :class:`~repro.decoding.DecodePolicy` — the paper's STATIC
+matrix (100% compliance, §5.4), the stacked multi-tenant store, or any §5.2
+baseline all serve through this same jitted path.
 
-Multi-tenant mode (DESIGN.md §4): pass a stacked
-:class:`~repro.constraints.ConstraintStore` as ``tm`` and a per-request
-``constraint_ids`` vector to ``retrieve`` — each batch row is then decoded
-under its own business constraint set in the same jitted beam search.
+Multi-tenant mode (DESIGN.md §4): build the retriever with a stacked policy
+(``DecodePolicy.stacked(store)`` — or just pass the ConstraintStore) and a
+per-request ``constraint_ids`` vector to ``retrieve`` — each batch row is
+then decoded under its own business constraint set in the same jitted beam
+search.  The policy rides into jit as a pytree ARGUMENT with swap-invariant
+static metadata, so a registry hot-swap (``set_constraints``) never
+recompiles.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TransformerConfig
-from repro.core import TransitionMatrix, beam_search
+from repro.core import beam_search
+from repro.core.types import LEGACY_UNSET as _LEGACY_UNSET
+from repro.decoding import coerce_policy
 from repro.models import transformer
 
 __all__ = ["GenerativeRetriever"]
@@ -31,40 +37,73 @@ class GenerativeRetriever:
         self,
         params,
         cfg: TransformerConfig,
-        tm: Optional[Union[TransitionMatrix, "ConstraintStore"]],  # noqa: F821
-        sid_length: int,
-        sid_vocab: int,
+        policy=None,  # DecodePolicy | TransitionMatrix | ConstraintStore | None
+        sid_length: int = None,
+        sid_vocab: int = None,
         beam_size: int = 20,
-        impl: str = "xla",
-        fused: bool = False,
+        impl=_LEGACY_UNSET,  # deprecated: bake into the policy
+        fused=_LEGACY_UNSET,  # deprecated: bake into the policy
+        tm=_LEGACY_UNSET,  # deprecated keyword alias of ``policy``
     ):
         self.params = params
         self.cfg = cfg
-        self.tm = tm
+        if tm is not _LEGACY_UNSET:
+            if policy is not None:
+                raise TypeError(
+                    "pass either policy= or the legacy tm=, not both"
+                )
+            policy = tm
+        if sid_length is None or sid_vocab is None:
+            raise TypeError("sid_length and sid_vocab are required")
+        self.policy = coerce_policy(
+            policy, impl, fused, caller="GenerativeRetriever"
+        )
         self.L = sid_length
         self.V = sid_vocab
         self.M = beam_size
-        self.impl = impl
-        self.fused = fused
         # One jitted end-to-end retrieval step (prefill + L constrained beam
-        # steps).  The constraint index rides in as a pytree ARGUMENT, so a
-        # registry hot-swap (new leaf values, identical shapes + static
-        # metadata) reuses the compiled executable — zero recompilation.
-        # Jitting once here (not per call) also keeps the layer scans out of
-        # the per-request eager path, which used to recompile every batch.
+        # steps).  The policy rides in as a pytree ARGUMENT, so a registry
+        # hot-swap (new leaf values, identical shapes + static metadata)
+        # reuses the compiled executable — zero recompilation.  Jitting once
+        # here (not per call) also keeps the layer scans out of the
+        # per-request eager path, which used to recompile every batch.
         self._retrieve_jit = jax.jit(self._retrieve_impl)
 
+    # -- constraint plumbing -------------------------------------------------
+    @property
+    def num_sets(self) -> Optional[int]:
+        """Stacked-store member count, or None when single-tenant."""
+        return self.policy.num_sets
+
+    def set_constraints(self, obj) -> None:
+        """Install a refreshed matrix/store (the registry hot-swap path).
+
+        Replaces only pytree leaves — shapes and static metadata are
+        envelope-invariant — so the jitted retrieve step is reused as-is.
+        """
+        self.policy = self.policy.with_constraints(obj)
+
+    @property
+    def tm(self):
+        """Deprecated alias: the underlying TransitionMatrix / store."""
+        return self.policy.constraints
+
+    @tm.setter
+    def tm(self, obj) -> None:
+        self.set_constraints(obj)
+
+    # -- serving -------------------------------------------------------------
     def retrieve(self, history: np.ndarray,
                  constraint_ids: Optional[np.ndarray] = None):
         """history (B, S) int32 -> (sids (B, M, L), scores (B, M)).
 
         ``constraint_ids`` (B,) int32 selects each request's constraint set
-        from a stacked ConstraintStore held in ``self.tm``.
+        from the stacked ConstraintStore bound in ``self.policy``.
         """
         cids = None
         if constraint_ids is not None:
             cids_np = np.asarray(constraint_ids, np.int32)
-            num_sets = getattr(self.tm, "num_sets", None)
+            num_sets = self.num_sets
             if num_sets is not None and (
                 cids_np.min() < 0 or cids_np.max() >= num_sets
             ):
@@ -76,11 +115,11 @@ class GenerativeRetriever:
                 )
             cids = jnp.asarray(cids_np)
         tokens, scores = self._retrieve_jit(
-            self.params, jnp.asarray(history), self.tm, cids
+            self.params, jnp.asarray(history), self.policy, cids
         )
         return np.asarray(tokens), np.asarray(scores)
 
-    def _retrieve_impl(self, params, history, tm, constraint_ids):
+    def _retrieve_impl(self, params, history, policy, constraint_ids):
         B, S = history.shape
         M = self.M
         max_len = S + self.L + 1
@@ -124,8 +163,8 @@ class GenerativeRetriever:
             )
 
         state, _ = beam_search(
-            logits_fn, cache, B, M, self.L, tm,
-            carry_gather_fn=gather_cache, impl=self.impl, fused=self.fused,
+            logits_fn, cache, B, M, self.L, policy,
+            carry_gather_fn=gather_cache,
             first_logits=pre_logits[:, 0, : self.V],
             constraint_ids=constraint_ids,
         )

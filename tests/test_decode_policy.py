@@ -1,0 +1,304 @@
+"""DecodePolicy: one compiled constraint-backend API (DESIGN.md §5).
+
+The load-bearing property of the redesign: every constraint method — STATIC
+dense+VNTK on XLA / Pallas / fused, the stacked multi-tenant store, and the
+§5.2 baselines — runs through the *same* policy-driven ``beam_search`` and,
+when the method is exact, returns identical top-M SIDs and scores on a
+shared synthetic trie.  Plus 100% corpus compliance (paper §5.4) for every
+constrained backend, and the legacy kwarg-tunnel deprecation shim.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constraints import ConstraintStore
+from repro.core import NEG_INF, TransitionMatrix, beam_search
+from repro.core.baselines import CpuTrieBaseline, PPVBaseline
+from repro.decoding import (
+    DecodePolicy,
+    PPVBackend,
+    StackedStaticBackend,
+    StaticBackend,
+    UnconstrainedBackend,
+    as_policy,
+)
+from conftest import make_sids
+
+V, L, N = 16, 4, 120
+B, M = 3, 8
+
+
+@pytest.fixture(scope="module")
+def shared():
+    """One synthetic trie + step-dependent toy scorer for every policy."""
+    rng = np.random.default_rng(7)
+    sids = np.unique(make_sids(rng, N, V, L, clustered=True), axis=0)
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=2)
+    table = jnp.asarray(rng.normal(size=(L, V)).astype(np.float32))
+    return sids, tm, table
+
+
+def run_policy(policy, table, batch=B, beams=M, cids=None):
+    def logits_fn(carry, last, step):
+        b, m = last.shape
+        return jnp.broadcast_to(table[step], (b, m, V)), carry
+
+    state, _ = beam_search(
+        logits_fn, None, batch, beams, L, policy, constraint_ids=cids
+    )
+    return np.asarray(state.tokens), np.asarray(state.scores)
+
+
+def make_policy(name, sids, tm):
+    if name == "dense_vntk_xla":
+        return DecodePolicy.static(tm)
+    if name == "vntk_pallas":
+        return DecodePolicy.static(tm, impl="pallas")
+    if name == "fused":
+        return DecodePolicy.static(tm, fused=True)
+    if name == "dense_d0":
+        return DecodePolicy.static(
+            TransitionMatrix.from_sids(sids, V, dense_d=0)
+        )
+    if name == "dense_d1":
+        return DecodePolicy.static(
+            TransitionMatrix.from_sids(sids, V, dense_d=1)
+        )
+    if name == "ppv_exact":
+        return DecodePolicy.ppv(sids, V, exact=True)
+    if name == "ppv_approx":
+        # top_k >= V verifies every logit => exact despite the approx path
+        return DecodePolicy.ppv(sids, V, exact=False, top_k=V)
+    if name == "cpu_trie":
+        return DecodePolicy.cpu_trie(sids, V)
+    if name == "hash_bitmap":
+        # 2^22 bits vs ~1e3 probed prefixes: FP-free at this corpus scale
+        return DecodePolicy.hash_bitmap(sids, V, log2_bits=22)
+    raise AssertionError(name)
+
+
+ALL_EXACT = ["dense_vntk_xla", "vntk_pallas", "fused", "dense_d0", "dense_d1",
+             "ppv_exact", "ppv_approx", "cpu_trie", "hash_bitmap"]
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence: identical top-M SIDs and scores
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_EXACT)
+def test_cross_backend_equivalence(shared, name):
+    sids, tm, table = shared
+    want_tokens, want_scores = run_policy(DecodePolicy.static(tm), table)
+    got_tokens, got_scores = run_policy(make_policy(name, sids, tm), table)
+    np.testing.assert_array_equal(got_tokens, want_tokens, err_msg=name)
+    np.testing.assert_allclose(got_scores, want_scores, rtol=1e-5,
+                               err_msg=name)
+
+
+def test_stacked_equivalence_per_row(shared, rng):
+    """A K=3 store with per-row ids == each row under its standalone matrix."""
+    sids, tm, table = shared
+    sid_sets = [sids] + [
+        np.unique(make_sids(rng, n, V, L, clustered=True), axis=0)
+        for n in (60, 200)
+    ]
+    mats = [TransitionMatrix.from_sids(s, V, dense_d=2) for s in sid_sets]
+    store = ConstraintStore.from_matrices(mats, headroom=0.25)
+    cids = np.arange(3, dtype=np.int32)
+    got_tokens, got_scores = run_policy(
+        DecodePolicy.stacked(store), table, cids=jnp.asarray(cids)
+    )
+    for row, tm_row in enumerate(mats):
+        want_tokens, want_scores = run_policy(
+            DecodePolicy.static(tm_row), table, batch=1
+        )
+        np.testing.assert_array_equal(got_tokens[row], want_tokens[0])
+        np.testing.assert_allclose(got_scores[row], want_scores[0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 100% corpus compliance (paper §5.4) under the real beam search
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_EXACT)
+def test_compliance_all_constrained_backends(shared, name):
+    sids, tm, table = shared
+    tokens, scores = run_policy(make_policy(name, sids, tm), table)
+    valid = {tuple(r) for r in sids}
+    for b in range(B):
+        for m in range(M):
+            if scores[b, m] > NEG_INF / 2:
+                assert tuple(tokens[b, m]) in valid, (name, tokens[b, m])
+
+
+def test_unconstrained_policy_hallucinates(shared):
+    """Sanity: the unconstrained lower bound leaves a tiny corpus."""
+    _, _, table = shared
+    rng = np.random.default_rng(1)
+    tiny = make_sids(rng, 5, V, L)
+    tokens, _ = run_policy(DecodePolicy.unconstrained(), table, batch=1)
+    valid = {tuple(r) for r in tiny}
+    assert any(tuple(tokens[0, m]) not in valid for m in range(M))
+
+
+# ---------------------------------------------------------------------------
+# plan construction / introspection
+# ---------------------------------------------------------------------------
+def test_static_plan_splits_dense_and_sparse(shared):
+    _, tm, _ = shared
+    p = DecodePolicy.static(tm)
+    assert p.plan == (0, 0, 1, 1)  # dense_d=2, L=4
+    assert isinstance(p.backend_for(0), StaticBackend)
+    assert p.backend_for(0).levels == "dense"
+    assert p.backend_for(3).levels == "sparse"
+    assert p.sid_length == L and not p.requires_constraint_ids
+    assert not p.needs_prefix and p.num_sets is None
+    assert "dense-bitpack" in p.describe() and "vntk" in p.describe()
+
+
+def test_policy_validation(shared):
+    sids, tm, _ = shared
+    with pytest.raises(ValueError, match="at least one"):
+        DecodePolicy(backends=(), plan=(0,))
+    with pytest.raises(ValueError, match="unknown backends"):
+        DecodePolicy(backends=(UnconstrainedBackend(),), plan=(1,))
+    # a dense-band backend consulted at a sparse step is a plan bug
+    bad = DecodePolicy(
+        backends=(StaticBackend(tm, levels="dense"),), plan=(0,) * L
+    )
+    lp = jnp.zeros((2, V), jnp.float32)
+    nodes = jnp.ones((2,), jnp.int32)
+    with pytest.raises(ValueError, match="fix the policy plan"):
+        bad.step(lp, nodes, 3, normalized=True)
+    # prefix backends refuse to run without emitted-token history
+    with pytest.raises(ValueError, match="prefix"):
+        DecodePolicy.ppv(sids, V).step(lp, nodes, 0, normalized=True)
+
+
+def test_per_level_mixed_stacked_and_single(shared, rng):
+    """The escape hatch may mix stacked and single-set backends per level:
+    ids are handed only to the backends that consume them."""
+    sids, tm, table = shared
+    store = ConstraintStore.from_matrices([tm, tm])  # identical tenants
+    mixed = DecodePolicy.per_level(
+        backends=(
+            StaticBackend(tm, levels="dense"),
+            StackedStaticBackend(store, levels="sparse"),
+        ),
+        plan=(0, 0, 1, 1),
+    )
+    assert mixed.requires_constraint_ids
+    cids = jnp.asarray(np.arange(B, dtype=np.int32) % 2)
+    got_tokens, got_scores = run_policy(mixed, table, cids=cids)
+    want_tokens, want_scores = run_policy(DecodePolicy.static(tm), table)
+    np.testing.assert_array_equal(got_tokens, want_tokens)
+    np.testing.assert_allclose(got_scores, want_scores, rtol=1e-5)
+
+
+def test_constraint_ids_pairing(shared, rng):
+    sids, tm, table = shared
+    mats = [tm, TransitionMatrix.from_sids(make_sids(rng, 40, V, L), V)]
+    store = ConstraintStore.from_matrices(mats)
+    with pytest.raises(ValueError, match="constraint_ids"):
+        run_policy(DecodePolicy.stacked(store), table)  # missing ids
+    with pytest.raises(ValueError, match="ConstraintStore"):
+        run_policy(DecodePolicy.static(tm), table,
+                   cids=jnp.zeros(B, jnp.int32))  # ids without a store
+
+
+# ---------------------------------------------------------------------------
+# legacy shim: as_policy + deprecated kwarg tunnel
+# ---------------------------------------------------------------------------
+def test_as_policy_coercions(shared, rng):
+    sids, tm, _ = shared
+    assert not as_policy(None).is_constrained
+    assert as_policy(tm).constraints is tm
+    store = ConstraintStore.from_matrices([tm, tm])
+    assert isinstance(as_policy(store).backend_for(0), StackedStaticBackend)
+    assert as_policy(CpuTrieBaseline(sids, V)).needs_prefix
+    ppv = as_policy(PPVBaseline(sids, V))
+    assert isinstance(ppv.backend_for(0), PPVBackend)
+    p = DecodePolicy.static(tm)
+    assert as_policy(p) is p
+    with pytest.raises(TypeError, match="cannot build"):
+        as_policy(object())
+
+
+def test_legacy_kwargs_deprecated_but_equivalent(shared):
+    _, tm, table = shared
+    want_tokens, want_scores = run_policy(DecodePolicy.static(tm), table)
+
+    def logits_fn(carry, last, step):
+        b, m = last.shape
+        return jnp.broadcast_to(table[step], (b, m, V)), carry
+
+    with pytest.warns(DeprecationWarning, match="DecodePolicy"):
+        state, _ = beam_search(logits_fn, None, B, M, L, tm=tm, impl="xla")
+    np.testing.assert_array_equal(np.asarray(state.tokens), want_tokens)
+    np.testing.assert_allclose(np.asarray(state.scores), want_scores,
+                               rtol=1e-6)
+    # bare tm= without the kwarg tunnel is accepted silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        state2, _ = beam_search(logits_fn, None, B, M, L, tm=tm)
+    np.testing.assert_array_equal(np.asarray(state2.tokens), want_tokens)
+    with pytest.raises(TypeError, match="not both"):
+        beam_search(logits_fn, None, B, M, L, DecodePolicy.static(tm), tm=tm)
+    with pytest.raises(TypeError, match="bake"):
+        beam_search(logits_fn, None, B, M, L, DecodePolicy.static(tm),
+                    impl="pallas")
+
+
+# ---------------------------------------------------------------------------
+# hot-swap invariants at the policy level (the registry path's contract)
+# ---------------------------------------------------------------------------
+def test_with_constraints_preserves_treedef(shared, rng):
+    sids, tm, _ = shared
+    mats = [tm, TransitionMatrix.from_sids(
+        make_sids(rng, 50, V, L, clustered=True), V)]
+    store = ConstraintStore.from_matrices(mats, headroom=0.5)
+    policy = DecodePolicy.stacked(store)
+    fresh = TransitionMatrix.from_sids(
+        make_sids(rng, 80, V, L, clustered=True), V)
+    swapped = policy.with_constraints(store.with_member(0, fresh))
+    assert jax.tree_util.tree_structure(swapped) == \
+        jax.tree_util.tree_structure(policy)
+    assert swapped.plan == policy.plan
+    # type mismatches are rejected before any leaf moves
+    with pytest.raises(TypeError, match="ConstraintStore"):
+        policy.with_constraints(tm)
+    with pytest.raises(TypeError, match="TransitionMatrix"):
+        DecodePolicy.static(tm).with_constraints(store)
+    with pytest.raises(TypeError, match="no swappable"):
+        DecodePolicy.unconstrained().with_constraints(tm)
+
+
+def test_policy_is_jit_argument_not_constant(shared, rng):
+    """A hot-swap through a jitted step must not retrace: the policy is a
+    pytree argument whose static metadata is swap-invariant."""
+    sids, tm, _ = shared
+    store = ConstraintStore.from_matrices([tm, tm], headroom=0.5)
+    policy = DecodePolicy.stacked(store)
+    traces = []
+
+    @jax.jit
+    def step0(lp, nodes, cids, pol):
+        traces.append(1)
+        return pol.step(lp, nodes, 0, constraint_ids=cids, normalized=True)
+
+    lp = jnp.zeros((2, V), jnp.float32)
+    nodes = jnp.ones((2,), jnp.int32)
+    cids = jnp.asarray([0, 1], jnp.int32)
+    step0(lp, nodes, cids, policy)
+    fresh = TransitionMatrix.from_sids(
+        make_sids(rng, 60, V, L, clustered=True), V)
+    step0(lp, nodes, cids, policy.with_constraints(store.with_member(1, fresh)))
+    assert len(traces) == 1, "registry hot-swap retraced the jitted step"
+
+
+def test_explicit_is_stacked_property(shared, rng):
+    _, tm, _ = shared
+    assert tm.is_stacked is False
+    store = ConstraintStore.from_matrices([tm, tm])
+    assert store.is_stacked is True
