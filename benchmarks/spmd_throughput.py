@@ -1,0 +1,121 @@
+"""SPMD serving throughput — QPS and per-step latency vs device count.
+
+Simulates a multi-chip host (``--xla_force_host_platform_device_count``,
+set below BEFORE jax imports — same trick as ``launch/dryrun.py``) and
+drives the same constrained-retrieval workload through:
+
+  * the PR 2 single-device ``ServingEngine._serve_retrieval`` baseline, and
+  * ``SpmdServingEngine`` on ``(data, model=1)`` meshes of 1, 2, 4, 8
+    devices (continuous data-parallel batching, DESIGN.md §6).
+
+Reported per configuration: requests/second (QPS) and per-decode-step
+latency for the global batch.  On a simulated host every "device" is a CPU
+thread, so absolute numbers are meaningless — the *scaling shape* (QPS
+growing with device count at near-constant per-step latency, because each
+device keeps its per-shard batch while the global batch grows) is the
+quantity this harness tracks.
+
+    PYTHONPATH=src python -m benchmarks.spmd_throughput [--smoke]
+"""
+from __future__ import annotations
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    )
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit  # noqa: E402
+from repro.core import TransitionMatrix  # noqa: E402
+from repro.decoding import DecodePolicy  # noqa: E402
+from repro.launch.mesh import make_subset_mesh  # noqa: E402
+from repro.models import transformer  # noqa: E402
+from repro.pipelines import gr_model_config  # noqa: E402
+from repro.serving.engine import RequestQueue, ServingEngine  # noqa: E402
+from repro.serving.generative_retrieval import (  # noqa: E402
+    GenerativeRetriever,
+)
+from repro.serving.spmd_engine import (  # noqa: E402
+    SpmdRetriever,
+    SpmdServingEngine,
+)
+
+
+def fill_queue(rng, vocab, n_requests, sid_length):
+    q = RequestQueue()
+    for _ in range(n_requests):
+        q.submit(rng.integers(0, vocab, (8,)), n_tokens=sid_length)
+    return q
+
+
+def run(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    vocab, L, beam = (64, 3, 4) if smoke else (256, 4, 8)
+    n_sids = 500 if smoke else 20_000
+    n_requests = 8 if smoke else 64
+    slots_per_device = 2 if smoke else 4
+    repeats = 1 if smoke else 3
+
+    cfg = gr_model_config(vocab)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    sids = rng.integers(0, vocab, size=(n_sids, L))
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=2)
+    policy = DecodePolicy.static(tm)
+    n_dev = len(jax.devices())
+    counts = [c for c in ((1, 2) if smoke else (1, 2, 4, 8)) if c <= n_dev]
+
+    def timed_serve(engine, make_queue):
+        engine.serve(make_queue())  # compile + warm
+        times = []
+        for _ in range(repeats):
+            q = make_queue()
+            t0 = time.perf_counter()
+            res = engine.serve(q)
+            times.append(time.perf_counter() - t0)
+            assert len(res) == n_requests
+        return float(np.median(times))
+
+    # -- PR 2 baseline: single-device engine, same slot count ---------------
+    base_slots = slots_per_device
+    retr = GenerativeRetriever(params, cfg, policy, L, vocab, beam_size=beam)
+    eng = ServingEngine(params, cfg, batch_size=base_slots, max_len=16,
+                        retriever=retr)
+    dt = timed_serve(eng, lambda: fill_queue(rng, vocab, n_requests, L))
+    batches = -(-n_requests // base_slots)
+    emit("spmd/baseline_1dev_us_per_req", dt / n_requests * 1e6,
+         f"qps={n_requests / dt:.1f}")
+    emit("spmd/baseline_1dev_step_us", dt / (batches * L) * 1e6,
+         f"slots={base_slots}")
+
+    # -- SPMD engine across device counts -----------------------------------
+    for c in counts:
+        mesh = make_subset_mesh(c, 1)
+        slots = slots_per_device * c
+        sretr = SpmdRetriever(params, cfg, policy, L, vocab, beam_size=beam,
+                              mesh=mesh)
+        seng = SpmdServingEngine(sretr, slots=slots, prompt_width=8)
+        dt = timed_serve(seng, lambda: fill_queue(rng, vocab, n_requests, L))
+        batches = -(-n_requests // slots)
+        qps = n_requests / dt
+        emit(f"spmd/{c}dev_us_per_req", dt / n_requests * 1e6,
+             f"qps={qps:.1f}")
+        emit(f"spmd/{c}dev_step_us", dt / (batches * L) * 1e6,
+             f"slots={slots} batches={batches}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, 2 device counts; CI wiring check")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -69,6 +69,7 @@ def beam_search(
     first_logits: Optional[jax.Array] = None,
     constraint_ids: Optional[jax.Array] = None,
     tm=_LEGACY_UNSET,  # deprecated alias of ``policy``
+    return_trace: bool = False,
 ) -> tuple[BeamState, object]:
     """Run L constrained decode steps; returns final beams sorted by score.
 
@@ -85,6 +86,12 @@ def beam_search(
     every beam of a row shares its request's constraint set, so the ids
     broadcast over the beam axis and beam reordering never moves them
     (DESIGN.md §4).
+
+    ``return_trace=True`` returns ``(state, carry, trace)`` where ``trace``
+    is a :class:`BeamState` whose leaves carry a leading step axis — the
+    post-advance beams at every decode level.  This is the golden-trace
+    fixture format (``tests/golden/``): cross-backend drift is then caught
+    at the *step* it first diverges, not just in the final top-M.
     """
     from repro.decoding.policy import coerce_policy  # lazy: import cycle
 
@@ -110,6 +117,7 @@ def beam_search(
         )
     )
 
+    trace = []
     for step in range(length):
         last = (
             state.tokens[:, :, step - 1]
@@ -141,8 +149,13 @@ def beam_search(
         new_tokens = new_tokens.at[:, :, step].set(token)
         new_nodes = next_dense[batch_ix, beam_idx, token]
         state = BeamState(tokens=new_tokens, scores=top_scores, nodes=new_nodes)
+        if return_trace:
+            trace.append(state)
         if carry_gather_fn is not None:
             carry = carry_gather_fn(carry, beam_idx)
+    if return_trace:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trace)
+        return state, carry, stacked
     return state, carry
 
 

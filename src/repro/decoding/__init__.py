@@ -24,6 +24,7 @@ from repro.decoding.backends import (
     HashBitmapBackend,
     Impl,
     PPVBackend,
+    Rows,
     StackedStaticBackend,
     StaticBackend,
     UnconstrainedBackend,
@@ -42,6 +43,7 @@ __all__ = [
     "coerce_policy",
     "LEGACY_UNSET",
     "Impl",
+    "Rows",
     "StaticBackend",
     "StackedStaticBackend",
     "CpuTrieBackend",

@@ -26,6 +26,8 @@ from typing import Literal, Optional, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec
+
 from repro.constraints.store import ConstraintStore
 from repro.core import dense_mask
 from repro.core.baselines import (
@@ -40,6 +42,7 @@ from repro.core.vntk import vntk_stacked_xla, vntk_xla
 __all__ = [
     "Impl",
     "Levels",
+    "Rows",
     "ConstraintBackend",
     "StaticBackend",
     "StackedStaticBackend",
@@ -50,6 +53,20 @@ __all__ = [
 ]
 
 Levels = Literal["auto", "dense", "sparse"]
+Rows = Literal["replicated", "model"]
+
+
+def _check_rows(rows: str) -> None:
+    if rows not in ("replicated", "model"):
+        raise ValueError(
+            f"rows must be 'replicated' or 'model', got {rows!r}"
+        )
+
+
+def _replicated_specs(backend, mesh):
+    """PartitionSpec pytree replicating every leaf (the §A.3 default)."""
+    del mesh
+    return jax.tree.map(lambda _: PartitionSpec(), backend)
 
 
 @runtime_checkable
@@ -83,6 +100,19 @@ class ConstraintBackend(Protocol):
         """Phase 2 of Alg. 1: returns ``(masked_lp, next_dense)``, both
         vocab-aligned ``(..., V)``; ``next_dense[..., v] == 0`` iff emitting
         ``v`` is invalid."""
+        ...
+
+    def shardings(self, mesh, *, rows: Rows = "replicated"):
+        """PartitionSpec pytree (same treedef as the backend) mapping each
+        device-table leaf to a mesh placement (DESIGN.md §6).
+
+        ``rows="replicated"`` replicates every leaf (paper §A.3: constraint
+        tables are small next to model weights).  ``rows="model"`` row-shards
+        the big CSR ``edges`` slab along the mesh's ``model`` axis for tries
+        that outgrow a single device's HBM — lookups then do a one-hop gather
+        (``repro.distributed.constraint_sharding.vntk_row_sharded``).
+        Backends without a CSR ignore the distinction and replicate.
+        """
         ...
 
 
@@ -150,6 +180,18 @@ class StaticBackend:
     @property
     def sid_length(self) -> int:
         return self.tm.sid_length
+
+    def shardings(self, mesh, *, rows: Rows = "replicated"):
+        _check_rows(rows)
+        specs = _replicated_specs(self, mesh)
+        if rows == "model" and "model" in mesh.axis_names:
+            specs = dataclasses.replace(
+                specs,
+                tm=dataclasses.replace(
+                    specs.tm, edges=PartitionSpec("model", None)
+                ),
+            )
+        return specs
 
     def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
                   constraint_ids=None):
@@ -221,6 +263,18 @@ class StackedStaticBackend:
     @property
     def num_sets(self) -> int:
         return self.store.num_sets
+
+    def shardings(self, mesh, *, rows: Rows = "replicated"):
+        _check_rows(rows)
+        specs = _replicated_specs(self, mesh)
+        if rows == "model" and "model" in mesh.axis_names:
+            specs = dataclasses.replace(
+                specs,
+                store=dataclasses.replace(
+                    specs.store, edges=PartitionSpec(None, "model", None)
+                ),
+            )
+        return specs
 
     def _require_ids(self, constraint_ids):
         if constraint_ids is None:
@@ -305,6 +359,11 @@ class CpuTrieBackend:
     def sid_length(self) -> int:
         return self.baseline.sid_length
 
+    def shardings(self, mesh, *, rows: Rows = "replicated"):
+        _check_rows(rows)
+        # The trie lives on the host (static aux data): no device leaves.
+        return _replicated_specs(self, mesh)
+
     def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
                   constraint_ids=None):
         del nodes
@@ -354,6 +413,12 @@ class PPVBackend(PPVBaseline):
             PPVBaseline(sids, vocab_size, exact=exact, top_k=top_k)
         )
 
+    def shardings(self, mesh, *, rows: Rows = "replicated"):
+        _check_rows(rows)
+        # Sorted SID/key tables are modest and probed by binary search:
+        # replicate (row-sharding would need log2(N) cross-shard hops).
+        return _replicated_specs(self, mesh)
+
     def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
                   constraint_ids=None):
         del nodes
@@ -392,6 +457,11 @@ class HashBitmapBackend(HashBitmapBaseline):
             HashBitmapBaseline(sids, vocab_size, log2_bits=log2_bits)
         )
 
+    def shardings(self, mesh, *, rows: Rows = "replicated"):
+        _check_rows(rows)
+        # Constant-time probes at random bit positions: replicate the bitmap.
+        return _replicated_specs(self, mesh)
+
     def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
                   constraint_ids=None):
         del nodes
@@ -412,6 +482,10 @@ class UnconstrainedBackend:
     supports_stacked = False
     needs_prefix = False
     sid_length = None
+
+    def shardings(self, mesh, *, rows: Rows = "replicated"):
+        _check_rows(rows)
+        return _replicated_specs(self, mesh)
 
     def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
                   constraint_ids=None):

@@ -110,6 +110,22 @@ class DecodePolicy:
                 return b.tm
         return None
 
+    def shardings(self, mesh, *, rows: str = "replicated") -> "DecodePolicy":
+        """PartitionSpec pytree with the policy's own treedef (DESIGN.md §6).
+
+        Composes every backend's :meth:`ConstraintBackend.shardings` hook, so
+        the result can be used directly as ``shard_map`` in_specs, or turned
+        into NamedShardings via ``distributed.sharding.tree_shardings`` for
+        ``device_put`` / jit sharding constraints.  Static metadata is
+        preserved, so the spec tree matches the policy leaf-for-leaf.
+        """
+        return dataclasses.replace(
+            self,
+            backends=tuple(
+                b.shardings(mesh, rows=rows) for b in self.backends
+            ),
+        )
+
     def describe(self) -> str:
         """Human-readable per-level plan, e.g. for benchmark/CLI banners."""
         def label(b):

@@ -1,0 +1,352 @@
+"""SPMD sharding story for constraint backends + beam search (DESIGN.md §6).
+
+This module makes the constrained-retrieval hot path run SPMD over a
+``Mesh`` from :mod:`repro.launch.mesh`:
+
+  * **Batch/beam parallelism** — :func:`spmd_beam_search` wraps the ordinary
+    :func:`~repro.core.beam_search` in ``shard_map``, splitting the *batch*
+    axis across the mesh's data axes (``dp_axes``).  Rows are independent in
+    Algorithm 1 (beams only compete within their own row's ``M·V``
+    candidates), so each device runs the unmodified search on its batch
+    shard and results are **bit-identical** to single-device decoding
+    (asserted in ``tests/test_differential_fuzz.py``).  The beam axis stays
+    device-local: sharding it would turn the per-row ``top_k`` over ``M·V``
+    candidates into a cross-device tournament for zero memory win (``M·V``
+    floats per row is trivially small).
+
+  * **Constraint placement** — each backend exposes
+    ``ConstraintBackend.shardings(mesh, rows=...)`` (a PartitionSpec pytree
+    with the backend's own treedef).  Default is paper §A.3: every table
+    replicated, the constraint check collective-free.  ``rows="model"``
+    row-shards the CSR ``edges`` slab — the one leaf that grows with the
+    corpus — along the mesh's ``model`` axis; :func:`vntk_row_sharded` then
+    resolves cross-shard rows with a ONE-HOP gather: every device picks the
+    speculative edge rows it owns and a single ``psum`` over ``model``
+    assembles the full ``(nb, bmax, 2)`` slab on all devices.
+
+  * **Hot-swap invariance** — spec trees are pure functions of the policy's
+    *structure* (static metadata), never of leaf values, so a registry
+    hot-swap (``with_constraints``) keeps every sharding valid and every
+    compiled executable alive (asserted in ``tests/test_spmd_serving.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.vntk import NEG_INF
+from repro.decoding.backends import StackedStaticBackend, StaticBackend
+from repro.distributed.sharding import (
+    dp_axes,
+    dp_size,
+    shard_map_compat,
+    tree_shardings,
+)
+
+__all__ = [
+    "dp_size",
+    "policy_pspecs",
+    "shard_policy",
+    "pad_rows",
+    "pad_policy_rows",
+    "vntk_row_sharded",
+    "RowShardedStatic",
+    "to_row_sharded",
+    "spmd_beam_search",
+]
+
+
+def policy_pspecs(policy, mesh: Mesh, *, rows: str = "replicated"):
+    """PartitionSpec pytree for a DecodePolicy (its ``shardings`` composed).
+
+    The result has the policy's exact treedef, so it is directly usable as
+    ``shard_map`` in_specs or as input to :func:`tree_shardings`.
+    """
+    return policy.shardings(mesh, rows=rows)
+
+
+def shard_policy(policy, mesh: Mesh, *, rows: str = "replicated"):
+    """``device_put`` the policy's leaves per its spec tree.
+
+    With ``rows="model"`` the CSR edge slab must divide the model axis —
+    apply :func:`pad_policy_rows` first (the SPMD serving stack does).
+    """
+    return jax.device_put(
+        policy, tree_shardings(mesh, policy_pspecs(policy, mesh, rows=rows))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Row-sharded CSR: padding + one-hop gather lookup
+# ---------------------------------------------------------------------------
+def pad_rows(obj, n_shards: int):
+    """Pad the CSR ``edges`` row count to a multiple of ``n_shards``.
+
+    Works on a TransitionMatrix (rows on axis 0) or a ConstraintStore (rows
+    on axis 1).  Pad rows are zeros — outside every CSR row's
+    ``[start, start + n_child)`` window, so the ``iota < n_child``
+    sanitization of Alg. 2 never reads them as real edges.  Static metadata
+    (``n_edges`` = real edge count) is untouched; only the array envelope
+    grows, deterministically, so repeated application (every hot-swap) lands
+    on the same shapes and never recompiles.
+    """
+    if n_shards <= 1:
+        return obj
+    edges = obj.edges
+    e = edges.shape[-2]
+    e_pad = -(-e // n_shards) * n_shards
+    if e_pad == e:
+        return obj
+    pad = [(0, 0)] * edges.ndim
+    pad[-2] = (0, e_pad - e)
+    return dataclasses.replace(obj, edges=jnp.pad(edges, pad))
+
+
+def pad_policy_rows(policy, n_shards: int):
+    """Apply :func:`pad_rows` to every CSR-carrying backend in a policy."""
+    def pad_backend(b):
+        if isinstance(b, StaticBackend):
+            return dataclasses.replace(b, tm=pad_rows(b.tm, n_shards))
+        if isinstance(b, StackedStaticBackend):
+            return dataclasses.replace(b, store=pad_rows(b.store, n_shards))
+        return b
+
+    return dataclasses.replace(
+        policy, backends=tuple(pad_backend(b) for b in policy.backends)
+    )
+
+
+def vntk_row_sharded(
+    log_probs: jax.Array,  # (..., V)
+    nodes: jax.Array,  # (...,) int32 current trie states
+    row_pointers: jax.Array,  # (S+1,) or (K, S+1) int32, REPLICATED
+    edges_local: jax.Array,  # (E/ms, 2) or (K, E/ms, 2): THIS shard's rows
+    bmax: int,
+    vocab_size: int,
+    axis: str,
+    constraint_ids: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 2 with the CSR edge slab row-sharded along mesh axis ``axis``.
+
+    Must run inside ``shard_map``.  Row pointers are replicated (they are
+    ``4(S+1)`` bytes vs the edge slab's ``8E``), so every device computes the
+    same global speculative indices; each keeps only the rows it owns
+    (``lo <= idx < lo + rows_local``) and one ``psum`` over ``axis``
+    assembles the full slab — the "one-hop gather" for cross-shard
+    next-states.  int32 summation is exact, and exactly one shard owns each
+    index, so results are bit-identical to the replicated
+    :func:`~repro.core.vntk.vntk_xla`.
+    """
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    nb = n_flat.shape[0]
+
+    if constraint_ids is None:
+        starts = row_pointers[n_flat]
+        lens = row_pointers[n_flat + 1] - starts
+    else:
+        cid = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+        starts = row_pointers[cid, n_flat]
+        lens = row_pointers[cid, n_flat + 1] - starts
+
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    idx = starts[:, None] + offsets[None, :]  # global edge-row indices
+    rows_local = edges_local.shape[-2]
+    lo = jax.lax.axis_index(axis) * rows_local
+    rel = idx - lo
+    own = (rel >= 0) & (rel < rows_local)
+    rel_c = jnp.clip(rel, 0, rows_local - 1)
+    if constraint_ids is None:
+        g = jnp.take(edges_local, rel_c, axis=0)  # (nb, bmax, 2)
+    else:
+        g = edges_local[cid[:, None], rel_c]
+    g = jnp.where(own[..., None], g, 0)
+    gathered = jax.lax.psum(g, axis)  # one hop: full slab everywhere
+
+    # Phases 3-4: identical to the replicated formulation (core/vntk.py).
+    valid = offsets[None, :] < lens[:, None]
+    cols = gathered[:, :, 0]
+    nxt = jnp.where(valid, gathered[:, :, 1], 0)
+    scatter_idx = jnp.where(valid, cols, V)
+    rows = jnp.arange(nb)[:, None]
+    cand_lp = jnp.take_along_axis(lp_flat, jnp.clip(cols, 0, V - 1), axis=1)
+    masked = jnp.full((nb, V + 1), NEG_INF, dtype=log_probs.dtype)
+    masked = masked.at[rows, scatter_idx].set(
+        jnp.where(valid, cand_lp, NEG_INF)
+    )[:, :V]
+    next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
+    next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
+    return (
+        masked.reshape(batch_shape + (V,)),
+        next_dense.reshape(batch_shape + (V,)),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RowShardedStatic:
+    """Shard-local view of a Static/StackedStatic backend inside shard_map.
+
+    Wraps the backend whose ``edges`` leaf arrived row-sharded: dense-band
+    steps delegate to the inner backend (dense tables are replicated), sparse
+    steps run :func:`vntk_row_sharded`.  Built by :func:`to_row_sharded`
+    inside the shard_map body — never constructed by user code.
+    """
+
+    inner: object  # StaticBackend | StackedStaticBackend (pytree child)
+    axis: str = dataclasses.field(
+        default="model", metadata=dict(static=True)
+    )
+
+    supports_fused = False
+    needs_prefix = False
+
+    @property
+    def supports_stacked(self) -> bool:
+        return self.inner.supports_stacked
+
+    @property
+    def sid_length(self) -> int:
+        return self.inner.sid_length
+
+    @property
+    def num_sets(self):
+        return getattr(self.inner, "num_sets", None)
+
+    @property
+    def _constraints(self):
+        return (self.inner.store if isinstance(self.inner, StackedStaticBackend)
+                else self.inner.tm)
+
+    def shardings(self, mesh, *, rows: str = "replicated"):
+        raise TypeError(
+            "RowShardedStatic is a shard-local view; take shardings from the "
+            "inner backend before entering shard_map"
+        )
+
+    def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
+                  constraint_ids=None):
+        del prefix_tokens
+        obj = self._constraints
+        stacked = self.inner.supports_stacked
+        if stacked and constraint_ids is None:
+            raise ValueError(
+                "ConstraintStore lookups need per-row constraint_ids"
+            )
+        if step < obj.dense_d:
+            # dense band: replicated bit-packed tables, untouched path
+            return self.inner.mask_step(
+                log_probs, nodes, step,
+                constraint_ids=constraint_ids if stacked else None,
+            )
+        bmax = max(obj.bmax_for_step(step), 1)
+        return vntk_row_sharded(
+            log_probs, nodes, obj.row_pointers, obj.edges, bmax,
+            obj.vocab_size, self.axis,
+            constraint_ids=constraint_ids if stacked else None,
+        )
+
+
+def to_row_sharded(policy, axis: str = "model"):
+    """Rewrite a policy's sparse Static backends into shard-local views.
+
+    Called inside the shard_map body, where Static backends' ``edges`` leaf
+    is this device's row shard.  Dense-band backend instances never touch
+    ``edges`` and are left alone.  Pallas/fused sparse paths have no
+    row-sharded formulation yet — rejected at entry, not silently wrong.
+    """
+    def wrap(b):
+        if (isinstance(b, (StaticBackend, StackedStaticBackend))
+                and b.levels != "dense"):
+            if b.impl == "pallas" or b.fused:
+                raise ValueError(
+                    "rows='model' supports the XLA unfused VNTK only; "
+                    "rebuild the policy with impl='xla', fused=False"
+                )
+            return RowShardedStatic(inner=b, axis=axis)
+        return b
+
+    return dataclasses.replace(
+        policy, backends=tuple(wrap(b) for b in policy.backends)
+    )
+
+
+# ---------------------------------------------------------------------------
+# SPMD beam search: batch axis over the mesh's data axes
+# ---------------------------------------------------------------------------
+def spmd_beam_search(
+    mesh: Mesh,
+    logits_fn,
+    batch_size: int,
+    beam_size: int,
+    length: int,
+    policy,
+    *,
+    constraint_ids: Optional[jax.Array] = None,
+    rows: str = "replicated",
+):
+    """Data-parallel :func:`~repro.core.beam_search` over ``mesh``.
+
+    The batch axis is split across ``dp_axes(mesh)`` via ``shard_map``; the
+    policy rides in with per-backend specs from its ``shardings`` hook (and
+    with ``rows="model"`` its sparse steps run the one-hop-gather VNTK).
+    ``logits_fn(carry, last, step)`` must be shard-oblivious — a function of
+    its arguments and replicated closures only (the full serving path with a
+    transformer + KV cache lives in ``repro.serving.spmd_engine``).
+
+    ``batch_size`` must divide by :func:`dp_size` — callers pad with inactive
+    rows (the static-shape padding rule of DESIGN.md §6).  Returns
+    ``(tokens (B, M, L), scores (B, M))`` as global arrays, bit-identical to
+    the single-device search.
+    """
+    from repro.decoding.policy import as_policy  # lazy: import cycle
+
+    policy = as_policy(policy)
+    dp = dp_axes(mesh)
+    n = dp_size(mesh)
+    if batch_size % n:
+        raise ValueError(
+            f"batch_size {batch_size} must divide the {n}-way data "
+            f"parallelism (axes {dp}); pad with inactive rows"
+        )
+    if rows == "model":
+        policy = pad_policy_rows(policy, mesh.shape["model"])
+    local_b = batch_size // n
+    have_ids = constraint_ids is not None
+    # jit keys on the wrapped function OBJECT: without this cache a caller
+    # looping over spmd_beam_search would recompile every iteration (the
+    # exact per-call-jit defect GenerativeRetriever.__init__ fixed)
+    key = (mesh, logits_fn, local_b, beam_size, length, rows, have_ids,
+           jax.tree_util.tree_structure(policy))
+    fn = _SPMD_SEARCH_CACHE.get(key)
+    if fn is None:
+        specs = policy_pspecs(policy, mesh, rows=rows)
+
+        def body(pol, *maybe_cids):
+            p = to_row_sharded(pol) if rows == "model" else pol
+            from repro.core.beam_search import beam_search
+
+            state, _ = beam_search(
+                logits_fn, None, local_b, beam_size, length, p,
+                constraint_ids=maybe_cids[0] if have_ids else None,
+            )
+            return state.tokens, state.scores
+
+        fn = jax.jit(shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(specs, P(dp)) if have_ids else (specs,),
+            out_specs=(P(dp, None, None), P(dp, None)),
+        ))
+        _SPMD_SEARCH_CACHE[key] = fn
+    args = ((policy, jnp.asarray(constraint_ids, jnp.int32)) if have_ids
+            else (policy,))
+    return fn(*args)
+
+
+_SPMD_SEARCH_CACHE: dict = {}

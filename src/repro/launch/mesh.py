@@ -14,7 +14,8 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_mesh_compat", "set_mesh_compat", "make_production_mesh",
-           "POD_SHAPE", "MULTIPOD_SHAPE"]
+           "make_debug_mesh", "make_subset_mesh", "POD_SHAPE",
+           "MULTIPOD_SHAPE"]
 
 POD_SHAPE = (16, 16)
 MULTIPOD_SHAPE = (2, 16, 16)
@@ -56,3 +57,23 @@ def make_debug_mesh(n_devices: int | None = None, model: int = 2):
     n = n_devices or len(jax.devices())
     model = min(model, n)
     return make_mesh_compat((n // model, model), ("data", "model"))
+
+
+def make_subset_mesh(data: int, model: int = 1):
+    """(data, model) mesh over the FIRST ``data * model`` devices.
+
+    ``jax.make_mesh`` insists on covering every device; device-count scaling
+    sweeps (``benchmarks/spmd_throughput.py``) need meshes over a prefix of
+    the simulated host devices instead.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    need = data * model
+    if need > len(devs):
+        raise ValueError(
+            f"subset mesh needs {need} devices, only {len(devs)} exist"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devs[:need]).reshape(data, model), ("data", "model")
+    )

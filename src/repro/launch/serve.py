@@ -37,6 +37,15 @@ def main():
                          "the ConstraintRegistry and report the stacked "
                          "ConstraintStore footprint + a mixed-constraint "
                          "retrieval batch")
+    ap.add_argument("--spmd", action="store_true",
+                    help="serve SPMD over a (data, model) mesh spanning every "
+                         "visible device (simulate a multi-chip host with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--spmd-rows", choices=["replicated", "model"],
+                    default="replicated",
+                    help="CSR placement under --spmd: replicate the trie "
+                         "(paper §A.3) or row-shard edges along the model "
+                         "axis with a one-hop gather (DESIGN.md §6)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -51,8 +60,18 @@ def main():
         policy = DecodePolicy.static(tm, impl=args.impl, fused=args.fused)
         print(f"constraint index: {tm.n_states} states "
               f"({time.time()-t0:.2f}s build); policy {policy.describe()}")
-    r = GenerativeRetriever(params, cfg, policy, args.sid_length, args.vocab,
-                            beam_size=args.beam)
+    if args.spmd:
+        from repro.launch.mesh import make_debug_mesh
+        from repro.serving.spmd_engine import SpmdRetriever
+
+        mesh = make_debug_mesh(model=2 if args.spmd_rows == "model" else 1)
+        print(f"SPMD mesh: {dict(mesh.shape)} over {mesh.devices.size} "
+              f"device(s), CSR rows={args.spmd_rows}")
+        r = SpmdRetriever(params, cfg, policy, args.sid_length, args.vocab,
+                          beam_size=args.beam, mesh=mesh, rows=args.spmd_rows)
+    else:
+        r = GenerativeRetriever(params, cfg, policy, args.sid_length,
+                                args.vocab, beam_size=args.beam)
     hist = rng.integers(0, args.vocab, (args.batch, 16)).astype(np.int32)
     beams, scores = r.retrieve(hist)  # compile
     t0 = time.time()

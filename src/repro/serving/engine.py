@@ -42,24 +42,61 @@ class Request:
 
 
 class RequestQueue:
+    """Per-constraint-slot FIFO lanes drained round-robin.
+
+    The old single deque was strict FIFO: under batched admission a tenant
+    that bursts ``batch_size`` requests monopolizes whole batches, and every
+    other constraint slot waits a full batch *per queued burst* — unbounded
+    in burst length.  Requests now land in one FIFO lane per
+    ``constraint_id`` and ``pop`` rotates across non-empty lanes, so a mixed
+    batch admits every active tenant each cycle (arrival order is preserved
+    *within* a lane, and a single-tenant queue degenerates to plain FIFO).
+    """
+
     def __init__(self):
-        self._q: deque = deque()
+        self._lanes: dict[int, deque] = {}
+        self._rr: deque = deque()  # round-robin order of non-empty lanes
         self._next = 0
+        self._len = 0
 
     def submit(self, prompt: np.ndarray, n_tokens: int,
                constraint_id: int = 0) -> int:
         rid = self._next
         self._next += 1
-        self._q.append(
+        lane = self._lanes.get(constraint_id)
+        if lane is None:
+            lane = self._lanes[constraint_id] = deque()
+        if not lane:
+            self._rr.append(constraint_id)
+        lane.append(
             Request(rid, np.asarray(prompt, np.int32), n_tokens, constraint_id)
         )
+        self._len += 1
         return rid
 
     def pop(self) -> Optional[Request]:
-        return self._q.popleft() if self._q else None
+        if not self._rr:
+            return None
+        cid = self._rr.popleft()
+        lane = self._lanes[cid]
+        r = lane.popleft()
+        if lane:
+            self._rr.append(cid)  # rotate: next pop serves another tenant
+        self._len -= 1
+        return r
+
+    def pop_batch(self, n: int) -> list:
+        """Up to ``n`` requests, round-robin across constraint slots."""
+        out = []
+        while len(out) < n:
+            r = self.pop()
+            if r is None:
+                break
+            out.append(r)
+        return out
 
     def __len__(self):
-        return len(self._q)
+        return self._len
 
 
 class ServingEngine:
@@ -111,9 +148,7 @@ class ServingEngine:
         results: dict[int, dict] = {}
         S = self.max_len // 2  # fixed prompt width => static shapes
         while len(queue):
-            batch = []
-            while len(batch) < self.batch_size and len(queue):
-                batch.append(queue.pop())
+            batch = queue.pop_batch(self.batch_size)
             version = None
             if self.registry is not None:
                 store, version = self.registry.current()

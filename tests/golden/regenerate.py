@@ -1,0 +1,102 @@
+"""Regenerate the golden-trace regression fixtures (DESIGN.md §6).
+
+    PYTHONPATH=src python tests/golden/regenerate.py
+
+Writes, next to this script:
+  * ``inputs.npz``      — the frozen corpus (SIDs, decoy SIDs for the
+                          stacked store) and the step-dependent logits table;
+  * ``trie_small.npz``  — the serialized :class:`TransitionMatrix` built
+                          from the corpus (catches save/load + builder
+                          drift);
+  * ``traces.npz``      — per backend: final top-M SIDs/scores AND the full
+                          per-step beam trace (``beam_search``'s
+                          ``return_trace``), so cross-backend drift is
+                          caught at the step where it first diverges —
+                          without recomputing the host-trie oracle.
+
+Run this ONLY when an intentional semantic change invalidates the goldens,
+and say so in the commit message.
+"""
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[2] / "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.constraints import ConstraintStore  # noqa: E402
+from repro.core import TransitionMatrix, beam_search  # noqa: E402
+from repro.decoding import DecodePolicy  # noqa: E402
+
+HERE = pathlib.Path(__file__).resolve().parent
+V, L, B, M = 12, 4, 2, 4
+SEED = 20260731
+
+
+def build_inputs():
+    rng = np.random.default_rng(SEED)
+    heads = rng.integers(0, V, size=(6, 2))
+    sids = np.unique(np.concatenate(
+        [heads[rng.integers(0, 6, size=40)],
+         rng.integers(0, V, size=(40, L - 2))], axis=1
+    ).astype(np.int64), axis=0)
+    decoy = np.unique(
+        rng.integers(0, V, size=(15, L)).astype(np.int64), axis=0)
+    table = rng.normal(size=(L, V, V)).astype(np.float32)
+    return sids, decoy, table
+
+
+def policies(sids, decoy, tm):
+    store = ConstraintStore.from_matrices(
+        [TransitionMatrix.from_sids(decoy, V, dense_d=2), tm], headroom=0.2)
+    return {
+        "static": (DecodePolicy.static(tm), False),
+        "static_fused": (DecodePolicy.static(tm, fused=True), False),
+        "static_d0": (DecodePolicy.static(
+            TransitionMatrix.from_sids(sids, V, dense_d=0)), False),
+        "stacked": (DecodePolicy.stacked(store), True),  # rows -> member 1
+        "ppv_exact": (DecodePolicy.ppv(sids, V, exact=True), False),
+        "cpu_trie": (DecodePolicy.cpu_trie(sids, V), False),
+        "hash_bitmap": (DecodePolicy.hash_bitmap(sids, V, log2_bits=22),
+                        False),
+    }
+
+
+def run_traced(policy, table, stacked):
+    def logits_fn(carry, last, step):
+        return jnp.asarray(table)[step][last], carry
+
+    cids = jnp.ones((B,), jnp.int32) if stacked else None
+    state, _, trace = beam_search(
+        logits_fn, None, B, M, L, policy, constraint_ids=cids,
+        return_trace=True,
+    )
+    return (np.asarray(state.tokens), np.asarray(state.scores),
+            np.asarray(trace.tokens), np.asarray(trace.scores))
+
+
+def main():
+    sids, decoy, table = build_inputs()
+    np.savez_compressed(HERE / "inputs.npz", sids=sids, decoy=decoy,
+                        table=table)
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=2)
+    tm.save(HERE / "trie_small.npz")
+    out = {}
+    for name, (policy, stacked) in policies(sids, decoy, tm).items():
+        tokens, scores, tr_tokens, tr_scores = run_traced(
+            policy, table, stacked)
+        out[f"{name}_tokens"] = tokens
+        out[f"{name}_scores"] = scores
+        out[f"{name}_trace_tokens"] = tr_tokens
+        out[f"{name}_trace_scores"] = tr_scores
+        print(f"{name}: top-1 {tokens[0, 0].tolist()} "
+              f"score {scores[0, 0]:.4f}")
+    np.savez_compressed(HERE / "traces.npz", **out)
+    print(f"wrote {HERE / 'inputs.npz'}, {HERE / 'trie_small.npz'}, "
+          f"{HERE / 'traces.npz'}")
+
+
+if __name__ == "__main__":
+    main()

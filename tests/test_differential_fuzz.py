@@ -1,0 +1,229 @@
+"""Differential fuzzing across every DecodePolicy backend (DESIGN.md §6).
+
+The host pointer-chasing trie (``CpuTrieBackend``) is the semantics oracle:
+whatever corpus shape the generator produces — depth, branch factor, vocab,
+dense depth — every exact device backend must (1) admit the *same token set*
+with the *same masked log-probs* at every step along random prefixes, and
+(2) return the *same top-M SIDs and scores* from the full beam search.  SPMD
+decoding over the mesh must additionally be **bit-identical** to
+single-device decoding (scores included: the fuzz scorer is a pure gather,
+so there is no reassociation wiggle room).
+
+Cases are seeded ``numpy`` draws (always run, deterministic); when
+``hypothesis`` is installed a property-based variant drives the same
+differential harness from minimized counterexamples.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constraints import ConstraintStore
+from repro.core import TransitionMatrix, beam_search
+from repro.core.vntk import NEG_INF
+from repro.decoding import DecodePolicy
+from repro.distributed.constraint_sharding import spmd_beam_search
+from repro.distributed.sharding import dp_size
+from repro.launch.mesh import make_subset_mesh
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: seeded fuzz still runs
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# case generator: random tries / corpora of varying shape
+# ---------------------------------------------------------------------------
+def make_case(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    V = int(rng.integers(6, 25))
+    L = int(rng.integers(2, 6))
+    n = int(rng.integers(8, 260))
+    dense_d = int(rng.choice([0, 1, 2]))
+    if rng.random() < 0.5:  # clustered: shared heads => deep shared prefixes
+        n_heads = max(1, n // 6)
+        heads = rng.integers(0, V, size=(n_heads, max(1, L // 2)))
+        tails = rng.integers(0, V, size=(n, L - heads.shape[1]))
+        sids = np.concatenate(
+            [heads[rng.integers(0, n_heads, size=n)], tails], axis=1)
+    else:
+        sids = rng.integers(0, V, size=(n, L))
+    sids = np.unique(sids.astype(np.int64), axis=0)
+    table = rng.normal(size=(L, V, V)).astype(np.float32)
+    return dict(seed=seed, V=V, L=L, dense_d=min(dense_d, L), sids=sids,
+                table=jnp.asarray(table))
+
+
+def exact_policies(case) -> dict:
+    """Every backend family that must match the oracle exactly."""
+    sids, V, L = case["sids"], case["V"], case["L"]
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=case["dense_d"])
+    decoy = np.unique(
+        np.random.default_rng(case["seed"] + 1).integers(
+            0, V, size=(40, L)).astype(np.int64), axis=0)
+    store = ConstraintStore.from_matrices(
+        [TransitionMatrix.from_sids(decoy, V, dense_d=case["dense_d"]), tm],
+        headroom=0.2,
+    )
+    return {
+        "static": DecodePolicy.static(tm),
+        "static_pallas": DecodePolicy.static(tm, impl="pallas"),
+        "static_fused": DecodePolicy.static(tm, fused=True),
+        "stacked": DecodePolicy.stacked(store),  # rows select member 1 == tm
+        "ppv_exact": DecodePolicy.ppv(sids, V, exact=True),
+        "ppv_topk_full": DecodePolicy.ppv(sids, V, exact=False, top_k=V),
+        # 2^24 bits vs <=~1.5k probed prefixes: collision-free at fuzz scale
+        "hash_bitmap": DecodePolicy.hash_bitmap(sids, V, log2_bits=24),
+    }
+
+
+def run_beam(case, policy, stacked: bool, batch=3, beams=6):
+    V, L, table = case["V"], case["L"], case["table"]
+
+    def logits_fn(carry, last, step):
+        return table[step][last], carry  # pure gather: bit-deterministic
+
+    cids = (jnp.ones((batch,), jnp.int32) if stacked else None)
+    state, _ = beam_search(logits_fn, None, batch, beams, L, policy,
+                           constraint_ids=cids)
+    return np.asarray(state.tokens), np.asarray(state.scores)
+
+
+def masks_along_prefix(case, policy, prefixes, lp, step, stacked: bool):
+    """(masked_lp, valid) at ``step`` after walking ``prefixes[:, :step]``.
+
+    Drives every backend through the same ``policy.step`` chain the beam
+    search uses: trie states advance by the vocab-aligned next-state gather,
+    prefix backends read the history directly.
+    """
+    B, V = prefixes.shape[0], case["V"]
+    pf = jnp.asarray(prefixes, jnp.int32)
+    cids = jnp.ones((B,), jnp.int32) if stacked else None
+    nodes = jnp.ones((B,), jnp.int32)
+    zeros = jnp.zeros((B, V), jnp.float32)
+    for s in range(step):
+        _, nxt = policy.step(zeros, nodes, s, prefix_tokens=pf,
+                             constraint_ids=cids, normalized=True)
+        nodes = nxt[jnp.arange(B), pf[:, s]]
+    masked, nxt = policy.step(lp, nodes, step, prefix_tokens=pf,
+                              constraint_ids=cids, normalized=True)
+    return np.asarray(masked), np.asarray(nxt) != 0
+
+
+FUZZ_SEEDS = list(range(6))
+
+
+def sample_prefixes(case, rng, n_valid=6, n_random=4):
+    """Corpus prefixes (always walkable) + random ones (usually dead ends)."""
+    sids = case["sids"]
+    take = rng.integers(0, sids.shape[0], size=min(n_valid, sids.shape[0]))
+    rand = rng.integers(0, case["V"], size=(n_random, case["L"]))
+    return np.concatenate([sids[take], rand]).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# mask_step differential: every level, every backend vs the host-trie oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", FUZZ_SEEDS)
+def test_fuzz_mask_step_matches_cpu_trie_oracle(seed):
+    case = make_case(seed)
+    rng = np.random.default_rng(seed + 1000)
+    oracle = DecodePolicy.cpu_trie(case["sids"], case["V"])
+    prefixes = sample_prefixes(case, rng)
+    lp = jnp.asarray(
+        rng.normal(size=(prefixes.shape[0], case["V"])).astype(np.float32))
+    for step in range(case["L"]):
+        want_lp, want_valid = masks_along_prefix(
+            case, oracle, prefixes, lp, step, stacked=False)
+        for name, policy in exact_policies(case).items():
+            got_lp, got_valid = masks_along_prefix(
+                case, policy, prefixes, lp, step,
+                stacked=policy.requires_constraint_ids)
+            np.testing.assert_array_equal(
+                got_valid, want_valid,
+                err_msg=f"seed={seed} step={step} backend={name}: "
+                        "admitted token set diverged from the host trie")
+            np.testing.assert_allclose(
+                got_lp, want_lp, rtol=1e-6, atol=1e-6,
+                err_msg=f"seed={seed} step={step} backend={name}")
+
+
+# ---------------------------------------------------------------------------
+# full-search differential: top-M SIDs and scores vs the oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", FUZZ_SEEDS)
+def test_fuzz_beam_search_matches_cpu_trie_oracle(seed):
+    case = make_case(seed)
+    oracle = DecodePolicy.cpu_trie(case["sids"], case["V"])
+    want_t, want_s = run_beam(case, oracle, stacked=False)
+    valid = {tuple(r) for r in case["sids"]}
+    for b in range(want_t.shape[0]):
+        for m in range(want_t.shape[1]):
+            if want_s[b, m] > NEG_INF / 2:
+                assert tuple(want_t[b, m]) in valid  # oracle sanity
+    for name, policy in exact_policies(case).items():
+        got_t, got_s = run_beam(
+            case, policy, stacked=policy.requires_constraint_ids)
+        np.testing.assert_array_equal(
+            got_t, want_t, err_msg=f"seed={seed} backend={name}")
+        np.testing.assert_allclose(
+            got_s, want_s, rtol=1e-5,
+            err_msg=f"seed={seed} backend={name}")
+
+
+# ---------------------------------------------------------------------------
+# SPMD differential: mesh decoding bit-identical to single device
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", FUZZ_SEEDS[:4])
+@pytest.mark.parametrize("rows", ["replicated", "model"])
+def test_fuzz_spmd_bit_identical_to_single_device(seed, rows):
+    case = make_case(seed)
+    n = len(jax.devices())
+    model = 2 if (rows == "model" and n % 2 == 0 and n >= 2) else 1
+    mesh = make_subset_mesh(n // model, model)
+    B = 2 * dp_size(mesh)
+    table = case["table"]
+
+    def logits_fn(carry, last, step):
+        return table[step][last], carry
+
+    tm = TransitionMatrix.from_sids(
+        case["sids"], case["V"], dense_d=case["dense_d"])
+    policy = DecodePolicy.static(tm)
+
+    # jitted single-device reference: the SPMD path is jitted, and XLA may
+    # legally order the log-softmax reduction differently from eager mode —
+    # the bit-identity contract is compiled-vs-compiled
+    @jax.jit
+    def single(pol):
+        state, _ = beam_search(logits_fn, None, B, 5, case["L"], pol)
+        return state.tokens, state.scores
+
+    want_t, want_s = single(policy)
+    tokens, scores = spmd_beam_search(
+        mesh, logits_fn, B, 5, case["L"], policy, rows=rows)
+    np.testing.assert_array_equal(
+        np.asarray(tokens), np.asarray(want_t), err_msg=f"seed={seed}")
+    np.testing.assert_array_equal(
+        np.asarray(scores), np.asarray(want_s), err_msg=f"seed={seed}")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven variant (runs where hypothesis is installed, e.g. CI)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_hypothesis_static_matches_cpu_trie(seed):
+        case = make_case(seed)
+        oracle = DecodePolicy.cpu_trie(case["sids"], case["V"])
+        tm = TransitionMatrix.from_sids(
+            case["sids"], case["V"], dense_d=case["dense_d"])
+        want_t, want_s = run_beam(case, oracle, stacked=False)
+        got_t, got_s = run_beam(case, DecodePolicy.static(tm), stacked=False)
+        np.testing.assert_array_equal(got_t, want_t, err_msg=f"seed={seed}")
+        np.testing.assert_allclose(got_s, want_s, rtol=1e-5,
+                                   err_msg=f"seed={seed}")

@@ -1,0 +1,89 @@
+"""Golden-trace regression: frozen fixtures catch cross-backend drift.
+
+``tests/golden/`` holds a frozen corpus + logits table, a *serialized*
+:class:`TransitionMatrix`, and per-backend expected top-M SID/score traces
+(full per-step beam snapshots).  Backends are compared against the
+**checked-in** traces — never against a recomputed oracle — so a silent
+semantic change in any backend (or in the trie builder / serialization
+format) fails here even if every backend drifts in unison with the others'
+reimplementation.  Regenerate intentionally with
+``python tests/golden/regenerate.py``.
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import TransitionMatrix
+
+from golden.regenerate import (  # the fixture recipe IS the test's builder
+    B,
+    L,
+    M,
+    V,
+    policies,
+    run_traced,
+)
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
+BACKENDS = ["static", "static_fused", "static_d0", "stacked", "ppv_exact",
+            "cpu_trie", "hash_bitmap"]
+
+
+@pytest.fixture(scope="module")
+def fixtures():
+    inputs = np.load(GOLDEN / "inputs.npz")
+    traces = np.load(GOLDEN / "traces.npz")
+    return inputs, traces
+
+
+def test_serialized_trie_matches_rebuilt(fixtures):
+    """trie_small.npz loads to exactly the matrix the builder produces —
+    save/load format and trie construction are both pinned."""
+    inputs, _ = fixtures
+    loaded = TransitionMatrix.load(GOLDEN / "trie_small.npz")
+    rebuilt = TransitionMatrix.from_sids(inputs["sids"], V, dense_d=2)
+    assert loaded.sid_length == L and loaded.vocab_size == V
+    for f in ("vocab_size", "sid_length", "dense_d", "level_bmax",
+              "n_states", "n_edges", "n_constraints"):
+        assert getattr(loaded, f) == getattr(rebuilt, f), f
+    for f in ("row_pointers", "edges", "l0_mask_packed", "l0_states",
+              "l1_mask_packed", "l1_states"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loaded, f)), np.asarray(getattr(rebuilt, f)),
+            err_msg=f)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_backend_matches_golden_trace(fixtures, name):
+    inputs, traces = fixtures
+    sids, decoy, table = inputs["sids"], inputs["decoy"], inputs["table"]
+    tm = TransitionMatrix.load(GOLDEN / "trie_small.npz")  # serialized path
+    policy, stacked = policies(sids, decoy, tm)[name]
+    tokens, scores, tr_tokens, tr_scores = run_traced(policy, table, stacked)
+    assert tokens.shape == (B, M, L)
+    np.testing.assert_array_equal(
+        tokens, traces[f"{name}_tokens"],
+        err_msg=f"{name}: final top-M SIDs drifted from the golden fixture")
+    np.testing.assert_allclose(
+        scores, traces[f"{name}_scores"], atol=1e-5, err_msg=name)
+    # per-step trace: pinpoints the decode level where drift starts
+    want_tt = traces[f"{name}_trace_tokens"]
+    for step in range(L):
+        np.testing.assert_array_equal(
+            tr_tokens[step], want_tt[step],
+            err_msg=f"{name}: beams diverged first at decode step {step}")
+    np.testing.assert_allclose(
+        tr_scores, traces[f"{name}_trace_scores"], atol=1e-5, err_msg=name)
+
+
+def test_goldens_cover_stacked_member_selection(fixtures):
+    """The stacked fixture decodes under member 1 (the real corpus), not
+    the decoy in slot 0 — guard the fixture itself against regeneration
+    mistakes."""
+    inputs, traces = fixtures
+    valid = {tuple(r) for r in inputs["sids"]}
+    decoy_only = {tuple(r) for r in inputs["decoy"]} - valid
+    for b in range(B):
+        top = tuple(traces["stacked_tokens"][b, 0])
+        assert top in valid and top not in decoy_only

@@ -73,6 +73,33 @@ def test_generative_retriever_100pct_compliance(small_lm, rng):
                 assert tuple(beams[b, m]) in valid
 
 
+def test_request_queue_fairness_mixed_constraint_slots():
+    """A tenant bursting the queue must not monopolize batched admission:
+    pop rotates across constraint-id lanes, FIFO within a lane."""
+    q = RequestQueue()
+    p = np.zeros(4, np.int32)
+    burst = [q.submit(p, 1, constraint_id=0) for _ in range(6)]
+    late = [q.submit(p, 1, constraint_id=1) for _ in range(2)]
+    assert len(q) == 8
+    batch = q.pop_batch(4)
+    # the first batch already mixes both tenants (strict FIFO would have
+    # admitted four constraint-0 requests and starved tenant 1 for batches)
+    assert [r.constraint_id for r in batch] == [0, 1, 0, 1]
+    # arrival order preserved within each lane
+    assert [r.rid for r in batch if r.constraint_id == 0] == burst[:2]
+    assert [r.rid for r in batch if r.constraint_id == 1] == late
+    rest = q.pop_batch(10)
+    assert [r.rid for r in rest] == burst[2:] and len(q) == 0
+    assert q.pop() is None
+
+
+def test_request_queue_single_tenant_is_fifo():
+    q = RequestQueue()
+    p = np.zeros(4, np.int32)
+    rids = [q.submit(p, 1) for _ in range(5)]
+    assert [q.pop().rid for _ in range(5)] == rids
+
+
 def test_generative_retriever_unconstrained_vs_constrained_scores(small_lm, rng):
     """Constrained top beam score <= unconstrained top beam score."""
     params, cfg = small_lm
