@@ -1,0 +1,129 @@
+"""Refresh latency — delta-aware trie rebuild vs full rebuild (DESIGN.md §7).
+
+Production freshness (paper §1) means the restricted SID set churns
+continuously while its *size* stays roughly constant.  The old refresh path
+pays a full ``build_flat_trie`` — an O(N·L·log N) lexsort over the whole
+catalog — per refresh; :class:`~repro.constraints.refresh.TrieSource`
+retains the sorted slab and pays O(Δ log Δ + N) per delta.  This benchmark
+measures both on the same post-churn SID set and verifies the outputs are
+bit-identical, at 0.1% / 1% / 10% churn on a >=1M-SID catalog.
+
+The default corpus is *clustered*: SIDs share deep prefixes, which is what
+RQ-VAE semantic IDs look like by construction (hierarchical residual codes
++ a final dedup token).  ``--uniform`` switches to i.i.d.-random SIDs — the
+no-sharing worst case, where the trie is ~L times larger relative to the
+catalog and the re-assembly term dominates the avoided sort.
+
+Timings interleave the two paths trial by trial and report medians, so a
+noisy-neighbor CPU burst cannot skew the ratio.  Only index *construction*
+is timed — device upload (``TransitionMatrix.from_flat_trie``) is identical
+for both paths, and the stacked-store restack (``with_members``) is shared
+by both registry refresh flavors.
+
+    PYTHONPATH=src python -m benchmarks.refresh_latency [--smoke] [--uniform]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.constraints import TrieSource
+from repro.core.trie import build_flat_trie
+
+VOCAB, LENGTH = 2048, 8
+CHURNS = (0.001, 0.01, 0.1)
+
+
+def make_catalog(rng: np.random.Generator, n: int, uniform: bool,
+                 n_heads: int | None = None) -> np.ndarray:
+    """A deduplicated (≈n, LENGTH) SID corpus."""
+    if uniform:
+        sids = rng.integers(0, VOCAB, size=(n, LENGTH))
+    else:
+        # hierarchical sharing: a pool of (L-1)-token heads, final-level
+        # fanout — the shape RQ-VAE codes with a dedup token produce
+        heads = rng.integers(
+            0, VOCAB, size=(n_heads or max(n // 16, 1), LENGTH - 1))
+        idx = rng.integers(0, heads.shape[0], size=n)
+        sids = np.concatenate(
+            [heads[idx], rng.integers(0, VOCAB, size=(n, 1))], axis=1)
+    return np.unique(sids.astype(np.int64), axis=0)
+
+
+def run(n_catalog: int = 1_000_000, trials: int = 5, uniform: bool = False,
+        quick: bool = False, smoke: bool = False) -> dict:
+    if quick:
+        n_catalog, trials = 200_000, 3
+    if smoke:
+        n_catalog, trials = 20_000, 2
+    rng = np.random.default_rng(0)
+    sids = make_catalog(rng, n_catalog, uniform)
+    label = "uniform" if uniform else "clustered"
+    t0 = time.perf_counter()
+    source = TrieSource.from_sids(sids, VOCAB, dense_d=2)
+    t_init = time.perf_counter() - t0
+    ft0 = source.flatten()
+    print(f"# corpus={label} N={source.n_sids} L={LENGTH} V={VOCAB} "
+          f"n_states={ft0.n_states} n_edges={ft0.n_edges} "
+          f"(source init {t_init:.2f}s)")
+
+    results = {}
+    for churn in CHURNS:
+        d = max(1, int(source.n_sids * churn))
+        rm = sids[rng.choice(sids.shape[0], d, replace=False)]
+        add = rng.integers(0, VOCAB, size=(d, LENGTH))
+        t_delta, t_full = [], []
+        checked = False
+        for _ in range(trials):
+            cur = source.clone()
+            t0 = time.perf_counter()
+            ft_delta = cur.apply_delta(add, rm)
+            t_delta.append(time.perf_counter() - t0)
+            new_sids = np.asarray(cur.sids, dtype=np.int64)
+            t0 = time.perf_counter()
+            ft_full = build_flat_trie(new_sids, VOCAB, dense_d=2)
+            t_full.append(time.perf_counter() - t0)
+            if not checked:  # once per churn level: same bits, always
+                for f in ("row_pointers", "edges", "level_bmax",
+                          "l0_mask_packed", "l0_states",
+                          "l1_mask_packed", "l1_states"):
+                    np.testing.assert_array_equal(
+                        getattr(ft_delta, f), getattr(ft_full, f),
+                        err_msg=f"delta rebuild diverged from full: {f}")
+                checked = True
+        full_ms = float(np.median(t_full)) * 1e3
+        delta_ms = float(np.median(t_delta)) * 1e3
+        speedup = full_ms / delta_ms
+        tag = f"{churn:g}"
+        emit(f"refresh/full_rebuild_ms@{tag}", full_ms * 1e3,
+             f"churn={churn:.1%};N={source.n_sids};corpus={label}")
+        emit(f"refresh/delta_ms@{tag}", delta_ms * 1e3,
+             f"churn={churn:.1%};N={source.n_sids};corpus={label}")
+        emit(f"refresh/speedup@{tag}", speedup,
+             f"churn={churn:.1%};full_ms={full_ms:.1f};"
+             f"delta_ms={delta_ms:.1f};bit_identical=True")
+        results[churn] = (full_ms, delta_ms, speedup)
+        print(f"# churn={churn:6.1%}: full={full_ms:8.1f}ms "
+              f"delta={delta_ms:7.1f}ms  speedup={speedup:.1f}x")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI wiring check: 20k-SID catalog, 2 trials")
+    ap.add_argument("--catalog", type=int, default=1_000_000,
+                    help="catalog size in SIDs (acceptance target: >=1M)")
+    ap.add_argument("--trials", type=int, default=5)
+    ap.add_argument("--uniform", action="store_true",
+                    help="i.i.d.-random SIDs (no prefix sharing; worst case)")
+    args = ap.parse_args()
+    run(n_catalog=args.catalog, trials=args.trials, uniform=args.uniform,
+        smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

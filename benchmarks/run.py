@@ -20,7 +20,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig2,fig3,fig4,table3,memory,multik")
+                    help="comma list: table1,fig2,fig3,fig4,table3,memory,"
+                         "multik,refresh")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
@@ -29,6 +30,7 @@ def main() -> None:
         fig4_branch_factor,
         memory_table,
         multi_constraint,
+        refresh_latency,
         table1_latency,
         table3_coldstart,
     )
@@ -41,6 +43,7 @@ def main() -> None:
         "memory": lambda: memory_table.run(quick=args.quick),
         "table3": lambda: table3_coldstart.run(quick=args.quick),
         "multik": lambda: multi_constraint.run(quick=args.quick),
+        "refresh": lambda: refresh_latency.run(quick=args.quick),
     }
     only = set(args.only.split(",")) if args.only else None
     for name, fn in sections.items():

@@ -13,21 +13,35 @@ Public surface:
                               with integer versioning and double-buffered
                               hot-swap at fixed static shapes.
   * ``ItemCatalog``         — the item-metadata snapshot predicates run on.
+  * ``CatalogDelta``        — incremental churn (items in / SIDs out) for the
+                              O(churn) ``swap_delta`` refresh path.
+  * ``TrieSource``          — retained sorted-slab builder state; delta-aware
+                              re-flattening bit-identical to a full rebuild.
+  * ``AsyncRefresher``      — background rebuild + step-boundary hot-swap
+                              pipeline with coalescing and backpressure.
+  * ``EnvelopeOverflow``    — a refresh outgrew the capacity envelope (the
+                              registry turns this into a cold regrow swap).
   * ``freshness_window`` / ``category_allowlist`` — built-in predicates.
 """
+from repro.constraints.refresh import AsyncRefresher, TrieSource
 from repro.constraints.registry import (
+    CatalogDelta,
     ConstraintRegistry,
     ItemCatalog,
     category_allowlist,
     freshness_window,
     synthetic_catalog,
 )
-from repro.constraints.store import ConstraintStore
+from repro.constraints.store import ConstraintStore, EnvelopeOverflow
 
 __all__ = [
     "ConstraintStore",
     "ConstraintRegistry",
     "ItemCatalog",
+    "CatalogDelta",
+    "TrieSource",
+    "AsyncRefresher",
+    "EnvelopeOverflow",
     "freshness_window",
     "category_allowlist",
     "synthetic_catalog",

@@ -1,4 +1,4 @@
-"""Named business-constraint registry with versioned hot-swap (DESIGN.md §4).
+"""Named business-constraint registry with versioned hot-swap (DESIGN.md §4, §7).
 
 Production constraint sets are *derived* objects: a business predicate
 (freshness window, category allowlist, ...) evaluated over the current item
@@ -9,20 +9,42 @@ catalog snapshot.  The registry owns that mapping:
                                       per-slot TransitionMatrix instances, and
                                       pack them into one ConstraintStore
                                       (with headroom, see below).
-  * ``swap(catalog)``               — double-buffered refresh: rebuild every
-                                      member from a NEW catalog snapshot into
-                                      the SAME capacity envelope, then flip
-                                      the front buffer atomically and bump the
-                                      integer version.  Static shapes are
-                                      preserved, so jitted decode steps keyed
-                                      on the store never recompile; serving
-                                      picks the new store up at its next step
-                                      boundary.
+  * ``swap(catalog)``               — double-buffered full refresh: rebuild
+                                      every member from a NEW catalog snapshot
+                                      into the SAME capacity envelope, then
+                                      flip the front buffer atomically and
+                                      bump the integer version.
+  * ``swap_delta(delta)``           — O(churn) refresh: splice a
+                                      :class:`CatalogDelta` into each slot's
+                                      retained :class:`TrieSource` instead of
+                                      re-sorting the whole catalog; bit-
+                                      identical to a full ``swap`` over the
+                                      post-delta snapshot (DESIGN.md §7).
 
 Headroom makes the envelope forgiving: a refreshed corpus that grew by less
-than ``headroom`` x still fits.  A snapshot that outgrows the envelope makes
-``swap`` raise *before* the front buffer is touched (the old store keeps
-serving) — the operator then rebuilds with a bigger envelope offline.
+than ``headroom`` x still fits and the swap is **hot** (static shapes
+preserved — jitted decode steps keyed on the store never recompile; serving
+picks the new store up at its next step boundary).  A snapshot that outgrows
+the envelope no longer raises to the operator: by default the registry
+*regrows* — it builds a store with a larger envelope from the same matrices
+and installs it as a **cold swap** (``envelope_generation`` bumps; engines
+re-specialize on the new static metadata, exactly one recompile) — while the
+old store keeps serving until the flip.  Pass ``on_overflow="raise"`` to get
+the old fail-fast behavior.
+
+Threading contract (needed by :class:`~repro.constraints.refresh
+.AsyncRefresher`, which calls ``swap``/``swap_delta`` from its worker
+thread while serving threads call ``current()``):
+
+  * ``_lock`` guards the small shared state — ``_front``, ``_version``,
+    ``_envelope_generation``, ``_names``, ``_predicates``.  It is held only
+    for quick reads/writes, never across a build.
+  * ``_refresh_lock`` serializes the builders (``build``/``swap``/
+    ``swap_delta``) and guards the retained ``_sources``/``_mats``.  A
+    builder acquires ``_lock`` only for the final front-buffer flip, so
+    readers never block on a rebuild.
+  * ``current()`` returns a consistent ``(store, version)`` pair; stores are
+    immutable pytrees, so a reader can keep using a snapshot after a flip.
 """
 from __future__ import annotations
 
@@ -32,16 +54,28 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.constraints.store import ConstraintStore
+from repro.constraints.refresh import TrieSource, row_keys
+from repro.constraints.store import ConstraintStore, EnvelopeOverflow
 from repro.core.transition_matrix import TransitionMatrix
 
 __all__ = [
     "ItemCatalog",
+    "CatalogDelta",
     "ConstraintRegistry",
     "freshness_window",
     "category_allowlist",
     "synthetic_catalog",
 ]
+
+
+def _check_sid_width(sids: np.ndarray, width: int, what: str) -> None:
+    """SID-width mismatches must fail loudly: the byte row keys used for
+    set membership null-pad the shorter side, so comparing keys of
+    different widths silently matches (and deletes) the WRONG items."""
+    if sids.shape[1] != width:
+        raise ValueError(
+            f"{what} has sid_length {sids.shape[1]}, expected {width}"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +90,109 @@ class ItemCatalog:
         n = self.sids.shape[0]
         if self.age_days.shape != (n,) or self.category.shape != (n,):
             raise ValueError("catalog metadata must be per-item (N,) arrays")
+
+    def select(self, mask: np.ndarray) -> "ItemCatalog":
+        """Row-filtered copy (predicate masks, delta composition)."""
+        return ItemCatalog(sids=self.sids[mask], age_days=self.age_days[mask],
+                           category=self.category[mask])
+
+    def apply_delta(self, delta: "CatalogDelta") -> "ItemCatalog":
+        """The snapshot this catalog becomes after ``delta``.
+
+        Removals (matched by SID) apply first, then additions are appended —
+        mirroring the registry's ``swap_delta`` semantics, so
+        ``reg.swap_delta(d)`` and ``reg.swap(catalog.apply_delta(d))`` land
+        bit-identical stores (asserted in ``tests/test_refresh.py``).
+        Assumes SIDs uniquely identify items (the TIGER dedup-token
+        contract); metadata updates are expressed as remove + add.
+        """
+        out = self
+        if delta.removed_sids is not None and len(delta.removed_sids):
+            _check_sid_width(delta.removed_sids, self.sids.shape[1],
+                             "removed_sids")
+            rk = np.unique(row_keys(
+                np.asarray(delta.removed_sids, dtype=np.int64)))
+            keep = ~np.isin(row_keys(out.sids.astype(np.int64)), rk)
+            out = out.select(keep)
+        if delta.added is not None and delta.added.sids.shape[0]:
+            a = delta.added
+            _check_sid_width(a.sids, self.sids.shape[1], "added.sids")
+            out = ItemCatalog(
+                sids=np.concatenate([out.sids, a.sids]),
+                age_days=np.concatenate([out.age_days, a.age_days]),
+                category=np.concatenate([out.category, a.category]),
+            )
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CatalogDelta:
+    """Incremental catalog churn: items entering and SIDs leaving.
+
+    ``added`` carries full metadata (predicates run on the new items only);
+    ``removed_sids`` is a plain (R, L) SID array — removal needs no
+    metadata.  Within one delta, removals apply before additions, so a SID
+    in both ends up present (with the new metadata).
+    """
+
+    added: Optional[ItemCatalog] = None
+    removed_sids: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.removed_sids is not None:
+            r = np.asarray(self.removed_sids)
+            if r.ndim != 2:
+                raise ValueError(
+                    f"removed_sids must be (R, L), got shape {r.shape}"
+                )
+            if self.added is not None:
+                _check_sid_width(r, self.added.sids.shape[1], "removed_sids")
+
+    @property
+    def is_empty(self) -> bool:
+        return (
+            (self.added is None or self.added.sids.shape[0] == 0)
+            and (self.removed_sids is None or len(self.removed_sids) == 0)
+        )
+
+    def compose(self, later: "CatalogDelta") -> "CatalogDelta":
+        """Sequential composition: ``self`` applied first, then ``later``.
+
+        Used by the AsyncRefresher to coalesce queued deltas: removals
+        union; additions that ``later`` removes again are dropped; within
+        each apply, removals still precede additions, so re-added SIDs
+        survive.  ``compose`` then apply-once equals apply-``self``-then-
+        apply-``later`` (asserted in ``tests/test_refresh.py``).
+        """
+        rm_parts = [
+            np.asarray(d.removed_sids, dtype=np.int64)
+            for d in (self, later)
+            if d.removed_sids is not None and len(d.removed_sids)
+        ]
+        removed = (np.unique(np.concatenate(rm_parts), axis=0)
+                   if rm_parts else None)
+        added = self.added
+        if (added is not None and added.sids.shape[0]
+                and later.removed_sids is not None
+                and len(later.removed_sids)):
+            later_rm = np.asarray(later.removed_sids)
+            _check_sid_width(later_rm, added.sids.shape[1],
+                             "later.removed_sids")
+            rk = np.unique(row_keys(later_rm.astype(np.int64)))
+            added = added.select(
+                ~np.isin(row_keys(added.sids.astype(np.int64)), rk)
+            )
+        adds = [a for a in (added, later.added)
+                if a is not None and a.sids.shape[0]]
+        if len(adds) == 2:
+            merged = ItemCatalog(
+                sids=np.concatenate([a.sids for a in adds]),
+                age_days=np.concatenate([a.age_days for a in adds]),
+                category=np.concatenate([a.category for a in adds]),
+            )
+        else:
+            merged = adds[0] if adds else None
+        return CatalogDelta(added=merged, removed_sids=removed)
 
 
 Predicate = Callable[[ItemCatalog], np.ndarray]  # -> (N,) bool item mask
@@ -96,84 +233,192 @@ class ConstraintRegistry:
         self._predicates: dict[str, Predicate] = {}
         self._front: Optional[ConstraintStore] = None
         self._version = 0
+        self._envelope_generation = 0
         self._lock = threading.Lock()
+        # serializes build/swap/swap_delta and guards _sources/_mats
+        self._refresh_lock = threading.Lock()
+        self._sources: list[TrieSource] = []
+        self._mats: list[TransitionMatrix] = []
 
     # ------------------------------------------------------------------
     def register(self, name: str, predicate: Predicate) -> int:
         """Claim the next slot for ``name``; returns its constraint id."""
-        if name in self._predicates:
-            raise ValueError(f"predicate {name!r} already registered")
-        if self._front is not None:
-            raise RuntimeError(
-                "cannot register after build(): slot ids are baked into "
-                "in-flight requests"
-            )
-        self._names.append(name)
-        self._predicates[name] = predicate
-        return len(self._names) - 1
+        with self._lock:
+            if name in self._predicates:
+                raise ValueError(f"predicate {name!r} already registered")
+            if self._front is not None:
+                raise RuntimeError(
+                    "cannot register after build(): slot ids are baked into "
+                    "in-flight requests"
+                )
+            self._names.append(name)
+            self._predicates[name] = predicate
+            return len(self._names) - 1
 
     def slot(self, name: str) -> int:
-        return self._names.index(name)
+        with self._lock:
+            return self._names.index(name)
 
     @property
     def names(self) -> tuple[str, ...]:
-        return tuple(self._names)
+        with self._lock:
+            return tuple(self._names)
 
     @property
     def version(self) -> int:
-        return self._version
+        with self._lock:
+            return self._version
+
+    @property
+    def envelope_generation(self) -> int:
+        """Bumps on every cold (regrown-envelope) swap; 1 after build()."""
+        with self._lock:
+            return self._envelope_generation
 
     # ------------------------------------------------------------------
-    def _build_matrices(self, catalog: ItemCatalog) -> list[TransitionMatrix]:
-        mats = []
-        for name in self._names:
-            mask = np.asarray(self._predicates[name](catalog), bool)
-            if mask.shape != (catalog.sids.shape[0],):
-                raise ValueError(f"predicate {name!r} returned a non-item mask")
+    def _eval_predicate(self, name: str, catalog: ItemCatalog) -> np.ndarray:
+        mask = np.asarray(self._predicates[name](catalog), bool)
+        if mask.shape != (catalog.sids.shape[0],):
+            raise ValueError(f"predicate {name!r} returned a non-item mask")
+        return mask
+
+    def _build_slots(self, catalog: ItemCatalog, names: list[str]):
+        """Full rebuild of every slot: (sources, matrices)."""
+        sources, mats = [], []
+        for name in names:
+            mask = self._eval_predicate(name, catalog)
             if not mask.any():
                 raise ValueError(
                     f"predicate {name!r} selects zero items in this snapshot"
                 )
-            mats.append(
-                TransitionMatrix.from_sids(
-                    catalog.sids[mask], self.vocab_size, dense_d=self.dense_d
-                )
+            src = TrieSource.from_sids(
+                catalog.sids[mask], self.vocab_size, dense_d=self.dense_d
             )
-        return mats
+            sources.append(src)
+            mats.append(TransitionMatrix.from_flat_trie(src.flatten()))
+        return sources, mats
 
-    def build(self, catalog: ItemCatalog) -> ConstraintStore:
-        """Initial (version 1) store from the first catalog snapshot."""
-        if not self._names:
-            raise RuntimeError("no predicates registered")
-        if self._front is not None:
-            raise RuntimeError("already built; use swap() to refresh")
-        store = ConstraintStore.from_matrices(
-            self._build_matrices(catalog), headroom=self.headroom
-        )
-        with self._lock:
-            self._front = store
-            self._version = 1
-        return store
+    def _fit_or_regrow(self, front: ConstraintStore, mats, on_overflow: str):
+        """Back buffer for ``mats``: hot (same envelope) or cold (regrown)."""
+        if on_overflow not in ("regrow", "raise"):
+            raise ValueError("on_overflow must be 'regrow' or 'raise'")
+        try:
+            return front.with_members(mats), False
+        except EnvelopeOverflow:
+            if on_overflow == "raise":
+                raise
+        # cold path: a fresh envelope (with headroom) from the same
+        # matrices — built HERE, off the serving path; the flip hands
+        # engines a store with new static metadata and they re-specialize
+        # exactly once (tests/test_refresh.py counts the compiles)
+        return ConstraintStore.from_matrices(mats, headroom=self.headroom), True
 
-    def swap(self, catalog: ItemCatalog) -> int:
-        """Refresh every slot from a new snapshot; returns the new version.
-
-        Double-buffered: the replacement store is fully built (and validated
-        against the capacity envelope) before the front pointer flips, so
-        concurrent readers only ever observe a complete store.
-        """
-        if self._front is None:
-            raise RuntimeError("swap() before build()")
-        # one-shot bulk replace: validates all slots against the envelope,
-        # then builds the back buffer with a single store copy
-        back = self._front.with_members(self._build_matrices(catalog))
+    def _flip(self, back: ConstraintStore, cold: bool) -> int:
         with self._lock:
             self._front = back
             self._version += 1
-        return self._version
+            if cold:
+                self._envelope_generation += 1
+            return self._version
+
+    # ------------------------------------------------------------------
+    def build(self, catalog: ItemCatalog) -> ConstraintStore:
+        """Initial (version 1) store from the first catalog snapshot."""
+        with self._refresh_lock:
+            with self._lock:
+                if not self._names:
+                    raise RuntimeError("no predicates registered")
+                if self._front is not None:
+                    raise RuntimeError("already built; use swap() to refresh")
+                names = list(self._names)
+            sources, mats = self._build_slots(catalog, names)
+            store = ConstraintStore.from_matrices(mats, headroom=self.headroom)
+            with self._lock:
+                self._front = store
+                self._version = 1
+                self._envelope_generation = 1
+            self._sources, self._mats = sources, mats
+            return store
+
+    def swap(self, catalog: ItemCatalog, *,
+             on_overflow: str = "regrow") -> int:
+        """Full refresh of every slot from a new snapshot; returns the
+        new version.
+
+        Double-buffered: the replacement store is fully built (and checked
+        against the capacity envelope) before the front pointer flips, so
+        concurrent readers only ever observe a complete store.  An
+        outgrown envelope regrows into a cold swap by default (see module
+        docstring); ``on_overflow="raise"`` restores fail-fast.
+        """
+        with self._refresh_lock:
+            with self._lock:
+                if self._front is None:
+                    raise RuntimeError("swap() before build()")
+                front = self._front
+                names = list(self._names)
+            sources, mats = self._build_slots(catalog, names)
+            back, cold = self._fit_or_regrow(front, mats, on_overflow)
+            version = self._flip(back, cold)
+            self._sources, self._mats = sources, mats
+            return version
+
+    def swap_delta(self, delta: CatalogDelta, *,
+                   on_overflow: str = "regrow") -> int:
+        """O(churn) refresh: splice ``delta`` into every slot's retained
+        :class:`TrieSource`; returns the (possibly unchanged) version.
+
+        Predicates run on ``delta.added`` only; ``delta.removed_sids`` is
+        dropped from every slot (absent SIDs are no-ops).  Slots the delta
+        does not touch reuse their cached matrices — no rebuild, no device
+        upload.  Bit-identical to ``swap(catalog.apply_delta(delta))``
+        provided SIDs uniquely identify items and predicates are
+        *item-local* (a row's verdict depends only on its own metadata) and
+        stable on unchanged items between refreshes; predicates that drift
+        with time (e.g. freshness re-evaluated much later) should be
+        reconciled with a periodic full ``swap``.
+        """
+        with self._refresh_lock:
+            with self._lock:
+                if self._front is None:
+                    raise RuntimeError("swap_delta() before build()")
+                front = self._front
+                names = list(self._names)
+            if delta.is_empty:
+                with self._lock:
+                    return self._version
+            added = delta.added
+            # STAGE every slot against the original sources (stage_delta
+            # never mutates retained state), validate the whole batch
+            # against the envelope, and only then commit — transactional
+            # across slots without cloning any slab
+            staged: list = [None] * len(names)
+            mats, changed = [], False
+            for i, name in enumerate(names):
+                add_sids = None
+                if added is not None and added.sids.shape[0]:
+                    add_sids = added.sids[self._eval_predicate(name, added)]
+                st = self._sources[i].stage_delta(add_sids,
+                                                  delta.removed_sids)
+                if st is None:
+                    mats.append(self._mats[i])  # slot untouched by the delta
+                else:
+                    changed = True
+                    staged[i] = st
+                    mats.append(TransitionMatrix.from_flat_trie(st[0]))
+            if not changed:
+                with self._lock:
+                    return self._version
+            back, cold = self._fit_or_regrow(front, mats, on_overflow)
+            version = self._flip(back, cold)
+            for i, st in enumerate(staged):
+                if st is not None:
+                    self._sources[i].commit(st)
+            self._mats = mats
+            return version
 
     def current(self) -> tuple[ConstraintStore, int]:
-        """The live (store, version) pair; atomic with respect to swap()."""
+        """The live (store, version) pair; atomic with respect to swaps."""
         with self._lock:
             if self._front is None:
                 raise RuntimeError("registry not built yet")

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.transition_matrix import TransitionMatrix
+from repro.core.trie import check_index_capacity
 
-__all__ = ["ConstraintStore"]
+__all__ = ["ConstraintStore", "EnvelopeOverflow"]
 
 _LEAF_FIELDS = (
     "row_pointers", "edges", "l0_mask_packed", "l0_states",
@@ -35,9 +36,33 @@ _LEAF_FIELDS = (
 )
 
 
+class EnvelopeOverflow(ValueError):
+    """A refreshed matrix does not fit the store's capacity envelope.
+
+    Raised by :meth:`ConstraintStore._check_fits` (and therefore by the
+    ``with_member``/``with_members`` hot-swap path).  The registry catches
+    this to route an envelope *regrowth* — a background rebuild with a
+    larger envelope and one explicit recompile — instead of surfacing the
+    error to the operator while the live store goes stale.
+    """
+
+
 def _edge_pad(bmax: int) -> int:
     """Speculative-slice safety pad (same formula as the trie builder)."""
     return -int(bmax) % 128 + int(bmax) + 128
+
+
+def _edge_capacity(n_edges: int, bmax_max: int) -> int:
+    """Edge rows needed to hold ``n_edges`` real edges under ``bmax_max``.
+
+    THE envelope formula: a speculative fixed-length slice of any branch
+    factor ``<= bmax_max`` starting at the final real edge must stay in
+    bounds.  ``from_matrices`` sizes the envelope with it and
+    ``_check_fits`` validates swaps against it — one helper, so the two
+    can never drift apart (a store used to reject its own members because
+    the check re-added the pad on top of an already-padded count).
+    """
+    return int(n_edges) + _edge_pad(bmax_max)
 
 
 @jax.tree_util.register_dataclass
@@ -101,8 +126,12 @@ class ConstraintStore:
         n_states_env = int(np.ceil(max(m.n_states for m in mats) * grow))
         e_real = max(m.n_edges for m in mats)
         n_edges_env = max(
-            int(np.ceil(e_real * grow)) + _edge_pad(max(max(bmax_env), 1)),
+            _edge_capacity(int(np.ceil(e_real * grow)), max(max(bmax_env), 1)),
             max(m.edges.shape[0] for m in mats),
+        )
+        check_index_capacity(
+            np.asarray(ref.row_pointers).dtype, n_states=n_states_env,
+            n_edge_rows=n_edges_env, vocab_size=ref.vocab_size,
         )
 
         stacked = {
@@ -157,9 +186,14 @@ class ConstraintStore:
     def member(self, k: int) -> TransitionMatrix:
         """Slice out set ``k`` as a standalone TransitionMatrix.
 
-        The returned matrix carries the store's padded arrays and envelope
-        metadata; padding is semantically inert (empty rows / zero edges), so
-        its lookups are bit-identical to the original member's.
+        The returned matrix carries the store's padded arrays (envelope
+        shapes, envelope ``level_bmax``) but the member's REAL ``n_states``/
+        ``n_edges``/``n_constraints``: padding is semantically inert (empty
+        rows / zero edges), so lookups are bit-identical to the original
+        member's, and the real counts keep the matrix re-installable — a
+        ``store.with_member(k, store.member(k))`` roundtrip always fits the
+        envelope (it used to be rejected because the member reported the
+        envelope edge count, which the fit check then padded *again*).
         """
         if not 0 <= k < self.num_sets:
             raise IndexError(f"constraint set {k} outside [0, {self.num_sets})")
@@ -174,32 +208,33 @@ class ConstraintStore:
             sid_length=self.sid_length,
             dense_d=self.dense_d,
             level_bmax=self.level_bmax,
-            n_states=self.n_states,
-            n_edges=self.n_edges,
+            n_states=int(self.member_n_states[k]),
+            n_edges=int(self.member_n_edges[k]),
             n_constraints=int(self.member_n_constraints[k]),
         )
 
     def _check_fits(self, tm: TransitionMatrix) -> None:
-        """Raise unless ``tm`` fits this store's capacity envelope."""
+        """Raise :class:`EnvelopeOverflow` unless ``tm`` fits the envelope."""
         for f in ("vocab_size", "sid_length", "dense_d"):
             if getattr(tm, f) != getattr(self, f):
                 raise ValueError(
                     f"hot-swap {f} mismatch: {getattr(tm, f)} != {getattr(self, f)}"
                 )
         if tm.n_states > self.n_states:
-            raise ValueError(
+            raise EnvelopeOverflow(
                 f"hot-swap needs {tm.n_states} states but envelope holds "
                 f"{self.n_states}; rebuild the store with more headroom"
             )
-        needed_edges = tm.n_edges + _edge_pad(max(self.level_bmax))
+        needed_edges = max(_edge_capacity(tm.n_edges, max(self.level_bmax)),
+                           tm.edges.shape[0])
         if needed_edges > self.n_edges:
-            raise ValueError(
+            raise EnvelopeOverflow(
                 f"hot-swap needs {needed_edges} edge rows but envelope holds "
                 f"{self.n_edges}; rebuild the store with more headroom"
             )
         for l, (b_new, b_env) in enumerate(zip(tm.level_bmax, self.level_bmax)):
             if b_new > b_env:
-                raise ValueError(
+                raise EnvelopeOverflow(
                     f"hot-swap level-{l} branch factor {b_new} exceeds "
                     f"envelope {b_env}; rebuild the store with more headroom"
                 )

@@ -53,18 +53,21 @@ class TransitionMatrix:
     def from_flat_trie(cls, ft: trie_lib.FlatTrie) -> "TransitionMatrix":
         V = ft.vocab_size
         packed_w = (V + 7) // 8
+        # dummy tables inherit the trie's index dtype so an int64-promoted
+        # build (check_index_capacity) yields a dtype-consistent pytree
+        idx_dt = ft.row_pointers.dtype
         if ft.l0_mask_packed is not None:
             l0_mask = jnp.asarray(ft.l0_mask_packed)
             l0_states = jnp.asarray(ft.l0_states)
         else:
             l0_mask = jnp.full((packed_w,), 0xFF, dtype=jnp.uint8)
-            l0_states = jnp.zeros((V,), dtype=jnp.int32)
+            l0_states = jnp.zeros((V,), dtype=idx_dt)
         if ft.l1_mask_packed is not None:
             l1_mask = jnp.asarray(ft.l1_mask_packed)
             l1_states = jnp.asarray(ft.l1_states)
         else:
             l1_mask = jnp.zeros((1, 1), dtype=jnp.uint8)
-            l1_states = jnp.zeros((1, 1), dtype=jnp.int32)
+            l1_states = jnp.zeros((1, 1), dtype=idx_dt)
         return cls(
             row_pointers=jnp.asarray(ft.row_pointers),
             edges=jnp.asarray(ft.edges),

@@ -26,7 +26,8 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["FlatTrie", "build_flat_trie", "pack_bits", "unpack_bits_word"]
+__all__ = ["FlatTrie", "build_flat_trie", "pack_bits", "unpack_bits_word",
+           "sorted_unique_sids", "check_index_capacity"]
 
 
 def pack_bits(bits: np.ndarray) -> np.ndarray:
@@ -100,6 +101,49 @@ def _validate_sids(sids: np.ndarray, vocab_size: int) -> np.ndarray:
     return sids.astype(np.int64, copy=False)
 
 
+def sorted_unique_sids(sids: np.ndarray) -> np.ndarray:
+    """Lexicographically sorted, deduplicated SID rows.
+
+    This is the canonical slab order every CSR flattening consumes: the
+    builder below re-derives it with a full lexsort, while
+    :class:`~repro.constraints.refresh.TrieSource` *retains* it across
+    refreshes and maintains it by sorted merge — which is what makes
+    delta rebuilds O(churn) instead of O(N log N).
+    """
+    n, L = sids.shape
+    # Lexicographic sort; np.lexsort keys are last-significant-first.
+    order = np.lexsort(tuple(sids[:, c] for c in range(L - 1, -1, -1)))
+    s = sids[order]
+    # Drop duplicate SIDs.
+    if n > 1:
+        dup = np.all(s[1:] == s[:-1], axis=1)
+        if dup.any():
+            s = s[np.concatenate([[True], ~dup])]
+    return s
+
+
+def check_index_capacity(index_dtype, *, n_states: int, n_edge_rows: int,
+                         vocab_size: int) -> None:
+    """Raise unless every CSR index value fits ``index_dtype``.
+
+    ``row_pointers`` values reach ``n_edges`` (and speculative slice starts
+    add the bmax pad on top, hence ``n_edge_rows`` includes the pad);
+    ``edges[:, 1]`` reaches ``n_states - 1``; ``edges[:, 0]`` reaches
+    ``vocab_size - 1`` — and under ``dense_d >= 2`` the *virtual* l0 state
+    ids reach ``token + 1 == vocab_size`` (Appendix E), so the full vocab
+    size must fit.  Near/above 2^31 edges an int32 cast silently wraps and
+    the trie walks garbage — fail loudly instead and point at int64.
+    """
+    limit = np.iinfo(np.dtype(index_dtype)).max
+    worst = max(int(n_states), int(n_edge_rows), int(vocab_size))
+    if worst > limit:
+        raise ValueError(
+            f"index_dtype={np.dtype(index_dtype).name} cannot address "
+            f"{worst} (n_states={n_states}, padded edge rows={n_edge_rows}, "
+            f"vocab_size={vocab_size}); build with index_dtype=np.int64"
+        )
+
+
 def build_flat_trie(
     sids: np.ndarray,
     vocab_size: int,
@@ -118,15 +162,7 @@ def build_flat_trie(
         raise ValueError("dense_d must be 0, 1, or 2 (paper: d<=2 in practice)")
     sids = _validate_sids(sids, vocab_size)
     n, L = sids.shape
-
-    # Lexicographic sort; np.lexsort keys are last-significant-first.
-    order = np.lexsort(tuple(sids[:, c] for c in range(L - 1, -1, -1)))
-    s = sids[order]
-    # Drop duplicate SIDs.
-    if n > 1:
-        dup = np.all(s[1:] == s[:-1], axis=1)
-        if dup.any():
-            s = s[np.concatenate([[True], ~dup])]
+    s = sorted_unique_sids(sids)
     n = s.shape[0]
 
     # new_prefix[i, l] == True iff row i starts a new unique (l+1)-prefix.
@@ -179,12 +215,18 @@ def build_flat_trie(
     # so their CSR rows are *trimmed*: states at levels < dense_d get no ids
     # and their edges are dropped — this is what makes the Appendix-B memory
     # accounting hold.  States at levels >= dense_d are renumbered to start
-    # at 1 (sink stays 0).
-    d_eff = dense_d if L > dense_d else 0
+    # at 1 (sink stays 0).  When every level is dense (sid_length == dense_d)
+    # only the leaves survive and the CSR carries zero edges.
+    d_eff = min(dense_d, L)
     shift = int(level_offsets[d_eff]) - 1
-    src = np.concatenate(src_all[d_eff:]) - shift
-    tok = np.concatenate(tok_all[d_eff:])
-    dst = np.concatenate(dst_all[d_eff:]) - shift
+    if d_eff < L:
+        src = np.concatenate(src_all[d_eff:]) - shift
+        tok = np.concatenate(tok_all[d_eff:])
+        dst = np.concatenate(dst_all[d_eff:]) - shift
+    else:
+        src = np.zeros(0, dtype=np.int64)
+        tok = np.zeros(0, dtype=np.int64)
+        dst = np.zeros(0, dtype=np.int64)
     n_edges = src.shape[0]
     n_states = int(level_offsets[-1]) - shift
     new_offsets = np.maximum(level_offsets - shift, 1)
@@ -203,6 +245,8 @@ def build_flat_trie(
     # Pallas kernel rounds its burst length up to a slot-chunk multiple, so
     # pad generously (a few KB at most).
     pad = -int(level_bmax.max()) % 128 + int(level_bmax.max()) + 128
+    check_index_capacity(index_dtype, n_states=n_states,
+                         n_edge_rows=n_edges + pad, vocab_size=vocab_size)
     edges = np.concatenate(
         [edges_unpadded, np.zeros((pad, 2), dtype=edges_unpadded.dtype)], axis=0
     ).astype(index_dtype)
@@ -228,8 +272,10 @@ def build_flat_trie(
         rows0 = np.nonzero(new_prefix[:, 0])[0]
         y1 = s[rows0, 0]
         l0_mask[y1] = True
-        if dense_d == 1:
-            # real (renumbered) CSR ids of level-1 states: VNTK runs from step 1
+        if dense_d == 1 or L < 2:
+            # real (renumbered) CSR ids of level-1 states: the next step (VNTK
+            # under dense_d == 1, or nothing at all when L == 1) indexes the
+            # trimmed CSR directly
             l0_states[y1] = (level_offsets[1] + within[rows0, 0]) - shift
         else:
             # virtual token-indexed ids (paper Appendix E): step 1 uses the

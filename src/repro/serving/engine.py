@@ -16,6 +16,10 @@ sets simultaneously.  The retriever's constraint method is bound by its
 re-read at every batch boundary and installed via
 ``retriever.set_constraints``, so a hot-swap takes effect on the next batch
 with zero recompilation (shapes and static metadata are swap-invariant).
+A **cold** swap — the registry regrew the capacity envelope because a
+snapshot outgrew it (DESIGN.md §7) — changes static metadata: the engine
+installs it the same way, the jitted step re-specializes exactly once
+(counted in ``cold_swaps``), and serving drains without dropping requests.
 """
 from __future__ import annotations
 
@@ -108,6 +112,8 @@ class ServingEngine:
         self.max_len = max_len
         self.retriever = retriever  # GenerativeRetriever: SID serving mode
         self.registry = registry  # ConstraintRegistry: hot-swappable store
+        self._installed_version = None
+        self.cold_swaps = 0  # envelope regrowths routed through this engine
         self._prefill = jax.jit(
             lambda p, t: transformer.prefill(p, t, cfg, max_len=max_len)
         )
@@ -152,9 +158,14 @@ class ServingEngine:
             version = None
             if self.registry is not None:
                 store, version = self.registry.current()
-                # hot-swap path: only policy pytree leaves change, so the
-                # retriever's jitted step is reused without recompiling
-                self.retriever.set_constraints(store)
+                if version != self._installed_version:
+                    # hot-swap path: only policy pytree leaves change, so
+                    # the retriever's jitted step is reused without
+                    # recompiling; a cold (regrown-envelope) swap changes
+                    # static metadata and re-specializes exactly once
+                    if self.retriever.set_constraints(store):
+                        self.cold_swaps += 1
+                    self._installed_version = version
             # A plain single-matrix retriever serves every request under the
             # one set: constraint ids stay host-side and must all be 0.
             num_sets = self.retriever.num_sets

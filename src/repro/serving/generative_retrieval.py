@@ -75,13 +75,18 @@ class GenerativeRetriever:
         """Stacked-store member count, or None when single-tenant."""
         return self.policy.num_sets
 
-    def set_constraints(self, obj) -> None:
-        """Install a refreshed matrix/store (the registry hot-swap path).
+    def set_constraints(self, obj) -> bool:
+        """Install a refreshed matrix/store (the registry swap path).
 
-        Replaces only pytree leaves — shapes and static metadata are
-        envelope-invariant — so the jitted retrieve step is reused as-is.
+        A hot swap (same capacity envelope) replaces only pytree leaves —
+        shapes and static metadata are invariant — so the jitted retrieve
+        step is reused as-is.  A cold swap (regrown envelope, DESIGN.md §7)
+        changes static metadata, so the next ``retrieve`` re-specializes
+        the jitted step exactly once.  Returns True iff the swap was cold.
         """
+        before = jax.tree_util.tree_structure(self.policy)
         self.policy = self.policy.with_constraints(obj)
+        return jax.tree_util.tree_structure(self.policy) != before
 
     @property
     def tm(self):

@@ -117,16 +117,18 @@ class SpmdRetriever(GenerativeRetriever):
         ))
 
     # -- hot-swap ------------------------------------------------------------
-    def set_constraints(self, obj) -> None:
-        """Registry hot-swap under the mesh: leaf values only.
+    def set_constraints(self, obj) -> bool:
+        """Registry swap under the mesh; returns True iff it was cold.
 
-        The swapped-in matrix/store is re-padded to the deterministic
-        row-sharded envelope, so an envelope-stable swap (the
-        ConstraintRegistry path) changes neither shapes, static metadata,
-        nor the spec tree — the mesh executable is reused as-is.  A swap
-        that DOES change static metadata (e.g. a raw TransitionMatrix with
-        a different state count) rebuilds the step and recompiles, matching
-        the single-device retriever's retrace-on-metadata-change behavior.
+        A hot swap (envelope-stable, the ConstraintRegistry refresh path)
+        changes only leaf values: the swapped-in matrix/store is re-padded
+        to the deterministic row-sharded envelope, so neither shapes,
+        static metadata, nor the spec tree move — the mesh executable is
+        reused as-is.  A cold swap (regrown envelope, DESIGN.md §7 — or a
+        raw TransitionMatrix with different state counts) changes static
+        metadata: the shard_map step is rebuilt and recompiles exactly
+        once, matching the single-device retriever's retrace-on-metadata-
+        change behavior.
         """
         self.policy = self.policy.with_constraints(obj)
         if self.rows == "model":
@@ -135,6 +137,8 @@ class SpmdRetriever(GenerativeRetriever):
             )
         if jax.tree_util.tree_structure(self.policy) != self._pol_struct:
             self._build_spmd_step()
+            return True
+        return False
 
     # -- serving -------------------------------------------------------------
     def retrieve(self, history: np.ndarray,
@@ -201,6 +205,7 @@ class SpmdServingEngine:
         self.registry = registry
         self.prompt_width = prompt_width
         self._installed_version = None
+        self.cold_swaps = 0  # envelope regrowths routed through this engine
 
     def serve(self, queue, max_batches: int = 10_000) -> dict:
         results: dict[int, dict] = {}
@@ -213,7 +218,8 @@ class SpmdServingEngine:
             if self.registry is not None:
                 store, version = self.registry.current()
                 if version != self._installed_version:
-                    self.retriever.set_constraints(store)
+                    if self.retriever.set_constraints(store):
+                        self.cold_swaps += 1  # regrown envelope: one rebuild
                     self._installed_version = version
             num_sets = self.retriever.num_sets
             limit = num_sets if num_sets is not None else 1

@@ -211,12 +211,53 @@ def test_with_members_bulk_swap_matches_per_slot(rng):
 
 
 def test_with_member_envelope_rejection(rng):
+    from repro.constraints import EnvelopeOverflow
+
     mats = [TransitionMatrix.from_sids(make_sids(rng, 30, V, L), V)
             for _ in range(2)]
     store = ConstraintStore.from_matrices(mats)  # no headroom
     big = TransitionMatrix.from_sids(make_sids(rng, 2000, V, L), V)
-    with pytest.raises(ValueError, match="headroom"):
+    with pytest.raises(EnvelopeOverflow, match="headroom"):
         store.with_member(0, big)
+
+
+def test_zero_headroom_store_accepts_its_own_members(rng):
+    """Envelope self-roundtrip: the fit check and the from_matrices sizing
+    share one formula, so re-installing a store's own members (what a
+    refresh that leaves a slot unchanged amounts to) always fits — even
+    with headroom=0.  The old check re-added the speculative-slice pad on
+    top of the member's already-padded edge count and rejected it."""
+    _, mats = build_sets(rng, dense_d=2)
+    store = ConstraintStore.from_matrices(mats, headroom=0.0)
+    members = [store.member(k) for k in range(store.num_sets)]
+    for k, m in enumerate(members):
+        # member() reports the REAL counts, not the envelope's
+        assert m.n_states == int(store.member_n_states[k])
+        assert m.n_edges == int(store.member_n_edges[k])
+    roundtrip = store.with_members(members)
+    for a, b in zip(jax.tree.leaves(store), jax.tree.leaves(roundtrip)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    single = store.with_member(1, members[1])
+    for a, b in zip(jax.tree.leaves(store), jax.tree.leaves(single)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the original (unpadded) matrices also still fit their own envelope
+    roundtrip2 = store.with_members(mats)
+    np.testing.assert_array_equal(np.asarray(store.edges),
+                                  np.asarray(roundtrip2.edges))
+
+
+def test_from_matrices_index_capacity_guard(rng):
+    """The stacked envelope must fit the members' index dtype — headroom
+    can push the edge envelope past what e.g. int16 CSR indices address."""
+    from repro.core.trie import build_flat_trie
+
+    sids = make_sids(rng, 2000, V, L)
+    small = TransitionMatrix.from_flat_trie(
+        build_flat_trie(sids, V, index_dtype=np.int16))
+    with pytest.raises(ValueError, match="int16"):
+        ConstraintStore.from_matrices([small], headroom=8.0)
+    ok = ConstraintStore.from_matrices([small], headroom=0.1)
+    assert ok.num_sets == 1
 
 
 # ---------------------------------------------------------------------------

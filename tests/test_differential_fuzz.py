@@ -56,10 +56,15 @@ def make_case(seed: int) -> dict:
                 table=jnp.asarray(table))
 
 
-def exact_policies(case) -> dict:
-    """Every backend family that must match the oracle exactly."""
+def exact_policies(case, tm=None) -> dict:
+    """Every backend family that must match the oracle exactly.
+
+    ``tm`` overrides the STATIC matrix (the refresh tests pass one built
+    through ``TrieSource.apply_delta`` instead of from scratch).
+    """
     sids, V, L = case["sids"], case["V"], case["L"]
-    tm = TransitionMatrix.from_sids(sids, V, dense_d=case["dense_d"])
+    if tm is None:
+        tm = TransitionMatrix.from_sids(sids, V, dense_d=case["dense_d"])
     decoy = np.unique(
         np.random.default_rng(case["seed"] + 1).integers(
             0, V, size=(40, L)).astype(np.int64), axis=0)
@@ -171,6 +176,62 @@ def test_fuzz_beam_search_matches_cpu_trie_oracle(seed):
         np.testing.assert_allclose(
             got_s, want_s, rtol=1e-5,
             err_msg=f"seed={seed} backend={name}")
+
+
+# ---------------------------------------------------------------------------
+# refresh differential: delta-rebuilt tries drive every backend correctly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", FUZZ_SEEDS)
+def test_fuzz_delta_refresh_bit_identical_and_masks_agree(seed):
+    """Seeded churn through ``TrieSource.apply_delta``: (1) the rebuilt
+    FlatTrie equals a from-scratch ``build_flat_trie`` array-for-array,
+    and (2) every exact backend built from the delta trie admits the same
+    masks as the host-trie oracle over the post-churn corpus — refresh
+    must be invisible to decode semantics (DESIGN.md §7)."""
+    from repro.constraints import TrieSource
+    from repro.core.trie import build_flat_trie
+
+    case = make_case(seed)
+    rng = np.random.default_rng(seed + 5000)
+    V, L, dense_d = case["V"], case["L"], case["dense_d"]
+    src = TrieSource.from_sids(case["sids"], V, dense_d=dense_d)
+    pool = np.asarray(src.sids, dtype=np.int64)
+    rm = pool[rng.integers(0, pool.shape[0],
+                           size=max(1, pool.shape[0] // 5))]
+    add = rng.integers(0, V, size=(max(4, pool.shape[0] // 5), L))
+    ft = src.apply_delta(add, rm)
+    assert ft is not None  # rm hits present rows: the slab changed
+    new_sids = np.asarray(src.sids, dtype=np.int64)
+    scratch = build_flat_trie(new_sids, V, dense_d=dense_d)
+    assert ft.n_states == scratch.n_states and ft.n_edges == scratch.n_edges
+    for f in ("row_pointers", "edges", "level_offsets", "level_bmax",
+              "l0_mask_packed", "l0_states", "l1_mask_packed", "l1_states"):
+        a, b = getattr(ft, f), getattr(scratch, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"seed={seed}: delta vs from-scratch {f}")
+
+    case2 = dict(case, sids=new_sids)
+    delta_tm = TransitionMatrix.from_flat_trie(ft)
+    oracle = DecodePolicy.cpu_trie(new_sids, V)
+    prefixes = sample_prefixes(case2, rng)
+    lp = jnp.asarray(
+        rng.normal(size=(prefixes.shape[0], V)).astype(np.float32))
+    for step in range(L):
+        want_lp, want_valid = masks_along_prefix(
+            case2, oracle, prefixes, lp, step, stacked=False)
+        for name, policy in exact_policies(case2, tm=delta_tm).items():
+            got_lp, got_valid = masks_along_prefix(
+                case2, policy, prefixes, lp, step,
+                stacked=policy.requires_constraint_ids)
+            np.testing.assert_array_equal(
+                got_valid, want_valid,
+                err_msg=f"seed={seed} step={step} backend={name}: "
+                        "post-refresh admitted token set diverged")
+            np.testing.assert_allclose(
+                got_lp, want_lp, rtol=1e-6, atol=1e-6,
+                err_msg=f"seed={seed} step={step} backend={name}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,583 @@
+"""Incremental catalog refresh: TrieSource deltas + AsyncRefresher (§7).
+
+Three layers of guarantees:
+  1. ``TrieSource.apply_delta`` is BIT-IDENTICAL to a from-scratch
+     ``build_flat_trie`` over the post-delta SID set (array for array,
+     dtype for dtype) under arbitrary seeded churn — the from-scratch
+     builder stays the oracle.
+  2. ``ConstraintRegistry.swap_delta`` lands the same store as a full
+     ``swap`` over the delta-applied catalog, and an envelope overflow
+     becomes a cold *regrow* swap instead of an operator-facing error.
+  3. At the engine level, async hot swaps recompile NOTHING and cold swaps
+     recompile exactly once while the queue drains without dropped
+     requests — single-device and SPMD.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.constraints import (
+    AsyncRefresher,
+    CatalogDelta,
+    ConstraintRegistry,
+    EnvelopeOverflow,
+    ItemCatalog,
+    TrieSource,
+    category_allowlist,
+    freshness_window,
+)
+from repro.core import NEG_INF, TransitionMatrix, beam_search
+from repro.core.trie import build_flat_trie
+from repro.decoding import DecodePolicy
+from repro.models import transformer
+from repro.serving.engine import RequestQueue, ServingEngine
+from repro.serving.generative_retrieval import GenerativeRetriever
+from conftest import make_sids
+
+V, L = 16, 4
+
+
+def assert_tries_equal(a, b):
+    """Array-for-array, dtype-for-dtype FlatTrie equality."""
+    assert a.n_states == b.n_states and a.n_edges == b.n_edges
+    assert a.n_constraints == b.n_constraints
+    for f in ("row_pointers", "edges", "level_offsets", "level_bmax"):
+        x, y = getattr(a, f), getattr(b, f)
+        np.testing.assert_array_equal(x, y, err_msg=f)
+    for f in ("l0_mask_packed", "l0_states", "l1_mask_packed", "l1_states"):
+        x, y = getattr(a, f), getattr(b, f)
+        assert (x is None) == (y is None), f
+        if x is not None:
+            np.testing.assert_array_equal(x, y, err_msg=f)
+            assert x.dtype == y.dtype, (f, x.dtype, y.dtype)
+
+
+def assert_stores_equal(a, b):
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# TrieSource: delta == from-scratch, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dense_d", [0, 1, 2])
+@pytest.mark.parametrize("length", [1, 2, 4, 6])
+def test_flatten_matches_builder(rng, dense_d, length):
+    sids = make_sids(rng, 200, V, length, clustered=True)
+    src = TrieSource.from_sids(sids, V, dense_d=dense_d)
+    assert_tries_equal(src.flatten(), build_flat_trie(sids, V, dense_d=dense_d))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_apply_delta_bit_identical_under_churn(seed):
+    """Seeded random add/remove churn: every delta rebuild must equal the
+    from-scratch build over the post-delta set, across rounds."""
+    rng = np.random.default_rng(seed)
+    vocab = int(rng.integers(5, 30))
+    length = int(rng.integers(1, 6))
+    dense_d = int(rng.choice([0, 1, 2]))
+    sids = rng.integers(0, vocab, size=(int(rng.integers(5, 250)), length))
+    src = TrieSource.from_sids(sids, vocab, dense_d=dense_d)
+    cur = {tuple(r) for r in sids.astype(np.int64)}
+    for _ in range(5):
+        n_add, n_rm = int(rng.integers(0, 40)), int(rng.integers(0, 40))
+        add = rng.integers(0, vocab, size=(n_add, length)) if n_add else None
+        rm = None
+        if n_rm and cur:
+            pool = np.array(sorted(cur), np.int64)
+            rm = np.concatenate([
+                pool[rng.integers(0, pool.shape[0], size=n_rm // 2 + 1)],
+                rng.integers(0, vocab, size=(n_rm // 2, length)),
+            ])  # mix of present rows and (mostly absent) random rows
+        rm_set = {tuple(r) for r in rm} if rm is not None else set()
+        add_set = ({tuple(r) for r in add.astype(np.int64)}
+                   if add is not None else set())
+        new = (cur - rm_set) | add_set
+        if not new:
+            with pytest.raises(ValueError, match="non-empty"):
+                src.apply_delta(add, rm)
+            continue
+        ft = src.apply_delta(add, rm)
+        want = np.array(sorted(new), np.int64)
+        if ft is not None:
+            assert_tries_equal(ft,
+                               build_flat_trie(want, vocab, dense_d=dense_d))
+        np.testing.assert_array_equal(
+            np.asarray(src.sids, dtype=np.int64), want)
+        cur = new
+
+
+def test_apply_delta_noop_and_semantics(rng):
+    sids = make_sids(rng, 80, V, L, clustered=True)
+    src = TrieSource.from_sids(sids, V)
+    present = np.asarray(src.sids, dtype=np.int64)
+    # removing absent rows + re-adding present rows: slab untouched -> None
+    absent = present.copy()
+    absent[:, 0] = (absent[:, 0] + 1) % V
+    key_set = {tuple(r) for r in present}
+    absent = absent[[tuple(r) not in key_set for r in absent]]
+    assert src.apply_delta(add_sids=present[:5], remove_sids=absent) is None
+    assert src.apply_delta() is None
+    # remove-then-readd of the same SID splices and returns an equal trie
+    ft = src.apply_delta(add_sids=present[:3], remove_sids=present[:3])
+    assert ft is not None
+    assert_tries_equal(ft, build_flat_trie(present, V, dense_d=2))
+    # membership helper
+    assert present[0] in src and absent[0] not in src
+
+
+def test_apply_delta_transactional_on_error(rng):
+    sids = make_sids(rng, 50, V, L)
+    src = TrieSource.from_sids(sids, V)
+    before = np.asarray(src.sids, dtype=np.int64).copy()
+    with pytest.raises(ValueError, match="non-empty"):
+        src.apply_delta(remove_sids=before)  # would empty the set
+    with pytest.raises(ValueError, match="range"):
+        src.apply_delta(add_sids=np.full((2, L), V + 3))
+    with pytest.raises(ValueError, match="must be"):
+        src.apply_delta(add_sids=np.zeros((2, L + 1), int))
+    np.testing.assert_array_equal(np.asarray(src.sids, np.int64), before)
+    assert_tries_equal(src.flatten(), build_flat_trie(before, V, dense_d=2))
+
+
+def test_clone_is_independent(rng):
+    sids = make_sids(rng, 60, V, L)
+    src = TrieSource.from_sids(sids, V)
+    other = src.clone()
+    other.apply_delta(remove_sids=np.asarray(src.sids[:10], np.int64))
+    assert src.n_sids == np.unique(sids, axis=0).shape[0]
+    assert other.n_sids == src.n_sids - 10
+
+
+def test_virtual_id_boundary_vocab_raises():
+    """Under dense_d >= 2, virtual l0 ids reach token + 1 == vocab_size;
+    at the exact dtype boundary (V = 2^15, int16) that wraps silently —
+    the capacity guard must therefore cover V itself, in BOTH builders."""
+    sids = np.array([[32767, 1], [5, 2]])
+    with pytest.raises(ValueError, match="int16"):
+        build_flat_trie(sids, 32768, dense_d=2, index_dtype=np.int16)
+    with pytest.raises(ValueError, match="int16"):
+        TrieSource.from_sids(sids, 32768, dense_d=2,
+                             index_dtype=np.int16).flatten()
+
+
+def test_index_capacity_guard_small_dtypes(rng):
+    sids = make_sids(rng, 300, V, L)
+    with pytest.raises(ValueError, match="int8"):
+        build_flat_trie(sids, V, dense_d=0, index_dtype=np.int8)
+    with pytest.raises(ValueError, match="int8"):
+        TrieSource.from_sids(sids, V, dense_d=0,
+                             index_dtype=np.int8).flatten()
+    big = TrieSource.from_sids(sids, V, dense_d=0,
+                               index_dtype=np.int64).flatten()
+    assert big.edges.dtype == np.int64
+    assert_tries_equal(
+        big, build_flat_trie(sids, V, dense_d=0, index_dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# registry: delta refresh + envelope regrowth
+# ---------------------------------------------------------------------------
+def unique_catalog(rng, n):
+    """SID-unique catalog (the swap_delta equivalence contract)."""
+    sids = np.unique(make_sids(rng, n, V, L, clustered=True), axis=0)
+    m = sids.shape[0]
+    return ItemCatalog(sids=sids, age_days=rng.uniform(0, 60, m),
+                       category=rng.integers(0, 4, m))
+
+
+def two_slot_registry(headroom=0.5):
+    reg = ConstraintRegistry(V, headroom=headroom)
+    reg.register("fresh", freshness_window(30))
+    reg.register("cats", category_allowlist(0, 1))
+    return reg
+
+
+def make_delta(rng, cat, n_rm=10, n_add=25):
+    rm = cat.sids[rng.choice(cat.sids.shape[0], n_rm, replace=False)]
+    added = unique_catalog(rng, n_add)
+    seen = {tuple(r) for r in cat.sids}
+    added = added.select(np.array(
+        [tuple(r) not in seen for r in added.sids], bool))
+    return CatalogDelta(added=added, removed_sids=rm)
+
+
+def test_swap_delta_matches_full_swap(rng):
+    cat = unique_catalog(rng, 300)
+    reg = two_slot_registry()
+    reg.build(cat)
+    delta = make_delta(rng, cat)
+    assert reg.swap_delta(delta) == 2
+    ref = two_slot_registry()
+    ref.build(cat)
+    ref.swap(cat.apply_delta(delta))
+    assert_stores_equal(reg.current()[0], ref.current()[0])
+    # a second delta chained on the retained sources still matches
+    cat2 = cat.apply_delta(delta)
+    delta2 = make_delta(rng, cat2)
+    reg.swap_delta(delta2)
+    ref.swap(cat2.apply_delta(delta2))
+    assert_stores_equal(reg.current()[0], ref.current()[0])
+
+
+def test_swap_delta_empty_is_versionless_noop(rng):
+    cat = unique_catalog(rng, 200)
+    reg = two_slot_registry()
+    reg.build(cat)
+    assert reg.swap_delta(CatalogDelta()) == 1
+    assert reg.version == 1
+
+
+def test_compose_equals_sequential(rng):
+    cat = unique_catalog(rng, 250)
+    d1 = make_delta(rng, cat)
+    d2 = CatalogDelta(removed_sids=np.concatenate(
+        [cat.sids[20:24], d1.added.sids[:2]]))
+    seq = cat.apply_delta(d1).apply_delta(d2)
+    comp = cat.apply_delta(d1.compose(d2))
+    np.testing.assert_array_equal(np.unique(seq.sids, axis=0),
+                                  np.unique(comp.sids, axis=0))
+    reg_a = two_slot_registry(); reg_a.build(cat)
+    reg_a.swap_delta(d1); reg_a.swap_delta(d2)
+    reg_b = two_slot_registry(); reg_b.build(cat)
+    reg_b.swap_delta(d1.compose(d2))
+    assert_stores_equal(reg_a.current()[0], reg_b.current()[0])
+
+
+def test_envelope_regrowth_cold_swap(rng):
+    cat = unique_catalog(rng, 80)
+    reg = two_slot_registry(headroom=0.0)  # no slack: growth must regrow
+    store = reg.build(cat)
+    assert reg.envelope_generation == 1
+    big = unique_catalog(rng, 2000)
+    v = reg.swap(big)  # default on_overflow="regrow"
+    assert v == 2 and reg.envelope_generation == 2
+    grown, _ = reg.current()
+    assert grown.n_states > store.n_states
+    # fail-fast mode still raises and leaves the front serving
+    with pytest.raises(EnvelopeOverflow):
+        reg.swap(unique_catalog(rng, 4000), on_overflow="raise")
+    assert reg.current()[1] == 2
+
+
+def test_failed_swap_delta_keeps_sources_consistent(rng):
+    """A rejected refresh (envelope overflow, raise mode) must not advance
+    the retained per-slot sources past the still-serving front buffer."""
+    cat = unique_catalog(rng, 100)
+    reg = two_slot_registry(headroom=0.0)
+    reg.build(cat)
+    huge = CatalogDelta(added=unique_catalog(rng, 3000))
+    with pytest.raises(EnvelopeOverflow):
+        reg.swap_delta(huge, on_overflow="raise")
+    assert reg.version == 1
+    # the same registry still refreshes correctly from the ORIGINAL state
+    delta = make_delta(rng, cat)
+    reg.swap_delta(delta)
+    ref = two_slot_registry(headroom=0.0)
+    ref.build(cat)
+    ref.swap(cat.apply_delta(delta))
+    assert_stores_equal(reg.current()[0], ref.current()[0])
+
+
+# ---------------------------------------------------------------------------
+# AsyncRefresher: futures, coalescing, backpressure, error propagation
+# ---------------------------------------------------------------------------
+def test_async_refresher_applies_and_propagates_errors(rng):
+    cat = unique_catalog(rng, 250)
+    reg = two_slot_registry()
+    reg.build(cat)
+    with AsyncRefresher(reg) as ref:
+        d = make_delta(rng, cat)
+        assert ref.apply_delta_async(d).result(timeout=30) == 2
+        cat = cat.apply_delta(d)
+        assert ref.swap_async(cat).result(timeout=30) == 3
+        # a predicate failure propagates through the future; the front
+        # buffer keeps serving the previous version
+        stale = ItemCatalog(sids=cat.sids,
+                            age_days=np.full(cat.sids.shape[0], 1e9),
+                            category=cat.category)
+        with pytest.raises(ValueError, match="zero items"):
+            ref.swap_async(stale).result(timeout=30)
+        assert ref.failed == 1 and reg.version == 3
+        assert ref.apply_delta_async(make_delta(rng, cat)).result(30) == 4
+    with pytest.raises(RuntimeError, match="closed"):
+        ref.swap_async(cat)
+
+
+def test_async_refresher_coalesces_superseded_snapshots(rng):
+    cat = unique_catalog(rng, 200)
+    reg = two_slot_registry()
+    reg.build(cat)
+    ref = AsyncRefresher(reg)
+    try:
+        with reg._refresh_lock:  # stall the worker mid-op
+            futs = [ref.swap_async(unique_catalog(rng, 200 + 10 * i))
+                    for i in range(4)]
+            time.sleep(0.05)  # let the worker pick up the first op
+        versions = {f.result(timeout=30) for f in futs}
+        # first op may run alone; the rest collapse into ONE build
+        assert ref.coalesced >= 2
+        assert reg.version <= 3 and versions <= {2, 3}
+    finally:
+        ref.close()
+
+
+def test_async_refresher_backpressure_blocks_when_full(rng):
+    cat = unique_catalog(rng, 200)
+    reg = two_slot_registry()
+    reg.build(cat)
+    ref = AsyncRefresher(reg, coalesce=False, max_pending=1)
+    try:
+        submitted = threading.Event()
+        with reg._refresh_lock:  # worker stalls; queue fills
+            f1 = ref.swap_async(unique_catalog(rng, 210))
+            time.sleep(0.05)  # worker takes f1's op; queue empty again
+            f2 = ref.swap_async(unique_catalog(rng, 220))  # queue = 1 = max
+
+            def submit_third():
+                ref.swap_async(unique_catalog(rng, 230))
+                submitted.set()
+
+            t = threading.Thread(target=submit_third, daemon=True)
+            t.start()
+            time.sleep(0.1)
+            assert not submitted.is_set()  # blocked: queue full
+        assert submitted.wait(timeout=30)  # unblocks once the worker drains
+        assert f1.result(30) and f2.result(30)
+        ref.drain(timeout=30)
+    finally:
+        ref.close()
+
+
+def test_async_refresher_survives_cancelled_future(rng):
+    """Cancelling a queued future must drop its notification, not kill the
+    worker (set_result on a cancelled Future raises InvalidStateError)."""
+    cat = unique_catalog(rng, 200)
+    reg = two_slot_registry()
+    reg.build(cat)
+    with AsyncRefresher(reg) as ref:
+        with reg._refresh_lock:  # stall the worker so ops stay queued
+            f1 = ref.swap_async(unique_catalog(rng, 210))
+            time.sleep(0.05)  # worker picks up f1's op
+            f2 = ref.apply_delta_async(make_delta(rng, cat))
+            assert f2.cancel()  # still queued: cancellable
+        assert f1.result(timeout=30) == 2
+        assert ref.drain(timeout=30)
+        # the worker is still alive and processes new work
+        f3 = ref.swap_async(unique_catalog(rng, 220))
+        assert f3.result(timeout=30) >= 3
+
+
+def test_catalog_delta_rejects_mismatched_sid_width(rng):
+    """Byte row keys null-pad, so a narrower removed_sids would silently
+    match (and delete) the wrong items — it must raise instead."""
+    cat = unique_catalog(rng, 100)
+    narrow = np.asarray(cat.sids[:, :L - 1])
+    with pytest.raises(ValueError, match="sid_length"):
+        cat.apply_delta(CatalogDelta(removed_sids=narrow))
+    with pytest.raises(ValueError, match="sid_length"):
+        CatalogDelta(added=unique_catalog(rng, 10), removed_sids=narrow)
+    d1 = CatalogDelta(added=unique_catalog(rng, 10))
+    with pytest.raises(ValueError, match="sid_length"):
+        d1.compose(CatalogDelta(removed_sids=narrow))
+    wide = ItemCatalog(sids=np.zeros((3, L + 1), np.int64),
+                       age_days=np.zeros(3), category=np.zeros(3, np.int64))
+    with pytest.raises(ValueError, match="sid_length"):
+        cat.apply_delta(CatalogDelta(added=wide))
+
+
+# ---------------------------------------------------------------------------
+# engine level: hot swap = zero recompiles, cold swap = exactly one
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = smoke_config("stablelm-12b")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    return params, cfg
+
+
+def _compile_listener():
+    compiles = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda name, *a, **kw: compiles.append(name)
+        if "backend_compile" in name else None
+    )
+    return compiles
+
+
+def _lm_catalog(rng, cfg, n):
+    sids = np.unique(make_sids(rng, n, cfg.vocab_size, L, clustered=True),
+                     axis=0)
+    m = sids.shape[0]
+    return ItemCatalog(sids=sids, age_days=rng.uniform(0, 60, m),
+                       category=rng.integers(0, 4, m))
+
+
+def test_engine_async_hot_swap_zero_recompile_and_drain(small_lm, rng):
+    params, cfg = small_lm
+    cat = _lm_catalog(rng, cfg, 300)
+    reg = ConstraintRegistry(cfg.vocab_size, headroom=0.5)
+    reg.register("fresh", freshness_window(45))
+    reg.register("cats", category_allowlist(0, 1, 2))
+    store = reg.build(cat)
+    retr = GenerativeRetriever(params, cfg, store, sid_length=L,
+                               sid_vocab=cfg.vocab_size, beam_size=4)
+    eng = ServingEngine(params, cfg, batch_size=4, max_len=24,
+                        retriever=retr, registry=reg)
+    q = RequestQueue()
+    rids = [q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L,
+                     constraint_id=i % 2) for i in range(6)]
+    results = eng.serve(q)  # warm the executable on version 1
+    assert set(results) == set(rids)
+
+    with AsyncRefresher(reg) as ref:
+        fut = ref.apply_delta_async(make_delta(rng, cat, n_rm=15, n_add=30))
+        assert fut.result(timeout=60) == 2
+    compiles = _compile_listener()
+    rids2 = [q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L,
+                      constraint_id=i % 2) for i in range(6)]
+    results2 = eng.serve(q)
+    assert set(results2) == set(rids2) and len(q) == 0  # nothing dropped
+    assert all(r["store_version"] == 2 for r in results2.values())
+    assert len(compiles) == 0, f"async hot swap recompiled: {compiles}"
+    assert eng.cold_swaps == 0
+
+
+def test_engine_cold_swap_recompiles_exactly_once(small_lm, rng):
+    params, cfg = small_lm
+    cat = _lm_catalog(rng, cfg, 80)
+    reg = ConstraintRegistry(cfg.vocab_size, headroom=0.0)
+    reg.register("fresh", freshness_window(45))
+    reg.register("cats", category_allowlist(0, 1, 2))
+    store = reg.build(cat)
+    retr = GenerativeRetriever(params, cfg, store, sid_length=L,
+                               sid_vocab=cfg.vocab_size, beam_size=4)
+    eng = ServingEngine(params, cfg, batch_size=2, max_len=24,
+                        retriever=retr, registry=reg)
+    q = RequestQueue()
+    for i in range(3):
+        q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L,
+                 constraint_id=i % 2)
+    eng.serve(q)  # warm on the original envelope
+
+    big = _lm_catalog(rng, cfg, 1500)  # outgrows the zero-headroom envelope
+    with AsyncRefresher(reg) as ref:
+        assert ref.swap_async(big).result(timeout=120) == 2
+    assert reg.envelope_generation == 2
+    compiles = _compile_listener()
+    rids = [q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L,
+                     constraint_id=i % 2) for i in range(5)]
+    results = eng.serve(q)
+    assert set(results) == set(rids) and len(q) == 0  # drained, none dropped
+    assert eng.cold_swaps == 1
+    assert len(compiles) == 1, (
+        f"cold swap must recompile exactly once, saw {len(compiles)}")
+    # compliance under the regrown store
+    valid = {tuple(x) for x in big.sids[big.age_days <= 45]}
+    for r in results.values():
+        if r["constraint_id"] != 0:
+            continue
+        for m, sid in enumerate(r["sids"]):
+            if r["scores"][m] > NEG_INF / 2:
+                assert tuple(sid) in valid
+    # and the NEXT serve on the same version compiles nothing
+    compiles.clear()
+    q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L)
+    eng.serve(q)
+    assert len(compiles) == 0
+
+
+# ---------------------------------------------------------------------------
+# golden-trace check across one hot swap and one cold swap
+# ---------------------------------------------------------------------------
+def _traced(policy, table, B=2, M=4, cids=None):
+    def logits_fn(carry, last, step):
+        return table[step][last], carry
+
+    state, _, trace = beam_search(logits_fn, None, B, M, L, policy,
+                                  constraint_ids=cids, return_trace=True)
+    return (np.asarray(state.tokens), np.asarray(state.scores),
+            np.asarray(trace.tokens), np.asarray(trace.scores))
+
+
+def test_traces_identical_across_hot_and_cold_swap(rng):
+    """Per-step beam traces after a hot swap and after a cold (regrown)
+    swap must be bit-identical to a from-scratch build of the same
+    snapshot — the swap path must never perturb decode semantics."""
+    cat = unique_catalog(rng, 150)
+    reg = two_slot_registry(headroom=0.0)
+    reg.build(cat)
+    table = jnp.asarray(rng.normal(size=(L, V, V)).astype(np.float32))
+    cids = jnp.zeros((2,), jnp.int32)
+
+    # hot: delta refresh inside the envelope
+    delta = make_delta(rng, cat, n_rm=8, n_add=5)
+    reg.swap_delta(delta)
+    cat = cat.apply_delta(delta)
+    got = _traced(DecodePolicy.stacked(reg.current()[0]), table, cids=cids)
+    fresh = two_slot_registry(headroom=0.0)
+    want = _traced(DecodePolicy.stacked(fresh.build(cat)), table, cids=cids)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+    # cold: outgrow the envelope -> regrown store, same traces
+    big_delta = CatalogDelta(added=unique_catalog(rng, 2000))
+    gen = reg.envelope_generation
+    reg.swap_delta(big_delta)
+    assert reg.envelope_generation == gen + 1
+    cat = cat.apply_delta(big_delta)
+    got = _traced(DecodePolicy.stacked(reg.current()[0]), table, cids=cids)
+    fresh = two_slot_registry(headroom=0.0)
+    want = _traced(DecodePolicy.stacked(fresh.build(cat)), table, cids=cids)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# SPMD: cold swap through the mesh engine
+# ---------------------------------------------------------------------------
+def test_spmd_engine_cold_swap_rebuilds_once_and_drains(small_lm, rng):
+    from repro.launch.mesh import make_debug_mesh
+    from repro.serving.spmd_engine import SpmdRetriever, SpmdServingEngine
+
+    params, cfg = small_lm
+    cat = _lm_catalog(rng, cfg, 80)
+    # enough headroom for the small delta below to swap HOT; the 1500-item
+    # delta afterwards still outgrows it and must regrow COLD
+    reg = ConstraintRegistry(cfg.vocab_size, headroom=0.5)
+    reg.register("fresh", freshness_window(45))
+    reg.register("cats", category_allowlist(0, 1, 2))
+    store = reg.build(cat)
+    mesh = make_debug_mesh()
+    retr = SpmdRetriever(params, cfg, DecodePolicy.stacked(store),
+                         L, cfg.vocab_size, beam_size=4, mesh=mesh)
+    eng = SpmdServingEngine(retr, registry=reg, slots=4, prompt_width=8)
+    q = RequestQueue()
+    for i in range(4):
+        q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L,
+                 constraint_id=i % 2)
+    eng.serve(q)  # warm on version 1
+
+    # hot swap first: mesh executable reused
+    reg.swap_delta(make_delta(rng, cat, n_rm=10, n_add=10))
+    compiles = _compile_listener()
+    q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L)
+    eng.serve(q)
+    assert len(compiles) == 0 and eng.cold_swaps == 0
+
+    # cold swap: regrown envelope -> one shard_map rebuild, queue drains
+    reg.swap_delta(CatalogDelta(added=_lm_catalog(rng, cfg, 1500)))
+    compiles.clear()
+    rids = [q.submit(rng.integers(0, cfg.vocab_size, (8,)), n_tokens=L,
+                     constraint_id=i % 2) for i in range(5)]
+    results = eng.serve(q)
+    assert set(rids) <= set(results) and len(q) == 0
+    assert eng.cold_swaps == 1
+    assert len(compiles) == 1, (
+        f"SPMD cold swap must recompile exactly once, saw {len(compiles)}")

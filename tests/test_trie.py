@@ -114,6 +114,52 @@ def test_trimmed_trie_smaller(rng):
     assert trimmed.n_edges < full.n_edges
 
 
+@pytest.mark.parametrize("dense_d", [0, 1, 2])
+@pytest.mark.parametrize("length", [2, 3, 4])
+def test_dense_trim_accounting(rng, dense_d, length):
+    """Levels < d_eff must NOT be double-stored: the CSR holds exactly the
+    states/edges of levels >= d_eff == min(dense_d, L) — including the
+    sid_length == dense_d case, where the old builder silently fell back
+    to d_eff = 0 and kept every dense-covered level in the CSR on top of
+    the bit-packed tables (inflating n_states against Appendix B)."""
+    sids = make_sids(rng, 250, 16, length, clustered=True)
+    ft = build_flat_trie(sids, 16, dense_d=dense_d)
+    full = build_flat_trie(sids, 16, dense_d=0)
+    d_eff = min(dense_d, length)
+    # per-level unique-prefix counts from the untrimmed reference:
+    # diff(level_offsets) = [root(=1), n_1, n_2, ..., n_L]
+    lvl_counts = np.diff(full.level_offsets)
+    want_states = (1 + int(lvl_counts[d_eff:].sum()) if d_eff
+                   else full.n_states)
+    want_edges = full.n_edges - int(lvl_counts[1 : d_eff + 1].sum())
+    assert ft.n_states == want_states
+    assert ft.n_edges == want_edges
+    assert ft.row_pointers.shape == (ft.n_states + 1,)
+    if d_eff == length:  # fully dense: leaves only, no CSR edges at all
+        assert ft.n_edges == 0
+        assert int(ft.row_pointers[-1]) == 0
+    # dense tables still present whenever requested
+    assert (ft.l0_mask_packed is not None) == (dense_d >= 1)
+    assert (ft.l1_mask_packed is not None) == (dense_d >= 2 and length >= 2)
+    # bmax is defined for every level regardless of trimming
+    np.testing.assert_array_equal(ft.level_bmax, full.level_bmax)
+
+
+def test_index_dtype_range_validation(rng):
+    sids = make_sids(rng, 400, 16, 4)
+    with pytest.raises(ValueError, match="int8"):
+        build_flat_trie(sids, 16, index_dtype=np.int8)
+    ft64 = build_flat_trie(sids, 16, index_dtype=np.int64)
+    ft32 = build_flat_trie(sids, 16)
+    assert ft64.edges.dtype == np.int64
+    np.testing.assert_array_equal(ft64.edges, ft32.edges)
+    np.testing.assert_array_equal(ft64.row_pointers, ft32.row_pointers)
+    # vocab ids must fit the index dtype too (edges interleave tokens)
+    big_vocab = rng.integers(0, 40_000, size=(50, 3))
+    with pytest.raises(ValueError, match="int16"):
+        build_flat_trie(big_vocab, 40_000, dense_d=0, index_dtype=np.int16)
+
+
 def test_pack_unpack_roundtrip(rng):
     for n in (1, 7, 8, 9, 100, 2048):
         bits = rng.integers(0, 2, size=n).astype(bool)
