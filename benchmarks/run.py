@@ -1,17 +1,26 @@
 """Benchmark aggregator — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit) and,
+with ``--json PATH``, writes the sections' structured results as a
+machine-readable artifact (``BENCH_decode_step.json`` in CI): per-backend
+decode-step latency including the candidate-compressed topk path (table1),
+the vocab-scaling endpoints with the topk-vs-dense comparison (fig3), and
+incremental-refresh latency (refresh).  Both CI jobs upload it, so the
+decode-step latency trajectory is tracked per commit.
+
 The roofline section summarizes reports/roofline.json if present (it is
 produced by ``python -m benchmarks.roofline``, which needs the 512-device
 dry-run environment and is therefore a separate entry point).
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick|--smoke]
+           [--only table1,fig3,...] [--json BENCH_decode_step.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import platform
 import time
 import traceback
 
@@ -19,9 +28,15 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI wiring check: tiny corpora, few trials "
+                         "(sections without a smoke mode run quick)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig2,fig3,fig4,table3,memory,"
                          "multik,refresh")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured section results (e.g. "
+                         "BENCH_decode_step.json)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
@@ -35,27 +50,44 @@ def main() -> None:
         table3_coldstart,
     )
 
+    quick = args.quick or args.smoke  # smoke implies at-most-quick sizing
     sections = {
-        "table1": lambda: table1_latency.run(quick=args.quick),
-        "fig2": lambda: fig2_constraint_scaling.run(quick=args.quick),
-        "fig3": lambda: fig3_vocab_scaling.run(quick=args.quick),
-        "fig4": lambda: fig4_branch_factor.run(quick=args.quick),
-        "memory": lambda: memory_table.run(quick=args.quick),
-        "table3": lambda: table3_coldstart.run(quick=args.quick),
-        "multik": lambda: multi_constraint.run(quick=args.quick),
-        "refresh": lambda: refresh_latency.run(quick=args.quick),
+        "table1": lambda: table1_latency.run(quick=quick, smoke=args.smoke),
+        "fig2": lambda: fig2_constraint_scaling.run(quick=quick),
+        "fig3": lambda: fig3_vocab_scaling.run(quick=quick, smoke=args.smoke),
+        "fig4": lambda: fig4_branch_factor.run(quick=quick),
+        "memory": lambda: memory_table.run(quick=quick),
+        "table3": lambda: table3_coldstart.run(quick=quick),
+        "multik": lambda: multi_constraint.run(quick=quick),
+        "refresh": lambda: refresh_latency.run(quick=quick, smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
+    report: dict = {
+        "meta": {
+            "timestamp": time.time(),
+            "platform": platform.platform(),
+            "mode": ("smoke" if args.smoke else
+                     "quick" if args.quick else "full"),
+        },
+        "sections": {},
+    }
     for name, fn in sections.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---")
         t0 = time.time()
         try:
-            fn()
+            result = fn()
+            if args.json and result is not None:
+                # keys may be ints (fig3's vocab sweep): stringify for JSON
+                report["sections"][name] = json.loads(
+                    json.dumps(result, default=str)
+                    .replace("NaN", "null")
+                )
         except Exception:  # noqa: BLE001
             print(f"{name}/ERROR,0,")
             traceback.print_exc()
+            report["sections"][name] = {"error": traceback.format_exc()}
         print(f"# {name} took {time.time()-t0:.1f}s")
 
     # roofline summary (from the separate 512-device run)
@@ -67,6 +99,11 @@ def main() -> None:
             print(f"roofline/{key},{e['t_compute_s']*1e6:.1f},"
                   f"bottleneck={e['bottleneck']};frac={e['roofline_fraction']:.3f};"
                   f"mem_us={e['t_memory_s']*1e6:.1f};coll_us={e['t_collective_s']*1e6:.1f}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

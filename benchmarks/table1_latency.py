@@ -61,6 +61,18 @@ def _per_step_timer(policy, step, logits, nodes, prefixes, cids):
     return lambda: f(logits, nodes, pf, ci, policy)
 
 
+def _per_step_topk_timer(policy, step, beams, logits, nodes, cids):
+    """One jitted candidate-compressed Phase 1-2 call (sparse steps only)."""
+    C = policy.candidate_width(beams, step)
+    f = jax.jit(
+        lambda lg, nd, ci, pol: pol.step_topk(
+            lg, nd, step, C, constraint_ids=ci
+        )
+    )
+    ci = cids if policy.requires_constraint_ids else None
+    return lambda: f(logits, nodes, ci, policy)
+
+
 def _e2e_timer(policy, table, batch, beams, cids):
     """Full policy-driven beam search (all L levels) over a toy scorer."""
     L, V = table.shape
@@ -114,6 +126,10 @@ def run(n_constraints: int = 1_000_000, trials: int = 20, with_cpu_trie=True,
         "hash_bitmap": DecodePolicy.hash_bitmap(sids, VOCAB, log2_bits=27),
         "unconstrained": DecodePolicy.unconstrained(),
     }
+    # Dense-only STATIC plan: the e2e baseline of the candidate-compressed
+    # path (DESIGN.md §8) — same tables, same beam search, vocab-aligned
+    # advance at every level.
+    policies["static_dense"] = DecodePolicy.static(tm, topk=False)
     if with_cpu_trie:
         policies["cpu_trie"] = DecodePolicy.cpu_trie(
             sids[: min(n_constraints, 200_000)], VOCAB
@@ -137,6 +153,42 @@ def run(n_constraints: int = 1_000_000, trials: int = 20, with_cpu_trie=True,
              f"overhead_ms={results[name]*1e3:.4f};C={n_constraints};"
              f"plan={policy.describe()}")
     emit("table1/unconstrained", t_base * 1e6, "baseline")
+
+    # Candidate-compressed per-step latency (sparse levels, DESIGN.md §8):
+    # the topk entry point vs the vocab-aligned step it replaces.  Reported
+    # alongside the dense numbers so --smoke CI pins the comparison.
+    for name, policy in {
+        "static_topk": static_policy,
+        f"stacked_k{STACK_K}_topk": policies[f"stacked_k{STACK_K}"],
+    }.items():
+        topk_oh, dense_oh = [], []
+        for step in range(LENGTH):
+            if not policy.supports_topk_at(step):
+                continue  # dense bit-packed band: no candidate row
+            nodes = nodes_by_step[step]
+            t, _ = time_fn(
+                _per_step_topk_timer(policy, step, beams, logits, nodes,
+                                     cids),
+                trials=trials,
+            )
+            topk_oh.append(max(t - t_base, 0.0))
+            # the vocab-aligned step it replaces, at the same levels
+            t, _ = time_fn(
+                _per_step_timer(policy, step, logits, nodes, pf, cids),
+                trials=trials,
+            )
+            dense_oh.append(max(t - t_base, 0.0))
+        results[name] = float(np.mean(topk_oh))
+        results[f"{name}_dense_sparse"] = float(np.mean(dense_oh))
+        emit(f"table1/{name}", results[name] * 1e6,
+             f"overhead_ms={results[name]*1e3:.4f};C={n_constraints};"
+             f"width={policy.candidate_width(beams, LENGTH - 1)};"
+             f"dense_same_levels_us={np.mean(dense_oh)*1e6:.1f}")
+    if results["static_topk"] > 0:
+        emit("table1/topk_vs_dense_step_ratio",
+             results["static_topk_dense_sparse"]
+             / max(results["static_topk"], 1e-12) * 100,
+             "dense_overhead/topk_overhead_pct_sparse_levels")
 
     if e2e:
         B = 2

@@ -20,6 +20,15 @@ iteration is one fused XLA computation.
 Phase 4 (beam advance) is one gather for *every* backend: policies return
 vocab-aligned next states (DESIGN.md §3.1), with the baselines reporting a
 2-state alive/sink automaton in the same convention.
+
+Candidate-compressed levels (DESIGN.md §8): when the policy's backend for a
+step supports ``step_topk``, the search advances from per-beam top-C
+candidate lists instead of vocab-aligned tensors — the top-M runs over
+``(B, M*C)`` NEG_INF-padded candidates rather than ``(B, M*V)``, and tokens /
+next states are gathered from the compressed lists.  The lists are the
+dense rows' top-C in ``jax.lax.top_k``'s own tie-break order, so the two
+branches are bit-identical (asserted in ``tests/test_differential_fuzz.py``
+and against the frozen dense-generated golden traces).
 """
 from __future__ import annotations
 
@@ -131,23 +140,43 @@ def beam_search(
         else:
             logits, carry = logits_fn(carry, last, step)  # (B, M, V)
         V = logits.shape[-1]
-        lp, next_dense = policy.step(
-            logits, state.nodes, step,
-            prefix_tokens=state.tokens if policy.needs_prefix else None,
-            constraint_ids=cids_bm,
-        )
-        total = state.scores[:, :, None] + lp  # (B, M, V)
-        flat = total.reshape(B, M * V)
-        top_scores, top_idx = jax.lax.top_k(flat, M)  # (B, M)
-        beam_idx = top_idx // V
-        token = (top_idx % V).astype(jnp.int32)
-
-        # Phase 4: state update via gathers — one gather for every backend
-        # (vocab-aligned next states, DESIGN.md §3.1).
         batch_ix = jnp.arange(B)[:, None]
+        if policy.supports_topk_at(step):
+            # Candidate-compressed advance (DESIGN.md §8): the policy emits
+            # each beam's dense-rank top-C, so selection and the Phase-4
+            # gathers never touch a vocab-wide tensor.  C >= min(M, V)
+            # guarantees no dense winner is dropped, and the lists carry the
+            # dense tie-break order, so results are bit-identical.
+            C = policy.candidate_width(M, step)
+            c_lp, c_tok, c_next = policy.step_topk(
+                logits, state.nodes, step, C, constraint_ids=cids_bm,
+            )
+            total = state.scores[:, :, None] + c_lp  # (B, M, C)
+            top_scores, top_idx = jax.lax.top_k(total.reshape(B, M * C), M)
+            beam_idx = top_idx // C
+            token = jnp.take_along_axis(
+                c_tok.reshape(B, M * C), top_idx, axis=1
+            ).astype(jnp.int32)
+            new_nodes = jnp.take_along_axis(
+                c_next.reshape(B, M * C), top_idx, axis=1
+            )
+        else:
+            lp, next_dense = policy.step(
+                logits, state.nodes, step,
+                prefix_tokens=state.tokens if policy.needs_prefix else None,
+                constraint_ids=cids_bm,
+            )
+            total = state.scores[:, :, None] + lp  # (B, M, V)
+            flat = total.reshape(B, M * V)
+            top_scores, top_idx = jax.lax.top_k(flat, M)  # (B, M)
+            beam_idx = top_idx // V
+            token = (top_idx % V).astype(jnp.int32)
+            # Phase 4: state update via gathers — one gather for every
+            # backend (vocab-aligned next states, DESIGN.md §3.1).
+            new_nodes = next_dense[batch_ix, beam_idx, token]
+
         new_tokens = state.tokens[batch_ix, beam_idx]  # (B, M, L)
         new_tokens = new_tokens.at[:, :, step].set(token)
-        new_nodes = next_dense[batch_ix, beam_idx, token]
         state = BeamState(tokens=new_tokens, scores=top_scores, nodes=new_nodes)
         if return_trace:
             trace.append(state)

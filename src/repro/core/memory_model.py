@@ -1,4 +1,4 @@
-"""STATIC memory-usage model (paper Appendix B).
+"""STATIC memory-usage model (paper Appendix B) + decode-step traffic model.
 
 ``u_max`` is the closed-form upper bound
 
@@ -8,12 +8,21 @@ and ``capacity_rule_of_thumb`` reproduces the "~90 MB per 1M constraints"
 planning rule of §B.3.  ``measure`` reports the *actual* bytes of a built
 TransitionMatrix so tests can assert actual <= U_max (the paper observes
 <=75% utilization in production due to prefix clustering).
+
+``decode_step_traffic`` models the per-step HBM bytes the constraint stage
+moves on the two decode paths (DESIGN.md §8): the dense path writes two full
+vocab-aligned ``(B*M, V)`` tensors (masked log-probs + next-state map) and
+re-reads them for the ``M*V`` top-k; the candidate-compressed path writes
+three ``(B*M, C)`` tensors with ``C = min(round_up(M, lane), V)`` — constant
+in ``V``, which is what flattens the fig3 vocab-scaling curves.
 """
 from __future__ import annotations
 
 from repro.core.transition_matrix import TransitionMatrix
+from repro.core.vntk import candidate_width
 
-__all__ = ["u_max", "capacity_rule_of_thumb", "measure", "K1_DEFAULT", "K2_DEFAULT"]
+__all__ = ["u_max", "capacity_rule_of_thumb", "measure", "decode_step_traffic",
+           "K1_DEFAULT", "K2_DEFAULT"]
 
 # K1: bytes per CSR trie node. The paper counts 12 B for the three CSR arrays
 # (4 B row-pointer + 4 B column index + 4 B value); our stacked layout stores
@@ -49,6 +58,51 @@ def capacity_rule_of_thumb(
     """Planning estimate in bytes (the §B.3 '90 MB per 1M items' rule)."""
     per_million = u_max(vocab_size, 1_000_000, sid_length, dense_d)
     return per_million * (n_constraints / 1_000_000)
+
+
+def decode_step_traffic(
+    vocab_size: int,
+    batch: int,
+    beams: int,
+    *,
+    width: int | None = None,
+    lane: int = 8,
+    lp_bytes: int = 4,
+    idx_bytes: int = 4,
+) -> dict:
+    """Per-step HBM bytes moved by the constraint stage on both paths.
+
+    Write traffic only (the logits read is common to both paths and the
+    fused kernels overlap it with the model's own output write):
+
+      * dense:     ``B*M * V * (lp + idx)``   — masked log-probs + the
+                    vocab-aligned next-state map, then re-read by the
+                    ``M*V``-lane host top-k (counted once more as reads);
+      * candidate: ``B*M * C * (lp + 2*idx)`` — scores, tokens and next
+                    states of the per-beam top-C lists; the top-M re-reads
+                    ``M*C`` lanes.
+
+    ``width=None`` derives ``C`` from :func:`~repro.core.vntk.candidate_width`
+    with the given ``lane``.  Returns both totals plus their ratio — the
+    model the DESIGN.md §8 table quotes and ``tests/test_memory_model``
+    sanity-checks against array sizes.
+    """
+    nb = batch * beams
+    C = candidate_width(beams, vocab_size, lane=lane) if width is None else width
+    dense_write = nb * vocab_size * (lp_bytes + idx_bytes)
+    dense_select_read = nb * vocab_size * lp_bytes
+    cand_write = nb * C * (lp_bytes + 2 * idx_bytes)
+    cand_select_read = nb * C * lp_bytes
+    dense_total = dense_write + dense_select_read
+    cand_total = cand_write + cand_select_read
+    return dict(
+        width=int(C),
+        dense_write_bytes=int(dense_write),
+        dense_total_bytes=int(dense_total),
+        candidate_write_bytes=int(cand_write),
+        candidate_total_bytes=int(cand_total),
+        compression_ratio=float(dense_total / max(cand_total, 1)),
+    )
 
 
 def measure(tm: TransitionMatrix) -> dict:

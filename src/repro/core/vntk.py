@@ -20,13 +20,34 @@ from repro.core.transition_matrix import TransitionMatrix
 
 __all__ = [
     "NEG_INF",
+    "candidate_width",
     "vntk_xla",
     "vntk_stacked_xla",
     "vntk_reference_scatter",
     "vntk_stacked_reference_scatter",
+    "vntk_topk_xla",
+    "vntk_stacked_topk_xla",
+    "vntk_topk_reference",
+    "vntk_stacked_topk_reference",
 ]
 
 NEG_INF = -1.0e10
+
+
+def candidate_width(beams: int, vocab_size: int, lane: int = 8) -> int:
+    """Per-beam candidate count ``C`` for the compressed decode step.
+
+    ``C = min(round_up(M, lane), V)`` (DESIGN.md §8): a beam can contribute at
+    most ``M`` winners to the row's top-M, so keeping its ``M`` best dense-rank
+    entries (lane-rounded for the accelerator layout) is lossless; capping at
+    ``V`` makes the per-beam list degenerate to the full (rank-sorted) dense
+    row for tiny vocabularies, so bit-exactness never depends on ``V``.  The
+    cap is ``V`` rather than the branch factor: when a row's valid children
+    cannot fill the top-M, the dense path spills into NEG_INF-tied invalid
+    tokens (ascending token order), and the candidate list must carry those
+    same entries to stay bit-identical.
+    """
+    return max(1, min(-(-int(beams) // lane) * lane, int(vocab_size)))
 
 
 def vntk_xla(
@@ -133,6 +154,158 @@ def vntk_reference_scatter(
     next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
     next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
     return masked.reshape(batch_shape + (V,)), next_dense.reshape(batch_shape + (V,))
+
+
+# ---------------------------------------------------------------------------
+# Candidate-compressed step (DESIGN.md §8): per-beam dense-rank top-C
+# ---------------------------------------------------------------------------
+def _topk_from_candidates(
+    lp_flat,  # (nb, V)
+    cols,  # (nb, bmax) speculative CSR columns, token-ascending within a row
+    nxt,  # (nb, bmax) next states (0 on invalid slots)
+    valid,  # (nb, bmax) bool
+    width: int,
+    vocab_size: int,
+):
+    """Top-``width`` of each dense row under *dense ranking* without ever
+    materializing it.
+
+    The dense row of a beam holds its valid children at their log-probs and
+    every other token at exactly ``NEG_INF``; ``jax.lax.top_k`` over the
+    flattened ``(B, M*V)`` breaks ties by flat index, i.e. by (beam, token).
+    The compressed list reproduces that order from two ingredients:
+
+      * the valid candidates (already token-ascending — the trie builder
+        emits CSR rows token-sorted), ranked by (lp desc, token asc);
+      * the ``width`` smallest *missing* tokens at ``NEG_INF`` — the entries
+        the dense tie-break falls back to when a row cannot fill the top-M.
+        The i-th missing token of a sorted column set is
+        ``i + |{j : cols[j] - j <= i}|`` (classic "k-th missing" identity).
+
+    Slots that do not exist (invalid speculative slots; missing tokens past
+    ``V``) sink to the float minimum, and since ``width <= V`` there are
+    always ``width`` real entries above them.  The contract requires real
+    log-probs to be strictly greater than ``NEG_INF`` (true for any
+    log-softmax output).
+    """
+    nb, bmax = cols.shape
+    V = vocab_size
+    minf = jnp.asarray(jnp.finfo(jnp.float32).min, lp_flat.dtype)
+    offsets = jnp.arange(bmax, dtype=cols.dtype)
+
+    cand_lp = jnp.take_along_axis(lp_flat, jnp.clip(cols, 0, V - 1), axis=1)
+    real_key = jnp.where(valid, cand_lp, minf)
+    real_tok = jnp.where(valid, cols, 0)
+
+    # i-th smallest token absent from this row's (sorted, distinct) columns
+    adj = jnp.where(valid, cols - offsets[None, :], V + bmax + 1)
+    fill_i = jnp.arange(width, dtype=cols.dtype)
+    cnt = jnp.sum(adj[:, None, :] <= fill_i[None, :, None], axis=-1)
+    fill_tok = fill_i[None, :] + cnt  # (nb, width)
+    in_range = fill_tok < V
+    fill_key = jnp.where(in_range, jnp.asarray(NEG_INF, lp_flat.dtype), minf)
+    fill_tok = jnp.where(in_range, fill_tok, 0)
+
+    keys = jnp.concatenate([real_key, fill_key], axis=1)  # (nb, bmax + width)
+    toks = jnp.concatenate([real_tok, fill_tok], axis=1).astype(jnp.int32)
+    nexts = jnp.concatenate(
+        [nxt, jnp.zeros((nb, width), jnp.int32)], axis=1
+    ).astype(jnp.int32)
+
+    top_vals, top_idx = jax.lax.top_k(keys, width)
+    out_tok = jnp.take_along_axis(toks, top_idx, axis=1)
+    out_next = jnp.take_along_axis(nexts, top_idx, axis=1)
+    return top_vals, out_tok, out_next
+
+
+def vntk_topk_reference(
+    log_probs: jax.Array,  # (..., V) normalized log-probs
+    nodes: jax.Array,  # (...,) int32 current trie states
+    row_pointers: jax.Array,  # (S+1,)
+    edges: jax.Array,  # (E+pad, 2) stacked
+    bmax: int,
+    vocab_size: int,
+    width: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Candidate-compressed Alg. 2: ``(scores, tokens, next_states)``, each
+    ``(..., width)`` — the per-beam dense-rank top-``width``.  The raw-array
+    oracle for the Pallas topk kernel."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    starts = row_pointers[n_flat]
+    lens = row_pointers[n_flat + 1] - starts
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    gathered = jnp.take(
+        edges, starts[:, None] + offsets[None, :], axis=0, mode="fill",
+        fill_value=0,
+    )
+    valid = offsets[None, :] < lens[:, None]
+    cols = gathered[:, :, 0]
+    nxt = jnp.where(valid, gathered[:, :, 1], 0)
+    sc, tok, nx = _topk_from_candidates(lp_flat, cols, nxt, valid, width, V)
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nx.reshape(shp)
+
+
+def vntk_stacked_topk_reference(
+    log_probs: jax.Array,  # (..., V)
+    nodes: jax.Array,  # (...,)
+    constraint_ids: jax.Array,  # (...,) int32
+    row_pointers: jax.Array,  # (K, S+1)
+    edges: jax.Array,  # (K, E, 2)
+    bmax: int,
+    vocab_size: int,
+    width: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stacked-store candidate-compressed step (one extra constraint-axis
+    gather through Phases 1-2, shared selection)."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    cid = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    starts = row_pointers[cid, n_flat]
+    lens = row_pointers[cid, n_flat + 1] - starts
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    gathered = edges[cid[:, None], starts[:, None] + offsets[None, :]]
+    valid = offsets[None, :] < lens[:, None]
+    cols = gathered[:, :, 0]
+    nxt = jnp.where(valid, gathered[:, :, 1], 0)
+    sc, tok, nx = _topk_from_candidates(lp_flat, cols, nxt, valid, width, V)
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nx.reshape(shp)
+
+
+def vntk_topk_xla(
+    log_probs: jax.Array,
+    nodes: jax.Array,
+    tm: TransitionMatrix,
+    bmax: int,
+    width: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Candidate-compressed Alg. 2 over a TransitionMatrix (the CPU/fuzz
+    oracle of the topk decode path)."""
+    return vntk_topk_reference(
+        log_probs, nodes, tm.row_pointers, tm.edges, bmax, tm.vocab_size,
+        width,
+    )
+
+
+def vntk_stacked_topk_xla(
+    log_probs: jax.Array,
+    nodes: jax.Array,
+    store,  # ConstraintStore (duck-typed)
+    bmax: int,
+    constraint_ids: jax.Array,
+    width: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Candidate-compressed Alg. 2 over a stacked multi-constraint store."""
+    return vntk_stacked_topk_reference(
+        log_probs, nodes, constraint_ids, store.row_pointers, store.edges,
+        bmax, store.vocab_size, width,
+    )
 
 
 def vntk_stacked_reference_scatter(

@@ -37,7 +37,13 @@ from repro.core.baselines import (
 )
 from repro.core.transition_matrix import TransitionMatrix
 from repro.core.types import Impl
-from repro.core.vntk import vntk_stacked_xla, vntk_xla
+from repro.core.vntk import (
+    candidate_width,
+    vntk_stacked_topk_xla,
+    vntk_stacked_xla,
+    vntk_topk_xla,
+    vntk_xla,
+)
 
 __all__ = [
     "Impl",
@@ -80,13 +86,22 @@ class ConstraintBackend(Protocol):
                                log-softmax into the masking pass;
       * ``supports_stacked`` — consumes per-row ``constraint_ids``;
       * ``needs_prefix``     — consumes the emitted-token history instead of
-                               (or in addition to) trie states.
+                               (or in addition to) trie states;
+      * ``supports_topk``    — has a candidate-compressed ``topk_step``
+                               (DESIGN.md §8) emitting per-beam ``(scores,
+                               tokens, next_states)`` of width ``C`` instead
+                               of the vocab-aligned pair; ``topk_at(step)``
+                               gates it per level (the dense bit-packed band
+                               has no CSR row to compress).  Backends without
+                               it fall back to the dense path in
+                               ``beam_search``.
     """
 
     sid_length: Optional[int]
     supports_fused: bool
     supports_stacked: bool
     needs_prefix: bool
+    supports_topk: bool
 
     def mask_step(
         self,
@@ -151,6 +166,16 @@ def _dense_at(step: int, dense_d: int, levels: Levels, who: str) -> bool:
     return dense
 
 
+def _topk_lane(impl: Impl) -> int:
+    """Lane granularity for the candidate width ``C`` (DESIGN.md §8).
+
+    The Pallas kernel writes ``(nb, C)`` blocks, so ``C`` rounds to the TPU
+    lane width; the XLA oracle has no layout constraint and rounds to the
+    sublane only (keeping fuzz-scale vocabularies genuinely compressed).
+    """
+    return 128 if impl == "pallas" else 8
+
+
 # ---------------------------------------------------------------------------
 # STATIC (paper Alg. 1/2): single TransitionMatrix
 # ---------------------------------------------------------------------------
@@ -176,10 +201,23 @@ class StaticBackend:
     supports_fused = True
     supports_stacked = False
     needs_prefix = False
+    supports_topk = True
 
     @property
     def sid_length(self) -> int:
         return self.tm.sid_length
+
+    def topk_at(self, step: int) -> bool:
+        """Candidate compression applies to the sparse (CSR) band only —
+        the dense bit-packed levels have no edge row to compress."""
+        if self.levels == "dense":
+            return False
+        return step >= min(self.tm.dense_d, self.tm.sid_length)
+
+    def candidate_width(self, beams: int) -> int:
+        return candidate_width(
+            beams, self.tm.vocab_size, lane=_topk_lane(self.impl)
+        )
 
     def shardings(self, mesh, *, rows: Rows = "replicated"):
         _check_rows(rows)
@@ -230,6 +268,34 @@ class StaticBackend:
             self.tm.vocab_size,
         )
 
+    def topk_step(self, values, nodes, step, width, *, prefix_tokens=None,
+                  constraint_ids=None, normalized=True):
+        """Candidate-compressed Phases 1-2 (DESIGN.md §8): per-beam
+        dense-rank top-``width`` ``(scores, tokens, next_states)``.
+
+        ``values`` are normalized log-probs (``normalized=True``) or raw
+        logits (the fused single-pass kernel normalizes in-register)."""
+        del prefix_tokens
+        _reject_constraint_ids(constraint_ids, "a single TransitionMatrix")
+        _check_step(step, self.tm.sid_length)
+        if not self.topk_at(step):
+            raise ValueError(
+                f"StaticBackend(levels={self.levels!r}) has no candidate "
+                f"row at dense step {step}; fix the policy plan"
+            )
+        bmax = max(self.tm.bmax_for_step(step), 1)
+        if self.impl == "pallas":
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            return kernel_ops.vntk_topk(
+                values, nodes, self.tm.row_pointers, self.tm.edges, bmax,
+                self.tm.vocab_size, width, fused_logsoftmax=not normalized,
+            )
+        lp = values if normalized else jax.nn.log_softmax(
+            values.astype(jnp.float32), axis=-1
+        )
+        return vntk_topk_xla(lp, nodes, self.tm, bmax, width)
+
 
 # ---------------------------------------------------------------------------
 # Stacked STATIC: ConstraintStore + per-row constraint ids (DESIGN.md §4)
@@ -255,6 +321,7 @@ class StackedStaticBackend:
     supports_fused = True
     supports_stacked = True
     needs_prefix = False
+    supports_topk = True
 
     @property
     def sid_length(self) -> int:
@@ -263,6 +330,16 @@ class StackedStaticBackend:
     @property
     def num_sets(self) -> int:
         return self.store.num_sets
+
+    def topk_at(self, step: int) -> bool:
+        if self.levels == "dense":
+            return False
+        return step >= min(self.store.dense_d, self.store.sid_length)
+
+    def candidate_width(self, beams: int) -> int:
+        return candidate_width(
+            beams, self.store.vocab_size, lane=_topk_lane(self.impl)
+        )
 
     def shardings(self, mesh, *, rows: Rows = "replicated"):
         _check_rows(rows)
@@ -326,6 +403,34 @@ class StackedStaticBackend:
             self.store.vocab_size, constraint_ids=constraint_ids,
         )
 
+    def topk_step(self, values, nodes, step, width, *, prefix_tokens=None,
+                  constraint_ids=None, normalized=True):
+        """Candidate-compressed Phases 1-2 through the stacked store."""
+        del prefix_tokens
+        self._require_ids(constraint_ids)
+        _check_step(step, self.store.sid_length)
+        if not self.topk_at(step):
+            raise ValueError(
+                f"StackedStaticBackend(levels={self.levels!r}) has no "
+                f"candidate row at dense step {step}; fix the policy plan"
+            )
+        bmax = max(self.store.bmax_for_step(step), 1)
+        if self.impl == "pallas":
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            return kernel_ops.vntk_topk(
+                values, nodes, self.store.row_pointers, self.store.edges,
+                bmax, self.store.vocab_size, width,
+                constraint_ids=constraint_ids,
+                fused_logsoftmax=not normalized,
+            )
+        lp = values if normalized else jax.nn.log_softmax(
+            values.astype(jnp.float32), axis=-1
+        )
+        return vntk_stacked_topk_xla(
+            lp, nodes, self.store, bmax, constraint_ids, width
+        )
+
 
 # ---------------------------------------------------------------------------
 # Baseline backends: prefix-token interface (paper §5.2) behind the protocol
@@ -354,6 +459,7 @@ class CpuTrieBackend:
     supports_fused = False
     supports_stacked = False
     needs_prefix = True
+    supports_topk = False
 
     @property
     def sid_length(self) -> int:
@@ -397,6 +503,7 @@ class PPVBackend(PPVBaseline):
     supports_fused = False
     supports_stacked = False
     needs_prefix = True
+    supports_topk = False
 
     @classmethod
     def from_baseline(cls, b: PPVBaseline) -> "PPVBackend":
@@ -444,6 +551,7 @@ class HashBitmapBackend(HashBitmapBaseline):
     supports_fused = False
     supports_stacked = False
     needs_prefix = True
+    supports_topk = False
 
     @classmethod
     def from_baseline(cls, b: HashBitmapBaseline) -> "HashBitmapBackend":
@@ -481,6 +589,7 @@ class UnconstrainedBackend:
     supports_fused = False
     supports_stacked = False
     needs_prefix = False
+    supports_topk = False
     sid_length = None
 
     def shardings(self, mesh, *, rows: Rows = "replicated"):

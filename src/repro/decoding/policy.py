@@ -57,6 +57,14 @@ class DecodePolicy:
 
     backends: tuple  # of ConstraintBackend pytrees (children)
     plan: tuple = dataclasses.field(metadata=dict(static=True))
+    # Candidate-compressed decoding (DESIGN.md §8): when True, beam_search
+    # uses ``step_topk`` at every level whose backend supports it, shrinking
+    # the per-step HBM writes from O(B*M*V) to O(B*M*C) and the host top-k
+    # from M*V to M*C lanes.  Static aux data: invariant under hot-swaps, so
+    # toggling it re-specializes while swapping constraints never does.
+    candidate_topk: bool = dataclasses.field(
+        default=True, metadata=dict(static=True)
+    )
 
     def __post_init__(self):
         if not self.backends:
@@ -126,12 +134,86 @@ class DecodePolicy:
             ),
         )
 
+    # -- candidate-compressed decoding (DESIGN.md §8) ----------------------
+    def supports_topk_at(self, step: int) -> bool:
+        """True iff decode level ``step`` runs the candidate-compressed path.
+
+        A pure function of static metadata (``candidate_topk``, the plan,
+        each backend's ``topk_at``), so jitted steps keyed on the policy
+        treat it as a trace-time constant and hot-swaps never flip it.
+        """
+        if not self.candidate_topk:
+            return False
+        b = self.backend_for(step)
+        # The protocol flag is the opt-out contract (RowShardedStatic and
+        # the baselines set it False); topk_at then narrows per level.  Both
+        # must agree — a wrapper delegating topk_at without the flag (or
+        # vice versa) stays on the dense path rather than silently
+        # compressing.
+        if not getattr(b, "supports_topk", False):
+            return False
+        topk_at = getattr(b, "topk_at", None)
+        return bool(topk_at(step)) if topk_at is not None else False
+
+    def candidate_width(self, beams: int, step: int) -> int:
+        """Per-beam candidate count ``C`` for ``step`` (backend-specific
+        lane rounding; see ``core.vntk.candidate_width``)."""
+        return self.backend_for(step).candidate_width(beams)
+
+    def with_topk(self, enabled: bool) -> "DecodePolicy":
+        """The same plan with candidate compression forced on or off (used
+        by the differential tests and the dense-baseline benchmarks)."""
+        return dataclasses.replace(self, candidate_topk=bool(enabled))
+
+    def step_topk(
+        self,
+        logits: jax.Array,  # (..., V) raw logits (or log-probs, see below)
+        nodes: jax.Array,  # (...,) int32 per-beam states
+        step: int,  # static decode level
+        width: int,  # static per-beam candidate count C
+        *,
+        constraint_ids: Optional[jax.Array] = None,
+        normalized: bool = False,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Candidate-compressed Phases 1-2: per-beam dense-rank top-``width``
+        ``(scores, tokens, next_states)``, each ``(..., width)``.
+
+        Bit-exact contract (DESIGN.md §8): the lists are the top-``width``
+        entries of the vocab-aligned row :meth:`step` would produce, in
+        ``jax.lax.top_k``'s dense tie-break order, so a top-M over the
+        flattened ``(B, M*width)`` equals the dense top-M over ``(B, M*V)``.
+        """
+        if not self.supports_topk_at(step):
+            raise ValueError(
+                f"step {step} has no candidate-compressed backend "
+                f"(plan {self.describe()}); use step() or check "
+                "supports_topk_at first"
+            )
+        b = self.backend_for(step)
+        if constraint_ids is not None and not self.requires_constraint_ids:
+            raise ValueError(
+                "constraint_ids requires a stacked ConstraintStore policy"
+            )
+        cids = constraint_ids if b.supports_stacked else None
+        if not normalized and getattr(b, "fused", False) and b.supports_fused:
+            return b.topk_step(
+                logits, nodes, step, width, constraint_ids=cids,
+                normalized=False,
+            )
+        lp = logits if normalized else jax.nn.log_softmax(
+            logits.astype(jnp.float32), axis=-1
+        )
+        return b.topk_step(
+            lp, nodes, step, width, constraint_ids=cids, normalized=True
+        )
+
     def describe(self) -> str:
         """Human-readable per-level plan, e.g. for benchmark/CLI banners."""
         def label(b):
             if isinstance(b, (StaticBackend, StackedStaticBackend)):
                 kind = "dense-bitpack" if b.levels == "dense" else (
-                    f"vntk[{b.impl}{'+fused' if b.fused else ''}]")
+                    f"vntk[{b.impl}{'+fused' if b.fused else ''}"
+                    f"{'+topk' if self.candidate_topk else ''}]")
                 if isinstance(b, StackedStaticBackend):
                     return f"stacked(K={b.num_sets}):{kind}"
                 return kind
@@ -218,32 +300,36 @@ class DecodePolicy:
     # -- factories ---------------------------------------------------------
     @classmethod
     def static(cls, tm: TransitionMatrix, *, impl: Impl = "xla",
-               fused: bool = False) -> "DecodePolicy":
+               fused: bool = False, topk: bool = True) -> "DecodePolicy":
         """STATIC plan: dense bit-packed lookups for levels < ``dense_d``,
-        VNTK (``impl``, optionally ``fused``) for the deeper levels."""
+        VNTK (``impl``, optionally ``fused``) for the deeper levels.
+        ``topk`` opts the sparse levels into candidate-compressed decoding
+        (on by default; DESIGN.md §8)."""
         if getattr(tm, "is_stacked", False):
-            return cls.stacked(tm, impl=impl, fused=fused)
+            return cls.stacked(tm, impl=impl, fused=fused, topk=topk)
         L, d = tm.sid_length, min(tm.dense_d, tm.sid_length)
         if d == 0:
             return cls(
                 backends=(StaticBackend(tm, impl=impl, fused=fused,
                                         levels="sparse"),),
                 plan=(0,) * L,
+                candidate_topk=topk,
             )
         if d >= L:
             return cls(backends=(StaticBackend(tm, levels="dense"),),
-                       plan=(0,) * L)
+                       plan=(0,) * L, candidate_topk=topk)
         return cls(
             backends=(
                 StaticBackend(tm, levels="dense"),
                 StaticBackend(tm, impl=impl, fused=fused, levels="sparse"),
             ),
             plan=tuple(0 if s < d else 1 for s in range(L)),
+            candidate_topk=topk,
         )
 
     @classmethod
     def stacked(cls, store: ConstraintStore, *, impl: Impl = "xla",
-                fused: bool = False) -> "DecodePolicy":
+                fused: bool = False, topk: bool = True) -> "DecodePolicy":
         """Multi-tenant STATIC plan over a stacked ConstraintStore."""
         L, d = store.sid_length, min(store.dense_d, store.sid_length)
         if d == 0:
@@ -251,10 +337,11 @@ class DecodePolicy:
                 backends=(StackedStaticBackend(store, impl=impl, fused=fused,
                                                levels="sparse"),),
                 plan=(0,) * L,
+                candidate_topk=topk,
             )
         if d >= L:
             return cls(backends=(StackedStaticBackend(store, levels="dense"),),
-                       plan=(0,) * L)
+                       plan=(0,) * L, candidate_topk=topk)
         return cls(
             backends=(
                 StackedStaticBackend(store, levels="dense"),
@@ -262,6 +349,7 @@ class DecodePolicy:
                                      levels="sparse"),
             ),
             plan=tuple(0 if s < d else 1 for s in range(L)),
+            candidate_topk=topk,
         )
 
     @classmethod

@@ -206,6 +206,14 @@ class RowShardedStatic:
 
     supports_fused = False
     needs_prefix = False
+    # No candidate-compressed formulation for row-sharded CSR yet: the
+    # rank-select would have to run after the one-hop psum gather for no
+    # bandwidth win (the slab already crossed the interconnect), so
+    # rows="model" decodes through the dense branch.  The candidate path
+    # itself needs NO sharding machinery beyond this opt-out: with the
+    # default replicated placement the per-beam lists and the (B, M*C)
+    # top-M reduce are entirely dp-local (DESIGN.md §6/§8).
+    supports_topk = False
 
     @property
     def supports_stacked(self) -> bool:

@@ -20,9 +20,11 @@ from repro.kernels.vntk import (
     vntk_pallas,
     vntk_stacked_fused_logsoftmax_pallas,
     vntk_stacked_pallas,
+    vntk_stacked_topk_pallas,
+    vntk_topk_pallas,
 )
 
-__all__ = ["vntk", "vntk_fused_logsoftmax", "embedding_bag"]
+__all__ = ["vntk", "vntk_fused_logsoftmax", "vntk_topk", "embedding_bag"]
 
 
 def _resolve(impl: str | None) -> str:
@@ -73,6 +75,40 @@ def vntk_fused_logsoftmax(logits, nodes, row_pointers, edges, bmax: int,
         )
     return _ref.vntk_stacked_fused_logsoftmax_ref(
         logits, nodes, constraint_ids, row_pointers, edges, bmax, vocab
+    )
+
+
+@partial(jax.jit, static_argnames=("bmax", "vocab", "width", "impl",
+                                   "fused_logsoftmax"))
+def vntk_topk(values, nodes, row_pointers, edges, bmax: int, vocab: int,
+              width: int, impl: str | None = None, constraint_ids=None,
+              fused_logsoftmax: bool = False):
+    """Candidate-compressed VNTK (DESIGN.md §8): per-beam dense-rank top-C.
+
+    Returns ``(scores, tokens, next_states)``, each ``(..., width)`` — the
+    compressed per-beam candidate lists the sparse beam-advance consumes.
+    ``values`` are normalized log-probs, or raw logits with
+    ``fused_logsoftmax=True`` (the kernel then normalizes in-register).  With
+    ``constraint_ids`` the tables carry the stacked leading constraint axis.
+    """
+    if constraint_ids is None:
+        if _resolve(impl) == "pallas":
+            return vntk_topk_pallas(
+                values, nodes, row_pointers, edges, bmax, vocab, width,
+                fused_logsoftmax=fused_logsoftmax,
+            )
+        return _ref.vntk_topk_ref(
+            values, nodes, row_pointers, edges, bmax, vocab, width,
+            fused_logsoftmax=fused_logsoftmax,
+        )
+    if _resolve(impl) == "pallas":
+        return vntk_stacked_topk_pallas(
+            values, nodes, constraint_ids, row_pointers, edges, bmax, vocab,
+            width, fused_logsoftmax=fused_logsoftmax,
+        )
+    return _ref.vntk_stacked_topk_ref(
+        values, nodes, constraint_ids, row_pointers, edges, bmax, vocab,
+        width, fused_logsoftmax=fused_logsoftmax,
     )
 
 

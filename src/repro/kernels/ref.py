@@ -13,6 +13,8 @@ from repro.core.vntk import (
     NEG_INF,
     vntk_reference_scatter,
     vntk_stacked_reference_scatter,
+    vntk_stacked_topk_reference,
+    vntk_topk_reference,
 )
 
 __all__ = [
@@ -20,6 +22,8 @@ __all__ = [
     "vntk_fused_logsoftmax_ref",
     "vntk_stacked_ref",
     "vntk_stacked_fused_logsoftmax_ref",
+    "vntk_topk_ref",
+    "vntk_stacked_topk_ref",
     "embedding_bag_ref",
 ]
 
@@ -47,6 +51,26 @@ def vntk_stacked_fused_logsoftmax_ref(logits, nodes, constraint_ids,
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     return vntk_stacked_reference_scatter(
         lp, nodes, constraint_ids, row_pointers, edges, bmax, vocab
+    )
+
+
+def vntk_topk_ref(values, nodes, row_pointers, edges, bmax, vocab, width,
+                  fused_logsoftmax=False):
+    """Candidate-compressed oracle: per-beam dense-rank top-``width``."""
+    lp = (jax.nn.log_softmax(values.astype(jnp.float32), axis=-1)
+          if fused_logsoftmax else values)
+    return vntk_topk_reference(
+        lp, nodes, row_pointers, edges, bmax, vocab, width
+    )
+
+
+def vntk_stacked_topk_ref(values, nodes, constraint_ids, row_pointers, edges,
+                          bmax, vocab, width, fused_logsoftmax=False):
+    """Stacked candidate-compressed oracle (constraint-axis gather)."""
+    lp = (jax.nn.log_softmax(values.astype(jnp.float32), axis=-1)
+          if fused_logsoftmax else values)
+    return vntk_stacked_topk_reference(
+        lp, nodes, constraint_ids, row_pointers, edges, bmax, vocab, width
     )
 
 

@@ -21,6 +21,19 @@ padded accordingly by the trie builder).
 The fused variant additionally normalizes raw logits with an in-register
 log-softmax before masking, eliminating one full HBM round-trip over the
 ``(B*M, V)`` tensor per decode step (a beyond-paper optimization).
+
+The **candidate-compressed** kernels (``vntk_topk_pallas`` /
+``vntk_stacked_topk_pallas``, DESIGN.md §8) go one step further: instead of
+writing the vocab-aligned ``(nb, V)`` masked log-probs *and* next-state map
+back to HBM, they select each beam's dense-rank top-``C`` **in VMEM** — via
+the same compare-broadcast machinery, now reducing over the vocab axis to
+gather candidate log-probs — and emit only ``(nb, C)`` scores/tokens/states.
+HBM write traffic per step drops from ``O(nb * V)`` to ``O(nb * C)``.
+Selection is a branch-free rank-by-counting pass (TPUs have no in-VMEM sort):
+``rank[j] = #{j' : key[j'] > key[j] or (key[j'] == key[j] and j' < j)}``
+followed by a compare-broadcast scatter into the ``C`` output lanes; the
+index tie-break reproduces the dense path's flat-index tie order exactly
+(candidate slots are token-ascending, see ``core.vntk._topk_from_candidates``).
 """
 from __future__ import annotations
 
@@ -38,11 +51,92 @@ __all__ = [
     "vntk_fused_logsoftmax_pallas",
     "vntk_stacked_pallas",
     "vntk_stacked_fused_logsoftmax_pallas",
+    "vntk_topk_pallas",
+    "vntk_stacked_topk_pallas",
 ]
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+def _beam_padding(nb: int, beam_tile: int) -> tuple[int, int]:
+    """Grid tiling for ``nb`` beam rows: ``(beam_tile, nb_padded)``.
+
+    The beam axis is padded UP to a tile multiple instead of degrading the
+    tile (the old ``while nb % beam_tile: beam_tile -= 1`` walked prime row
+    counts all the way down to tile=1, serializing the whole grid).  Pad rows
+    decode from the SINK state (node 0, an empty CSR row) so their DMAs stay
+    in bounds and their outputs are sliced away by the caller.
+    """
+    beam_tile = max(1, min(beam_tile, nb))
+    return beam_tile, _round_up(nb, beam_tile)
+
+
+def _pad_rows(arr, nb_padded: int, fill=0):
+    """Pad axis 0 of ``arr`` to ``nb_padded`` rows with ``fill``."""
+    nb = arr.shape[0]
+    if nb == nb_padded:
+        return arr
+    pad = [(0, nb_padded - nb)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pad, constant_values=fill)
+
+
+def _dma_front(
+    nodes_ref,
+    rowptr_hbm,
+    edges_hbm,
+    rp_scratch,
+    edge_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    beam_tile: int,
+    bmax_padded: int,
+    cids_ref=None,
+):
+    """Phases 1+2: pipelined per-beam boundary lookup + speculative burst.
+
+    Two overlapped waves: ALL row-pointer copies are issued before any is
+    waited on, so beam i+1's rowptr fetch rides under beam i's edge burst
+    (the old inline start()+wait() serialized the whole front: no rowptr
+    DMA could overlap anything).  Edge bursts still wait on their own beam's
+    row pointer — the burst start address depends on it, which is why
+    ``sem_rp`` is a PER-BEAM semaphore array: a shared DMA semaphore counts
+    completions without identifying which copy signaled, so beam j landing
+    first could otherwise unblock beam i's wait while beam i's row pointer
+    is still in flight.  The edge wave may share one semaphore — nothing
+    reads ``edge_scratch`` until every edge wait has returned, and
+    ``beam_tile`` waits can only be satisfied by ``beam_tile`` completions.
+    With ``cids_ref`` both tensors carry a leading constraint axis (stacked
+    store, §4).
+    """
+    def rp_src(i):
+        sl = pl.ds(nodes_ref[i], 2)
+        return (rowptr_hbm.at[cids_ref[i], sl] if cids_ref is not None
+                else rowptr_hbm.at[sl])
+
+    def edge_src(i, start):
+        sl = pl.ds(start, bmax_padded)
+        return (edges_hbm.at[cids_ref[i], sl] if cids_ref is not None
+                else edges_hbm.at[sl])
+
+    rp_copies = [
+        pltpu.make_async_copy(rp_src(i), rp_scratch.at[i], sem_rp.at[i])
+        for i in range(beam_tile)
+    ]
+    for cp in rp_copies:
+        cp.start()
+    edge_copies = []
+    for i in range(beam_tile):
+        rp_copies[i].wait()  # semaphore i: signaled only by copy i
+        cp2 = pltpu.make_async_copy(
+            edge_src(i, rp_scratch[i, 0]), edge_scratch.at[i], sem_edge
+        )
+        cp2.start()
+        edge_copies.append(cp2)
+    for cp2 in edge_copies:
+        cp2.wait()
 
 
 def _project_and_write(
@@ -97,6 +191,187 @@ def _project_and_write(
     out_next_ref[...] = nxt
 
 
+def _project_and_select(
+    rp_scratch,
+    edge_scratch,
+    logits_ref,
+    out_sc_ref,
+    out_tok_ref,
+    out_next_ref,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    width: int,
+    fused_logsoftmax: bool,
+):
+    """Phases 3+4' of the candidate-compressed step (DESIGN.md §8).
+
+    Instead of projecting the candidates to a vocab-aligned mask, the same
+    chunked compare-broadcast now runs the OTHER way — reducing over the
+    vocab axis to gather each CSR slot's log-prob — and an in-VMEM
+    rank-by-counting pass selects each beam's dense-rank top-``width``:
+    valid children by (lp desc, token asc), then the smallest missing tokens
+    at NEG_INF (the dense tie-break's invalid-continuation order), exactly
+    as in :func:`repro.core.vntk._topk_from_candidates`.  Only the
+    ``(beam_tile, width)`` winners ever leave VMEM.
+    """
+    n_child = rp_scratch[:, 1] - rp_scratch[:, 0]  # (beam_tile,)
+
+    x = logits_ref[...]
+    xf = x.astype(jnp.float32)
+    if fused_logsoftmax:
+        m = jnp.max(xf, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(xf - m), axis=-1, keepdims=True))
+        lp = xf - m - lse
+    else:
+        lp = xf
+
+    # ---- candidate log-prob gather: chunked compare-broadcast reduction ----
+    n_chunks = bmax_padded // slot_chunk
+    iota_slot = jax.lax.broadcasted_iota(jnp.int32, (beam_tile, slot_chunk), 1)
+    iota_v = jax.lax.broadcasted_iota(
+        jnp.int32, (beam_tile, slot_chunk, vocab), 2
+    )
+
+    def chunk_body(c, cand):
+        sl = edge_scratch[:, pl.ds(c * slot_chunk, slot_chunk), :]
+        cols = sl[:, :, 0]
+        valid = (c * slot_chunk + iota_slot) < n_child[:, None]
+        hit = (cols[:, :, None] == iota_v) & valid[:, :, None]
+        # token columns within a CSR row are unique: <= 1 non-zero term
+        vals = jnp.sum(hit.astype(jnp.float32) * lp[:, None, :], axis=2)
+        return jax.lax.dynamic_update_slice(cand, vals, (0, c * slot_chunk))
+
+    cand_lp = jax.lax.fori_loop(
+        0, n_chunks, chunk_body,
+        jnp.zeros((beam_tile, bmax_padded), jnp.float32),
+    )
+
+    # ---- per-beam dense-rank top-C over candidates + missing-token fill ----
+    minf = jnp.float32(jnp.finfo(jnp.float32).min)
+    iota_full = jax.lax.broadcasted_iota(
+        jnp.int32, (beam_tile, bmax_padded), 1
+    )
+    valid_full = iota_full < n_child[:, None]
+    cols_all = edge_scratch[:, :, 0]
+    next_all = edge_scratch[:, :, 1]
+    real_key = jnp.where(valid_full, cand_lp, minf)
+    real_tok = jnp.where(valid_full, cols_all, 0)
+    real_next = jnp.where(valid_full, next_all, 0)
+
+    # i-th missing token = i + |{j : cols[j] - j <= i}| (sorted distinct cols)
+    adj = jnp.where(valid_full, cols_all - iota_full, vocab + bmax_padded + 1)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (beam_tile, width), 1)
+    cnt = jnp.sum(
+        (adj[:, None, :] <= iota_c[:, :, None]).astype(jnp.int32), axis=2
+    )
+    fill_tok = iota_c + cnt
+    in_range = fill_tok < vocab
+    fill_key = jnp.where(in_range, jnp.float32(NEG_INF), minf)
+    fill_tok = jnp.where(in_range, fill_tok, 0)
+
+    keys = jnp.concatenate([real_key, fill_key], axis=1)  # (beam_tile, J)
+    toks = jnp.concatenate([real_tok, fill_tok], axis=1)
+    nxts = jnp.concatenate(
+        [real_next, jnp.zeros((beam_tile, width), next_all.dtype)], axis=1
+    )
+    J = bmax_padded + width
+
+    # rank[j] = #{j' : key[j'] > key[j] or (== and j' < j)} — branch-free
+    # selection sort rank; the index tie-break IS the dense flat-index tie
+    # order (slots are token-ascending).  The competitor axis is chunked so
+    # VMEM stays O(J * chunk) rather than O(J^2).
+    idx_j = jax.lax.broadcasted_iota(jnp.int32, (beam_tile, J), 1)
+    ka = keys[:, :, None]
+    ia = idx_j[:, :, None]
+    rank = jnp.zeros((beam_tile, J), jnp.int32)
+    rchunk = max(slot_chunk * 16, width)
+    for c0 in range(0, J, rchunk):
+        c1 = min(c0 + rchunk, J)
+        kb = keys[:, None, c0:c1]
+        ib = idx_j[:, None, c0:c1]
+        beats = (kb > ka) | ((kb == ka) & (ib < ia))
+        rank = rank + jnp.sum(beats.astype(jnp.int32), axis=2)
+
+    # compare-broadcast scatter of the rank-< width winners into the C lanes
+    sel = rank[:, None, :] == iota_c[:, :, None]  # (beam_tile, width, J)
+    out_sc = jnp.sum(sel.astype(jnp.float32) * keys[:, None, :], axis=2)
+    out_tok = jnp.sum(sel.astype(toks.dtype) * toks[:, None, :], axis=2)
+    out_next = jnp.sum(sel.astype(nxts.dtype) * nxts[:, None, :], axis=2)
+
+    out_sc_ref[...] = out_sc.astype(out_sc_ref.dtype)
+    out_tok_ref[...] = out_tok.astype(jnp.int32)
+    out_next_ref[...] = out_next.astype(jnp.int32)
+
+
+def _vntk_topk_body(
+    nodes_ref,
+    logits_ref,
+    rowptr_hbm,
+    edges_hbm,
+    out_sc_ref,
+    out_tok_ref,
+    out_next_ref,
+    rp_scratch,
+    edge_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    width: int,
+    fused_logsoftmax: bool,
+):
+    _dma_front(
+        nodes_ref, rowptr_hbm, edges_hbm, rp_scratch, edge_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+    )
+    _project_and_select(
+        rp_scratch, edge_scratch, logits_ref, out_sc_ref, out_tok_ref,
+        out_next_ref, bmax_padded=bmax_padded, slot_chunk=slot_chunk,
+        vocab=vocab, beam_tile=beam_tile, width=width,
+        fused_logsoftmax=fused_logsoftmax,
+    )
+
+
+def _vntk_stacked_topk_body(
+    nodes_ref,
+    cids_ref,
+    logits_ref,
+    rowptr_hbm,
+    edges_hbm,
+    out_sc_ref,
+    out_tok_ref,
+    out_next_ref,
+    rp_scratch,
+    edge_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    width: int,
+    fused_logsoftmax: bool,
+):
+    _dma_front(
+        nodes_ref, rowptr_hbm, edges_hbm, rp_scratch, edge_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+        cids_ref=cids_ref,
+    )
+    _project_and_select(
+        rp_scratch, edge_scratch, logits_ref, out_sc_ref, out_tok_ref,
+        out_next_ref, bmax_padded=bmax_padded, slot_chunk=slot_chunk,
+        vocab=vocab, beam_tile=beam_tile, width=width,
+        fused_logsoftmax=fused_logsoftmax,
+    )
+
+
 def _vntk_body(
     nodes_ref,
     logits_ref,
@@ -115,25 +390,10 @@ def _vntk_body(
     beam_tile: int,
     fused_logsoftmax: bool,
 ):
-    # ---- Phase 1+2: per-beam boundary lookup + speculative burst DMA ----
-    # Start all row-pointer DMAs, then all edge DMAs (edge start depends on
-    # the row pointer, so the second wave waits on the first per-beam).
-    for i in range(beam_tile):
-        cp = pltpu.make_async_copy(
-            rowptr_hbm.at[pl.ds(nodes_ref[i], 2)], rp_scratch.at[i], sem_rp
-        )
-        cp.start()
-        cp.wait()
-        start = rp_scratch[i, 0]
-        cp2 = pltpu.make_async_copy(
-            edges_hbm.at[pl.ds(start, bmax_padded)], edge_scratch.at[i], sem_edge
-        )
-        cp2.start()
-    for i in range(beam_tile):
-        pltpu.make_async_copy(
-            edges_hbm.at[pl.ds(0, bmax_padded)], edge_scratch.at[i], sem_edge
-        ).wait()
-
+    _dma_front(
+        nodes_ref, rowptr_hbm, edges_hbm, rp_scratch, edge_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+    )
     _project_and_write(
         rp_scratch, edge_scratch, logits_ref, out_lp_ref, out_next_ref,
         bmax_padded=bmax_padded, slot_chunk=slot_chunk, vocab=vocab,
@@ -163,26 +423,14 @@ def _vntk_stacked_body(
     """Multi-constraint front end (DESIGN.md §4): the row-pointer and edge
     DMAs index one extra leading constraint axis — ``rowptr (K, S+1)`` and
     ``edges (K, E, 2)`` — by each beam's constraint id.  Everything after the
-    fetch is the shared single-matrix projection."""
-    for i in range(beam_tile):
-        cid = cids_ref[i]
-        cp = pltpu.make_async_copy(
-            rowptr_hbm.at[cid, pl.ds(nodes_ref[i], 2)], rp_scratch.at[i], sem_rp
-        )
-        cp.start()
-        cp.wait()
-        start = rp_scratch[i, 0]
-        cp2 = pltpu.make_async_copy(
-            edges_hbm.at[cid, pl.ds(start, bmax_padded)],
-            edge_scratch.at[i],
-            sem_edge,
-        )
-        cp2.start()
-    for i in range(beam_tile):
-        pltpu.make_async_copy(
-            edges_hbm.at[0, pl.ds(0, bmax_padded)], edge_scratch.at[i], sem_edge
-        ).wait()
-
+    fetch is the shared single-matrix projection.  The DMA front is pipelined
+    exactly like :func:`_vntk_body`: every rowptr copy is in flight before
+    the first edge burst is issued."""
+    _dma_front(
+        nodes_ref, rowptr_hbm, edges_hbm, rp_scratch, edge_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+        cids_ref=cids_ref,
+    )
     _project_and_write(
         rp_scratch, edge_scratch, logits_ref, out_lp_ref, out_next_ref,
         bmax_padded=bmax_padded, slot_chunk=slot_chunk, vocab=vocab,
@@ -205,15 +453,15 @@ def _vntk_call(
     out_dtype=jnp.float32,
 ):
     nb = nodes.shape[0]
-    beam_tile = min(beam_tile, nb)
-    while nb % beam_tile:
-        beam_tile -= 1
+    beam_tile, nb_pad = _beam_padding(nb, beam_tile)
+    logits = _pad_rows(logits, nb_pad)
+    nodes = _pad_rows(nodes, nb_pad)  # pad rows decode from SINK (node 0)
     bmax_padded = _round_up(max(bmax, 1), slot_chunk)
     if edges.shape[0] < bmax_padded:
         raise ValueError("edges tensor smaller than one speculative burst")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    grid = (nb // beam_tile,)
+    grid = (nb_pad // beam_tile,)
     kern = functools.partial(
         _vntk_body,
         bmax_padded=bmax_padded,
@@ -236,18 +484,18 @@ def _vntk_call(
             pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nb, vocab), out_dtype),
-            jax.ShapeDtypeStruct((nb, vocab), jnp.int32),
+            jax.ShapeDtypeStruct((nb_pad, vocab), out_dtype),
+            jax.ShapeDtypeStruct((nb_pad, vocab), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((beam_tile, 2), jnp.int32),
             pltpu.VMEM((beam_tile, bmax_padded, 2), jnp.int32),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((beam_tile,)),  # per-beam rowptr sems
             pltpu.SemaphoreType.DMA,
         ],
         interpret=interpret,
     )(nodes, logits, row_pointers, edges)
-    return out_lp, out_next
+    return out_lp[:nb], out_next[:nb]
 
 
 def _vntk_stacked_call(
@@ -266,15 +514,16 @@ def _vntk_stacked_call(
     out_dtype=jnp.float32,
 ):
     nb = nodes.shape[0]
-    beam_tile = min(beam_tile, nb)
-    while nb % beam_tile:
-        beam_tile -= 1
+    beam_tile, nb_pad = _beam_padding(nb, beam_tile)
+    logits = _pad_rows(logits, nb_pad)
+    nodes = _pad_rows(nodes, nb_pad)  # pad rows decode from SINK (node 0)
+    cids = _pad_rows(cids, nb_pad)
     bmax_padded = _round_up(max(bmax, 1), slot_chunk)
     if edges.shape[1] < bmax_padded:
         raise ValueError("edges tensor smaller than one speculative burst")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    grid = (nb // beam_tile,)
+    grid = (nb_pad // beam_tile,)
     kern = functools.partial(
         _vntk_stacked_body,
         bmax_padded=bmax_padded,
@@ -298,18 +547,91 @@ def _vntk_stacked_call(
             pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nb, vocab), out_dtype),
-            jax.ShapeDtypeStruct((nb, vocab), jnp.int32),
+            jax.ShapeDtypeStruct((nb_pad, vocab), out_dtype),
+            jax.ShapeDtypeStruct((nb_pad, vocab), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((beam_tile, 2), jnp.int32),
             pltpu.VMEM((beam_tile, bmax_padded, 2), jnp.int32),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((beam_tile,)),  # per-beam rowptr sems
             pltpu.SemaphoreType.DMA,
         ],
         interpret=interpret,
     )(nodes, cids, logits, row_pointers, edges)
-    return out_lp, out_next
+    return out_lp[:nb], out_next[:nb]
+
+
+def _vntk_topk_call(
+    logits: jax.Array,  # (nb, V)
+    nodes: jax.Array,  # (nb,)
+    cids: jax.Array | None,  # (nb,) or None for the single-matrix path
+    row_pointers: jax.Array,  # (S+1,) or (K, S+1)
+    edges: jax.Array,  # (E+pad, 2) or (K, E, 2)
+    bmax: int,
+    vocab: int,
+    width: int,
+    *,
+    fused_logsoftmax: bool,
+    beam_tile: int = 8,
+    slot_chunk: int = 8,
+    interpret: bool | None = None,
+):
+    """Shared driver for the candidate-compressed kernels: three ``(nb, C)``
+    outputs instead of two ``(nb, V)`` ones."""
+    nb = nodes.shape[0]
+    beam_tile, nb_pad = _beam_padding(nb, beam_tile)
+    logits = _pad_rows(logits, nb_pad)
+    nodes = _pad_rows(nodes, nb_pad)  # pad rows decode from SINK (node 0)
+    stacked = cids is not None
+    if stacked:
+        cids = _pad_rows(cids, nb_pad)
+    bmax_padded = _round_up(max(bmax, 1), slot_chunk)
+    if edges.shape[-2] < bmax_padded:
+        raise ValueError("edges tensor smaller than one speculative burst")
+    if not 1 <= width <= vocab:
+        raise ValueError(f"width must be in [1, {vocab}], got {width}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (nb_pad // beam_tile,)
+    kern = functools.partial(
+        _vntk_stacked_topk_body if stacked else _vntk_topk_body,
+        bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk,
+        vocab=vocab,
+        beam_tile=beam_tile,
+        width=width,
+        fused_logsoftmax=fused_logsoftmax,
+    )
+    row_specs = [pl.BlockSpec((beam_tile,), lambda i: (i,))]
+    if stacked:
+        row_specs.append(pl.BlockSpec((beam_tile,), lambda i: (i,)))
+    out_sc, out_tok, out_next = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=row_specs + [
+            pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((beam_tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((beam_tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((beam_tile, width), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb_pad, width), jnp.float32),
+            jax.ShapeDtypeStruct((nb_pad, width), jnp.int32),
+            jax.ShapeDtypeStruct((nb_pad, width), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((beam_tile, 2), jnp.int32),
+            pltpu.VMEM((beam_tile, bmax_padded, 2), jnp.int32),
+            pltpu.SemaphoreType.DMA((beam_tile,)),  # per-beam rowptr sems
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(*((nodes, cids) if stacked else (nodes,)), logits, row_pointers, edges)
+    return out_sc[:nb], out_tok[:nb], out_next[:nb]
 
 
 def vntk_pallas(
@@ -416,3 +738,68 @@ def vntk_stacked_fused_logsoftmax_pallas(
         **kw,
     )
     return lp.reshape(batch_shape + (vocab,)), nxt.reshape(batch_shape + (vocab,))
+
+
+def vntk_topk_pallas(
+    values: jax.Array,  # (..., V) log-probs, or raw logits when fused
+    nodes: jax.Array,
+    row_pointers: jax.Array,
+    edges: jax.Array,
+    bmax: int,
+    vocab: int,
+    width: int,
+    *,
+    fused_logsoftmax: bool = False,
+    **kw,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Candidate-compressed Alg. 2 (DESIGN.md §8): per-beam dense-rank top-C
+    selected in VMEM.  Returns ``(scores, tokens, next_states)``, each
+    ``(..., width)``; with ``fused_logsoftmax`` the inputs are raw logits and
+    normalization happens in-register before selection."""
+    batch_shape = nodes.shape
+    sc, tok, nxt = _vntk_topk_call(
+        values.reshape(-1, vocab),
+        nodes.reshape(-1),
+        None,
+        row_pointers,
+        edges,
+        bmax,
+        vocab,
+        width,
+        fused_logsoftmax=fused_logsoftmax,
+        **kw,
+    )
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nxt.reshape(shp)
+
+
+def vntk_stacked_topk_pallas(
+    values: jax.Array,  # (..., V) log-probs, or raw logits when fused
+    nodes: jax.Array,
+    constraint_ids: jax.Array,
+    row_pointers: jax.Array,  # (K, S+1)
+    edges: jax.Array,  # (K, E, 2)
+    bmax: int,
+    vocab: int,
+    width: int,
+    *,
+    fused_logsoftmax: bool = False,
+    **kw,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stacked-store candidate-compressed Alg. 2 over a ConstraintStore."""
+    batch_shape = nodes.shape
+    cids = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    sc, tok, nxt = _vntk_topk_call(
+        values.reshape(-1, vocab),
+        nodes.reshape(-1),
+        cids.astype(jnp.int32),
+        row_pointers,
+        edges,
+        bmax,
+        vocab,
+        width,
+        fused_logsoftmax=fused_logsoftmax,
+        **kw,
+    )
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nxt.reshape(shp)

@@ -32,6 +32,10 @@ def main():
                     help="VNTK formulation for sparse decode levels")
     ap.add_argument("--fused", action="store_true",
                     help="fuse Phase-1 log-softmax into the masking kernel")
+    ap.add_argument("--no-topk", action="store_true",
+                    help="disable candidate-compressed decoding and use the "
+                         "vocab-aligned dense advance at every level "
+                         "(DESIGN.md §8; bit-identical, for A/B timing)")
     ap.add_argument("--num-constraint-sets", type=int, default=0, metavar="K",
                     help="also build K synthetic business-constraint sets via "
                          "the ConstraintRegistry and report the stacked "
@@ -67,7 +71,8 @@ def main():
     if not args.unconstrained:
         t0 = time.time()
         tm = TransitionMatrix.from_sids(sids, args.vocab, dense_d=2)
-        policy = DecodePolicy.static(tm, impl=args.impl, fused=args.fused)
+        policy = DecodePolicy.static(tm, impl=args.impl, fused=args.fused,
+                                     topk=not args.no_topk)
         print(f"constraint index: {tm.n_states} states "
               f"({time.time()-t0:.2f}s build); policy {policy.describe()}")
     if args.spmd:
@@ -120,7 +125,8 @@ def main():
               f"{tm.nbytes()/1e6:.2f} MB "
               f"({store.nbytes()/max(tm.nbytes(),1):.1f}x for {K} tenants)")
         mc_policy = DecodePolicy.stacked(store, impl=args.impl,
-                                         fused=args.fused)
+                                         fused=args.fused,
+                                         topk=not args.no_topk)
         r_mc = GenerativeRetriever(params, cfg, mc_policy, args.sid_length,
                                    args.vocab, beam_size=args.beam)
         cids = np.arange(args.batch, dtype=np.int32) % K

@@ -14,6 +14,12 @@ then decoded under its own business constraint set in the same jitted beam
 search.  The policy rides into jit as a pytree ARGUMENT with swap-invariant
 static metadata, so a registry hot-swap (``set_constraints``) never
 recompiles.
+
+STATIC policies default to candidate-compressed decoding (DESIGN.md §8):
+sparse levels advance beams from per-beam top-C lists instead of
+vocab-aligned tensors, bit-identical to the dense path.  Whether a level
+compresses is static policy metadata (``supports_topk_at``), so it needs no
+plumbing here and cannot flip across a hot-swap.
 """
 from __future__ import annotations
 

@@ -10,6 +10,9 @@ bit-identical to single-device — asserted in
 argument with per-backend placements from its ``shardings(mesh)`` hook:
 replicated by default (paper §A.3), or CSR-row-sharded along ``model`` with
 ``rows="model"`` for tries that outgrow one device (DESIGN.md §6).
+Candidate-compressed levels (DESIGN.md §8) need nothing extra here: the
+per-beam top-C lists and the ``(B, M*C)`` reduce are dp-local, and
+``rows="model"`` opts out via ``RowShardedStatic.supports_topk = False``.
 
 ``SpmdServingEngine`` replaces the one-request-at-a-time admit loop of
 ``ServingEngine._serve_retrieval`` with continuous data-parallel batching:

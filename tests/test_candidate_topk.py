@@ -1,0 +1,235 @@
+"""Candidate-compressed decoding (DESIGN.md §8): unit + serving coverage.
+
+The bit-exactness of the compressed path against the dense one is asserted
+at scale in ``test_differential_fuzz`` / ``test_golden_traces``; this module
+covers the contract pieces around it: the C sizing rule, the policy surface
+(``supports_topk_at`` / ``step_topk`` / ``with_topk``), the HBM-traffic
+model, registry hot-swaps staying zero-recompile under a topk plan, and the
+retriever serving end-to-end through the compressed branch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.constraints import ConstraintStore
+from repro.core import TransitionMatrix, beam_search
+from repro.core.memory_model import decode_step_traffic
+from repro.core.vntk import candidate_width
+from repro.decoding import DecodePolicy
+from repro.models import transformer
+from repro.serving.generative_retrieval import GenerativeRetriever
+from conftest import make_sids
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = smoke_config("stablelm-12b")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# C sizing rule
+# ---------------------------------------------------------------------------
+def test_candidate_width_rule():
+    # lane-rounded beam count, capped at V
+    assert candidate_width(70, 2048, lane=128) == 128
+    assert candidate_width(140, 32768, lane=128) == 256
+    assert candidate_width(6, 2048, lane=8) == 8
+    assert candidate_width(6, 5, lane=8) == 5  # V-cap: full dense row
+    assert candidate_width(1, 1, lane=8) == 1
+    # C >= min(M, V): the losslessness precondition (DESIGN.md §8)
+    for m in (1, 3, 17, 140):
+        for v in (2, 9, 2048):
+            for lane in (8, 128):
+                assert candidate_width(m, v, lane) >= min(m, v)
+                assert candidate_width(m, v, lane) <= v
+
+
+def test_policy_candidate_width_follows_impl_lane():
+    sids = np.unique(np.random.default_rng(0).integers(
+        0, 300, size=(50, 4)).astype(np.int64), axis=0)
+    tm = TransitionMatrix.from_sids(sids, 300, dense_d=1)
+    assert DecodePolicy.static(tm).candidate_width(6, 2) == 8  # xla sublane
+    assert DecodePolicy.static(tm, impl="pallas").candidate_width(6, 2) == 128
+
+
+# ---------------------------------------------------------------------------
+# policy surface
+# ---------------------------------------------------------------------------
+def _toy(dense_d=1, V=24, L=4, seed=0):
+    rng = np.random.default_rng(seed)
+    sids = np.unique(rng.integers(0, V, size=(60, L)).astype(np.int64), axis=0)
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=dense_d)
+    return tm, sids, rng
+
+
+def test_supports_topk_per_level_and_families():
+    tm, sids, _ = _toy(dense_d=2)
+    p = DecodePolicy.static(tm)
+    assert [p.supports_topk_at(s) for s in range(4)] == [
+        False, False, True, True]  # dense band opts out
+    assert not any(
+        DecodePolicy.static(tm, topk=False).supports_topk_at(s)
+        for s in range(4))
+    for baseline in (DecodePolicy.ppv(sids, 24),
+                     DecodePolicy.hash_bitmap(sids, 24),
+                     DecodePolicy.cpu_trie(sids, 24),
+                     DecodePolicy.unconstrained()):
+        assert not baseline.supports_topk_at(0)  # fall back to dense
+
+
+def test_supports_topk_flag_is_the_opt_out():
+    """The protocol's ``supports_topk`` flag must gate the candidate branch
+    even when a backend exposes a ``topk_at`` method — this is what keeps
+    ``RowShardedStatic.supports_topk = False`` (DESIGN.md §6) an opt-out a
+    delegating wrapper cannot accidentally bypass."""
+    from repro.distributed.constraint_sharding import RowShardedStatic
+
+    tm, _, _ = _toy(dense_d=1)
+    inner = DecodePolicy.static(tm).backends[1]  # the sparse StaticBackend
+    assert inner.topk_at(2)
+    wrapped = RowShardedStatic(inner=inner)
+    p = DecodePolicy.per_level((wrapped,), (0,) * 4)
+    assert not any(p.supports_topk_at(s) for s in range(4))
+
+
+def test_step_topk_rejects_dense_band_and_missing_ids():
+    tm, _, rng = _toy(dense_d=2)
+    p = DecodePolicy.static(tm)
+    lp = jnp.zeros((3, 24), jnp.float32)
+    nodes = jnp.ones((3,), jnp.int32)
+    with pytest.raises(ValueError, match="no candidate-compressed backend"):
+        p.step_topk(lp, nodes, 0, 8)  # dense band
+    with pytest.raises(ValueError, match="no candidate-compressed backend"):
+        p.with_topk(False).step_topk(lp, nodes, 2, 8)
+    store = ConstraintStore.from_matrices([tm, tm])
+    with pytest.raises(ValueError, match="constraint_ids"):
+        DecodePolicy.stacked(store).step_topk(lp, nodes, 2, 8)
+
+
+def test_with_topk_changes_structure_but_swap_does_not():
+    tm, _, _ = _toy()
+    p = DecodePolicy.static(tm)
+    s_on = jax.tree_util.tree_structure(p)
+    assert jax.tree_util.tree_structure(p.with_topk(False)) != s_on
+    assert jax.tree_util.tree_structure(p.with_constraints(tm)) == s_on
+
+
+def test_describe_reports_topk():
+    tm, _, _ = _toy()
+    assert "+topk" in DecodePolicy.static(tm).describe()
+    assert "+topk" not in DecodePolicy.static(tm, topk=False).describe()
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic model
+# ---------------------------------------------------------------------------
+def test_decode_step_traffic_model():
+    t = decode_step_traffic(2048, 2, 70, lane=128)
+    assert t["width"] == 128
+    # dense writes two (B*M, V) int32/f32 tensors
+    assert t["dense_write_bytes"] == 140 * 2048 * 8
+    # candidate writes three (B*M, C) tensors
+    assert t["candidate_write_bytes"] == 140 * 128 * 12
+    assert t["compression_ratio"] > 10
+    # the win grows linearly with V while C stays pinned
+    t2 = decode_step_traffic(32768, 2, 70, lane=128)
+    assert t2["width"] == 128
+    assert t2["compression_ratio"] > 15 * t["compression_ratio"] / 16
+
+
+def test_decode_step_traffic_matches_array_sizes():
+    """Model vs reality: the modeled write bytes equal the nbytes of the
+    tensors each path actually materializes per step."""
+    V, B, M = 512, 2, 6
+    tm, _, _ = _toy(dense_d=0, V=V)
+
+    p = DecodePolicy.static(tm)
+    C = p.candidate_width(M, 0)
+    lp = jnp.zeros((B, M, V), jnp.float32)
+    nodes = jnp.ones((B, M), jnp.int32)
+    d_lp, d_nx = p.step(lp, nodes, 0, normalized=True)
+    sc, tok, nx = p.step_topk(lp, nodes, 0, C, normalized=True)
+    t = decode_step_traffic(V, B, M, width=C)
+    assert d_lp.nbytes + d_nx.nbytes == t["dense_write_bytes"]
+    assert sc.nbytes + tok.nbytes + nx.nbytes == t["candidate_write_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# hot-swap invariance under a topk plan
+# ---------------------------------------------------------------------------
+def test_hot_swap_zero_recompile_with_topk_plan(rng):
+    """A jitted candidate-compressed beam step keyed on the policy must be
+    reused as-is across a store hot-swap (same envelope, new leaves)."""
+    V, L, K = 32, 4, 2
+    mats = [
+        TransitionMatrix.from_sids(make_sids(rng, 120, V, L, clustered=True),
+                                   V, dense_d=1)
+        for _ in range(K)
+    ]
+    store = ConstraintStore.from_matrices(mats, headroom=0.5)
+    policy = DecodePolicy.stacked(store)
+    assert policy.supports_topk_at(L - 1)
+    table = jnp.asarray(rng.normal(size=(L, V, V)).astype(np.float32))
+    cids = jnp.asarray([0, 1, 0], jnp.int32)
+
+    @jax.jit
+    def decode(pol):
+        def logits_fn(carry, last, step):
+            return table[step][last], carry
+
+        state, _ = beam_search(logits_fn, None, 3, 5, L, pol,
+                               constraint_ids=cids)
+        return state.tokens, state.scores
+
+    decode(policy)  # compile once
+    swapped = policy.with_constraints(
+        store.with_member(
+            0,
+            TransitionMatrix.from_sids(
+                make_sids(rng, 130, V, L, clustered=True), V, dense_d=1),
+        )
+    )
+    assert (jax.tree_util.tree_structure(swapped)
+            == jax.tree_util.tree_structure(policy))
+    compiles = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda name, *a, **kw: compiles.append(name)
+        if "backend_compile" in name else None
+    )
+    decode(swapped)
+    assert len(compiles) == 0, f"topk hot-swap recompiled: {compiles}"
+
+
+# ---------------------------------------------------------------------------
+# serving end-to-end through the compressed branch
+# ---------------------------------------------------------------------------
+def test_retriever_candidate_path_matches_dense(small_lm, rng):
+    """GenerativeRetriever with the default (topk) policy returns exactly
+    the SIDs/scores of a dense-only retriever over the same model."""
+    params, cfg = small_lm
+    V, L = cfg.vocab_size, 4
+    sids = make_sids(rng, 200, V, L, clustered=True)
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    hist = rng.integers(0, V, size=(2, 6)).astype(np.int32)
+    r_topk = GenerativeRetriever(
+        params, cfg, DecodePolicy.static(tm), sid_length=L, sid_vocab=V,
+        beam_size=5)
+    r_dense = GenerativeRetriever(
+        params, cfg, DecodePolicy.static(tm, topk=False), sid_length=L,
+        sid_vocab=V, beam_size=5)
+    assert r_topk.policy.supports_topk_at(L - 1)
+    t_beams, t_scores = r_topk.retrieve(hist)
+    d_beams, d_scores = r_dense.retrieve(hist)
+    np.testing.assert_array_equal(t_beams, d_beams)
+    np.testing.assert_allclose(t_scores, d_scores, rtol=1e-6, atol=1e-6)
+    # 100% compliance: every emitted SID is in the corpus
+    valid = {tuple(r) for r in sids}
+    from repro.core.vntk import NEG_INF
+    for b in range(t_beams.shape[0]):
+        for m in range(t_beams.shape[1]):
+            if t_scores[b, m] > NEG_INF / 2:
+                assert tuple(t_beams[b, m]) in valid

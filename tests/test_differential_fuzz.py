@@ -235,6 +235,122 @@ def test_fuzz_delta_refresh_bit_identical_and_masks_agree(seed):
 
 
 # ---------------------------------------------------------------------------
+# candidate-compressed vs dense: bit-identical traces (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def topk_policy_pairs(case):
+    """(candidate-compressed policy, dense-only twin, stacked?) per family.
+
+    The stacked pair runs a K=3 store with rows on member 1, so the
+    constraint-axis gather of the stacked topk kernel is exercised against
+    live decoys on both sides.
+    """
+    sids, V, L, d = case["sids"], case["V"], case["L"], case["dense_d"]
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=d)
+    decoy = np.unique(
+        np.random.default_rng(case["seed"] + 7).integers(
+            0, V, size=(30, L)).astype(np.int64), axis=0)
+    store = ConstraintStore.from_matrices(
+        [TransitionMatrix.from_sids(decoy, V, dense_d=d), tm,
+         TransitionMatrix.from_sids(decoy, V, dense_d=d)],
+        headroom=0.2,
+    )
+    return {
+        "static": (DecodePolicy.static(tm),
+                   DecodePolicy.static(tm, topk=False), False),
+        "static_pallas": (DecodePolicy.static(tm, impl="pallas"),
+                          DecodePolicy.static(tm, impl="pallas", topk=False),
+                          False),
+        "static_fused": (DecodePolicy.static(tm, fused=True),
+                         DecodePolicy.static(tm, fused=True, topk=False),
+                         False),
+        "stacked_k3": (DecodePolicy.stacked(store),
+                       DecodePolicy.stacked(store, topk=False), True),
+    }
+
+
+def run_traced_beam(case, policy, stacked, table=None, batch=3, beams=6):
+    tbl = case["table"] if table is None else table
+    L = tbl.shape[0]
+
+    def logits_fn(carry, last, step):
+        return tbl[step][last], carry
+
+    cids = jnp.ones((batch,), jnp.int32) if stacked else None
+    _, _, trace = beam_search(logits_fn, None, batch, beams, L, policy,
+                              constraint_ids=cids, return_trace=True)
+    return (np.asarray(trace.tokens), np.asarray(trace.scores),
+            np.asarray(trace.nodes))
+
+
+@pytest.mark.parametrize("seed", FUZZ_SEEDS)
+@pytest.mark.parametrize("tie_heavy", [False, True])
+def test_fuzz_candidate_path_bit_identical_to_dense(seed, tie_heavy):
+    """The §8 acceptance bar: per-STEP beam traces (tokens, scores, trie
+    states) of the candidate-compressed search equal the dense search's,
+    bit for bit — including under heavily tied logits, where only an exact
+    reproduction of the dense flat-index tie-break can match."""
+    case = make_case(seed)
+    if tie_heavy:
+        # integer-quantized logits: massive score ties at every level
+        rng = np.random.default_rng(seed + 99)
+        case["table"] = jnp.asarray(
+            rng.integers(-2, 3, size=case["table"].shape).astype(np.float32))
+    for name, (topk_pol, dense_pol, stacked) in topk_policy_pairs(case).items():
+        tt, ts, tn = run_traced_beam(case, topk_pol, stacked)
+        dt, ds, dn = run_traced_beam(case, dense_pol, stacked)
+        np.testing.assert_array_equal(
+            tt, dt, err_msg=f"seed={seed} {name}: tokens diverged")
+        np.testing.assert_array_equal(
+            tn, dn, err_msg=f"seed={seed} {name}: trie states diverged")
+        if name in ("static", "stacked_k3"):
+            # shared XLA log-softmax: scores must be bit-identical
+            np.testing.assert_array_equal(
+                ts, ds, err_msg=f"seed={seed} {name}: scores diverged")
+        else:
+            # kernel-side log-softmax may differ in the last ulp
+            np.testing.assert_allclose(
+                ts, ds, rtol=1e-6, atol=1e-6, err_msg=f"seed={seed} {name}")
+
+
+@pytest.mark.parametrize("regime", ["bmax_lt_m", "bmax_gt_m"])
+def test_candidate_path_branch_factor_regimes(regime):
+    """bmax < M: candidate lists are mostly NEG_INF missing-token filler
+    (rows cannot fill the top-M alone); bmax > M: genuine compression, the
+    selection must drop low-rank valid children.  Both bit-identical."""
+    rng = np.random.default_rng(42)
+    V, L = 40, 4
+    if regime == "bmax_lt_m":
+        # near-chain corpus: few children per node, beams outnumber them
+        heads = rng.integers(0, V, size=(3, 2))
+        sids = np.concatenate(
+            [heads[rng.integers(0, 3, size=12)],
+             rng.integers(0, 3, size=(12, L - 2))], axis=1)
+        beams = 10
+    else:
+        # wide fan-out at the root, tiny beam count
+        sids = rng.integers(0, V, size=(300, L))
+        beams = 3
+    sids = np.unique(sids.astype(np.int64), axis=0)
+    case = dict(seed=0, V=V, L=L, dense_d=1, sids=sids,
+                table=jnp.asarray(
+                    rng.normal(size=(L, V, V)).astype(np.float32)))
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    M = beams
+    bmaxes = [tm.bmax_for_step(s) for s in range(1, L)]
+    if regime == "bmax_lt_m":
+        assert max(bmaxes) < M, (bmaxes, M)
+    else:
+        assert tm.bmax_for_step(0) > M or max(bmaxes) >= M
+    for name, (topk_pol, dense_pol, stacked) in topk_policy_pairs(case).items():
+        tt, ts, tn = run_traced_beam(case, topk_pol, stacked, beams=beams)
+        dt, ds, dn = run_traced_beam(case, dense_pol, stacked, beams=beams)
+        np.testing.assert_array_equal(tt, dt, err_msg=f"{regime} {name}")
+        np.testing.assert_array_equal(tn, dn, err_msg=f"{regime} {name}")
+        np.testing.assert_allclose(ts, ds, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"{regime} {name}")
+
+
+# ---------------------------------------------------------------------------
 # SPMD differential: mesh decoding bit-identical to single device
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("seed", FUZZ_SEEDS[:4])
@@ -265,6 +381,40 @@ def test_fuzz_spmd_bit_identical_to_single_device(seed, rows):
     want_t, want_s = single(policy)
     tokens, scores = spmd_beam_search(
         mesh, logits_fn, B, 5, case["L"], policy, rows=rows)
+    np.testing.assert_array_equal(
+        np.asarray(tokens), np.asarray(want_t), err_msg=f"seed={seed}")
+    np.testing.assert_array_equal(
+        np.asarray(scores), np.asarray(want_s), err_msg=f"seed={seed}")
+
+
+@pytest.mark.parametrize("seed", FUZZ_SEEDS[:3])
+def test_fuzz_spmd_candidate_bit_identical_to_dense(seed):
+    """SPMD candidate-compressed decoding == single-device DENSE decoding,
+    bit for bit: the (B, M*C) candidate reduce is dp-local (each shard ranks
+    only its own rows, DESIGN.md §6/§8), so neither the mesh split nor the
+    compression may shift a single token or score."""
+    case = make_case(seed)
+    n = len(jax.devices())
+    mesh = make_subset_mesh(n, 1)
+    B = 2 * dp_size(mesh)
+    table = case["table"]
+
+    def logits_fn(carry, last, step):
+        return table[step][last], carry
+
+    tm = TransitionMatrix.from_sids(
+        case["sids"], case["V"], dense_d=case["dense_d"])
+    topk_policy = DecodePolicy.static(tm)
+    assert topk_policy.supports_topk_at(case["L"] - 1) or case["dense_d"] >= case["L"]
+
+    @jax.jit
+    def single_dense(pol):
+        state, _ = beam_search(logits_fn, None, B, 5, case["L"], pol)
+        return state.tokens, state.scores
+
+    want_t, want_s = single_dense(DecodePolicy.static(tm, topk=False))
+    tokens, scores = spmd_beam_search(
+        mesh, logits_fn, B, 5, case["L"], topk_policy)
     np.testing.assert_array_equal(
         np.asarray(tokens), np.asarray(want_t), err_msg=f"seed={seed}")
     np.testing.assert_array_equal(

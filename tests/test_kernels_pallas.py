@@ -5,10 +5,15 @@ import numpy as np
 import pytest
 
 from repro.core import TransitionMatrix
-from repro.core.vntk import NEG_INF
+from repro.core.vntk import NEG_INF, candidate_width
 from repro.kernels import ops, ref
 from repro.kernels.embedding_bag import embedding_bag_pallas
-from repro.kernels.vntk import vntk_fused_logsoftmax_pallas, vntk_pallas
+from repro.kernels.vntk import (
+    vntk_fused_logsoftmax_pallas,
+    vntk_pallas,
+    vntk_stacked_topk_pallas,
+    vntk_topk_pallas,
+)
 from conftest import make_sids
 
 
@@ -112,6 +117,135 @@ def test_fused_logsoftmax_kernel(rng, vocab):
     np.testing.assert_allclose(
         np.asarray(got_lp), np.asarray(want_lp), rtol=1e-5, atol=1e-5
     )
+    np.testing.assert_array_equal(np.asarray(got_nx), np.asarray(want_nx))
+
+
+# ---------------------------------------------------------------------------
+# candidate-compressed kernels (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("vocab", [128, 512])
+@pytest.mark.parametrize("nb", [1, 7, 16])  # 7: prime => beam-pad path
+@pytest.mark.parametrize("bmax", [1, 8, 33])  # spans bmax < M and > M
+def test_vntk_topk_kernel_matches_dense_rank(rng, vocab, nb, bmax):
+    """Kernel candidates == dense-rank top-C of the kernel-free dense row,
+    tokens and tie order included (the §8 bit-exactness contract)."""
+    n_states = 40
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    lp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32)), -1)
+    width = candidate_width(10, vocab)
+    got = vntk_topk_pallas(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        width, interpret=True,
+    )
+    want = ref.vntk_topk_ref(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        width,
+    )
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    # oracle sanity vs the dense scatter path: identical rank + tie order
+    dense_lp, dense_nx = ref.vntk_ref(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab
+    )
+    dvals, didx = jax.lax.top_k(dense_lp, width)
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(dvals))
+    np.testing.assert_array_equal(np.asarray(want[1]), np.asarray(didx))
+    np.testing.assert_array_equal(
+        np.asarray(want[2]),
+        np.asarray(dense_nx)[np.arange(nb)[:, None], np.asarray(didx)],
+    )
+
+
+def test_vntk_topk_kernel_fused(rng):
+    vocab, n_states, nb, bmax = 256, 32, 9, 12
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    logits = jnp.asarray((rng.normal(size=(nb, vocab)) * 4).astype(np.float32))
+    width = candidate_width(6, vocab)
+    got = vntk_topk_pallas(
+        logits, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        width, fused_logsoftmax=True, interpret=True,
+    )
+    want = ref.vntk_topk_ref(
+        logits, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        width, fused_logsoftmax=True,
+    )
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+@pytest.mark.parametrize("nb", [6, 11])
+def test_vntk_stacked_topk_kernel(rng, nb):
+    vocab, n_states, bmax, K = 200, 24, 9, 3
+    rowptrs, edgelists = [], []
+    for _ in range(K):
+        rp, ed = _random_csr(rng, n_states, vocab, bmax)
+        rowptrs.append(rp)
+        edgelists.append(ed)
+    E = max(e.shape[0] for e in edgelists)
+    edges = np.zeros((K, E, 2), np.int32)
+    for k, e in enumerate(edgelists):
+        edges[k, : e.shape[0]] = e
+    rowptr = np.stack(rowptrs)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    cids = jnp.asarray(rng.integers(0, K, nb).astype(np.int32))
+    lp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32)), -1)
+    width = candidate_width(8, vocab)
+    got = vntk_stacked_topk_pallas(
+        lp, nodes, cids, jnp.asarray(rowptr), jnp.asarray(edges), bmax,
+        vocab, width, interpret=True,
+    )
+    want = ref.vntk_stacked_topk_ref(
+        lp, nodes, cids, jnp.asarray(rowptr), jnp.asarray(edges), bmax,
+        vocab, width,
+    )
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+def test_vntk_topk_ops_dispatch(rng):
+    vocab, n_states, nb, bmax = 256, 32, 8, 12
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    lp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32)), -1)
+    width = candidate_width(6, vocab)
+    a = ops.vntk_topk(lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges),
+                      bmax, vocab, width, impl="xla")
+    b = ops.vntk_topk(lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges),
+                      bmax, vocab, width, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[2]))
+
+
+def test_beam_tile_padding_prime_rows(rng):
+    """Regression for the tile-degradation fix: a prime row count (13) used
+    to fall back to beam_tile=1; it now pads to a tile multiple and slices.
+    The grid must shrink accordingly and results stay exact."""
+    vocab, n_states, nb, bmax = 128, 24, 13, 8
+    rowptr, edges = _random_csr(rng, n_states, vocab, bmax)
+    nodes = jnp.asarray(rng.integers(0, n_states, nb).astype(np.int32))
+    lp = jnp.asarray(rng.normal(size=(nb, vocab)).astype(np.float32))
+    got_lp, got_nx = vntk_pallas(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab,
+        interpret=True,
+    )
+    want_lp, want_nx = ref.vntk_ref(
+        lp, nodes, jnp.asarray(rowptr), jnp.asarray(edges), bmax, vocab
+    )
+    assert got_lp.shape == (nb, vocab)  # padding sliced away
+    np.testing.assert_allclose(np.asarray(got_lp), np.asarray(want_lp),
+                               rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(got_nx), np.asarray(want_nx))
 
 
