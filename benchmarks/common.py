@@ -1,12 +1,9 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
-import time
+from repro.observability import StepStats, StepTimer
 
-import jax
-import numpy as np
-
-__all__ = ["time_fn", "emit", "jit_masker"]
+__all__ = ["time_fn", "time_stats", "emit", "jit_masker"]
 
 
 def jit_masker(baseline, step: int):
@@ -30,16 +27,29 @@ def jit_masker(baseline, step: int):
     return lambda lp, pf: jf(lp, pf, arrays)
 
 
+def time_stats(fn, *args, trials: int = 30, warmup: int = 3,
+               name: str = "bench") -> StepStats:
+    """Full timing distribution of a jitted call (DESIGN.md §9).
+
+    Delegates to :class:`~repro.observability.StepTimer`: every trial blocks
+    on **all** output leaves (blocking on one leaf of a multi-output step
+    under-measures), warmup absorbs compilation, and compile events during
+    the timed trials are surfaced in ``stats.steady_compiles`` — a nonzero
+    value means the call retraces per invocation and the numbers are
+    meaningless.
+    """
+    return StepTimer(name, warmup=warmup, trials=trials).measure(fn, *args)
+
+
 def time_fn(fn, *args, trials: int = 30, warmup: int = 3) -> tuple[float, float]:
-    """Median and std of wall-time (seconds) with block_until_ready."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(trials):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times)), float(np.std(times))
+    """Median and std of wall-time (seconds) with block_until_ready.
+
+    Thin compatibility wrapper over :func:`time_stats` — callers that want
+    tail latency (p90/p99) or dispatch-vs-wall split should use
+    ``time_stats`` directly.
+    """
+    s = time_stats(fn, *args, trials=trials, warmup=warmup)
+    return s.median, s.std
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

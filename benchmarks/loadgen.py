@@ -1,0 +1,329 @@
+"""Open-loop Poisson load generator: p50/p99 latency vs offered QPS.
+
+Closed-loop benchmarks (submit a batch, wait, repeat) hide queueing delay —
+the latency a production client actually sees under load.  This harness
+drives both serving engines **open-loop**: a producer thread submits
+requests on a Poisson arrival schedule (exponential inter-arrivals, seeded)
+regardless of whether the engine keeps up, while the main thread drains the
+``RequestQueue`` through ``engine.serve``.  Per-request latency comes from
+the engines' own telemetry (the ``latency_s`` field each result carries,
+measured enqueue→complete), so the numbers are exactly what the
+``serving_request_latency_seconds`` histogram records in production.
+
+Per offered-QPS point it reports p50/p90/p99 latency, achieved throughput,
+and goodput (achieved/offered, capped at 1); the **saturation knee** is the
+highest offered rate the engine still absorbs (goodput >= 0.9).  The sweep
+is sized from a measured calibration batch, so smoke mode lands points on
+both sides of the knee on any machine.
+
+Two more DESIGN.md §9 gates ride along:
+
+  * **instrumentation overhead** — the table1 static-topk step is timed
+    bare and then with the full per-call telemetry wrap (annotate +
+    histogram observe); the instrumented median must stay within 2%
+    (plus a 25µs absolute floor — CI CPU timer jitter exceeds a relative
+    bound at sub-millisecond step times);
+  * **zero-recompile serving** — a registry hot-swap is injected mid-run
+    with metrics enabled, and ``serving_recompiles_total{expected="false"}``
+    must read 0 for both engines.
+
+    PYTHONPATH=src python -m benchmarks.loadgen --smoke \
+        --out BENCH_serving_slo.json --metrics-out metrics_snapshot.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.constraints import (
+    ConstraintRegistry,
+    category_allowlist,
+    freshness_window,
+    synthetic_catalog,
+)
+from repro.core import TransitionMatrix
+from repro.decoding import DecodePolicy
+from repro.launch.mesh import make_subset_mesh
+from repro.models import transformer
+from repro.observability import MetricsRegistry, annotate
+from repro.pipelines import gr_model_config
+from repro.serving.engine import RequestQueue, ServingEngine
+from repro.serving.generative_retrieval import GenerativeRetriever
+from repro.serving.spmd_engine import SpmdRetriever, SpmdServingEngine
+
+
+# ---------------------------------------------------------------------------
+# workload construction
+# ---------------------------------------------------------------------------
+def build_workload(smoke: bool, rng: np.random.Generator):
+    """Tiny multi-tenant retrieval stack shared by both engines."""
+    vocab, L, beam = (64, 3, 4) if smoke else (256, 4, 8)
+    n_items = 600 if smoke else 20_000
+    cfg = gr_model_config(vocab)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    catalog = synthetic_catalog(rng, n_items, vocab, L)
+    registry = ConstraintRegistry(vocab, headroom=0.5)
+    registry.register("fresh", freshness_window(60.0))
+    registry.register("cats", category_allowlist(0, 1, 2, 3))
+    store = registry.build(catalog)
+    policy = DecodePolicy.stacked(store)
+    return dict(vocab=vocab, L=L, beam=beam, cfg=cfg, params=params,
+                catalog=catalog, registry=registry, policy=policy,
+                n_slots=len(registry.names))
+
+
+def make_engines(w, smoke: bool):
+    batch = 4 if smoke else 8
+    eng = ServingEngine(
+        w["params"], w["cfg"], batch_size=batch, max_len=16,
+        retriever=GenerativeRetriever(
+            w["params"], w["cfg"], w["policy"], w["L"], w["vocab"],
+            beam_size=w["beam"],
+        ),
+        registry=w["registry"],
+    )
+    mesh = make_subset_mesh(data=1)
+    spmd = SpmdServingEngine(
+        SpmdRetriever(
+            w["params"], w["cfg"], w["policy"], w["L"], w["vocab"],
+            beam_size=w["beam"], mesh=mesh,
+        ),
+        registry=w["registry"], slots=batch, prompt_width=8,
+    )
+    return {"serving_engine": eng, "spmd_engine": spmd}
+
+
+# ---------------------------------------------------------------------------
+# open-loop driver
+# ---------------------------------------------------------------------------
+def run_open_loop(engine, qps: float, n_requests: int, vocab: int,
+                  n_slots: int, L: int, seed: int = 0) -> dict:
+    """One offered-QPS point: Poisson arrivals vs a draining engine."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, size=n_requests))
+    prompts = rng.integers(0, vocab, size=(n_requests, 8)).astype(np.int32)
+    cids = (np.arange(n_requests) % n_slots).astype(int)
+    queue = RequestQueue()
+    t0 = time.monotonic()
+
+    def producer():
+        for i in range(n_requests):
+            delay = t0 + arrivals[i] - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            # open loop: submit on schedule even if the engine is behind
+            queue.submit(prompts[i], n_tokens=L, constraint_id=cids[i])
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    results: dict = {}
+    while len(results) < n_requests:
+        results.update(engine.serve(queue))
+        if len(results) < n_requests:
+            time.sleep(0.0005)  # queue momentarily empty: arrivals pending
+    t_last = time.monotonic()
+    th.join()
+
+    lat = np.array([r["latency_s"] for r in results.values()])
+    wall = max(t_last - t0, 1e-9)
+    achieved = n_requests / wall
+    # goodput against the REALIZED schedule: with small n the sampled
+    # Poisson span deviates noticeably from n/qps, and an engine cannot
+    # complete faster than requests actually arrived
+    realized = n_requests / max(float(arrivals[-1]), 1e-9)
+    return dict(
+        qps_offered=float(qps),
+        qps_realized=float(realized),
+        qps_achieved=float(achieved),
+        goodput=float(min(achieved / realized, 1.0)),
+        n_requests=int(n_requests),
+        p50_ms=float(np.quantile(lat, 0.50) * 1e3),
+        p90_ms=float(np.quantile(lat, 0.90) * 1e3),
+        p99_ms=float(np.quantile(lat, 0.99) * 1e3),
+        mean_ms=float(lat.mean() * 1e3),
+    )
+
+
+def calibrate_qps(engine, vocab: int, n_slots: int, L: int,
+                  batch: int) -> float:
+    """Requests/second of one warmed full batch — the sweep anchor."""
+    rng = np.random.default_rng(1)
+
+    def one_batch():
+        q = RequestQueue()
+        for i in range(batch):
+            q.submit(rng.integers(0, vocab, (8,)), n_tokens=L,
+                     constraint_id=i % n_slots)
+        t0 = time.monotonic()
+        engine.serve(q)
+        return time.monotonic() - t0
+
+    one_batch()  # compile + warm
+    dt = min(one_batch() for _ in range(3))
+    return batch / max(dt, 1e-9)
+
+
+def sweep(engine, name: str, w, *, smoke: bool, n_requests: int,
+          qps_points=None) -> dict:
+    batch = getattr(engine, "batch_size", None) or engine.slots
+    cap = calibrate_qps(engine, w["vocab"], w["n_slots"], w["L"], batch)
+    if qps_points is None:
+        # calibration is a best-case full-batch rate; open-loop per-request
+        # overhead means the knee sits well under 1.0x, so the low point
+        # must be far enough down to actually be absorbed
+        fracs = (0.1, 1.5) if smoke else (0.1, 0.25, 0.5, 1.0, 1.5, 2.0)
+        qps_points = [max(cap * f, 1.0) for f in fracs]
+    points = []
+    for i, qps in enumerate(qps_points):
+        pt = run_open_loop(engine, qps, n_requests, w["vocab"],
+                           w["n_slots"], w["L"], seed=i)
+        points.append(pt)
+        print(f"  {name}: offered {pt['qps_offered']:.1f} req/s -> "
+              f"achieved {pt['qps_achieved']:.1f}, p50 {pt['p50_ms']:.1f} ms, "
+              f"p99 {pt['p99_ms']:.1f} ms, goodput {pt['goodput']:.2f}")
+    absorbed = [p["qps_offered"] for p in points if p["goodput"] >= 0.9]
+    return dict(
+        calibrated_capacity_qps=float(cap),
+        points=points,
+        knee_qps=float(max(absorbed)) if absorbed else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# instrumentation-overhead gate (the table1 static-topk step)
+# ---------------------------------------------------------------------------
+def overhead_gate(smoke: bool, trials: int = 300) -> dict:
+    """Bare vs telemetry-wrapped timings of one jitted static-topk step.
+
+    The wrap is exactly what the serving engines add per compiled call: one
+    ``annotate`` context plus one labeled histogram ``observe``.  Gate:
+    ``instrumented <= bare * 1.02 + 25e-6`` — the absolute floor keeps the
+    2% rule meaningful at sub-millisecond step times, where CI CPU timer
+    jitter alone exceeds 2%.
+    """
+    rng = np.random.default_rng(0)
+    vocab, L, beams = (256, 4, 16) if smoke else (2048, 8, 64)
+    sids = rng.integers(0, vocab, size=(2_000 if smoke else 100_000, L))
+    tm = TransitionMatrix.from_sids(sids, vocab, dense_d=2)
+    policy = DecodePolicy.static(tm)
+    step = L - 1  # sparse level: the candidate-compressed entry point
+    C = policy.candidate_width(beams, step)
+    logits = jnp.asarray(rng.normal(size=(beams, 1, vocab)).astype(np.float32))
+    nodes = jnp.ones((beams, 1), jnp.int32)
+    f = jax.jit(lambda lg, nd, pol: pol.step_topk(lg, nd, step, C))
+    for _ in range(5):
+        jax.block_until_ready(f(logits, nodes, policy))
+
+    def timed_loop(wrap):
+        out = np.empty(trials)
+        for i in range(trials):
+            t0 = time.perf_counter()
+            wrap(i)
+            out[i] = time.perf_counter() - t0
+        return out
+
+    bare = timed_loop(lambda i: jax.block_until_ready(f(logits, nodes, policy)))
+    reg = MetricsRegistry()
+    hist = reg.histogram("step_wall_seconds", "gate probe")
+
+    def instrumented(i):
+        t0 = time.perf_counter()
+        with annotate("static_topk"):
+            out = f(logits, nodes, policy)
+        jax.block_until_ready(out)
+        hist.observe(time.perf_counter() - t0, step="static_topk")
+
+    inst = timed_loop(instrumented)
+    b, x = float(np.median(bare)), float(np.median(inst))
+    return dict(
+        bare_median_s=b,
+        instrumented_median_s=x,
+        overhead_frac=float(x / b - 1.0),
+        budget_s=float(b * 1.02 + 25e-6),
+        passed=bool(x <= b * 1.02 + 25e-6),
+        trials=int(trials),
+    )
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: tiny model, 2 QPS points per engine")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per QPS point (default 24 smoke / 96)")
+    ap.add_argument("--qps", type=float, nargs="*", default=None,
+                    help="explicit offered-QPS points (skips calibration)")
+    ap.add_argument("--out", default="BENCH_serving_slo.json")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append both engines' MetricsRegistry snapshots "
+                         "to PATH as JSON lines")
+    args = ap.parse_args()
+    n_requests = args.requests or (24 if args.smoke else 96)
+
+    rng = np.random.default_rng(0)
+    w = build_workload(args.smoke, rng)
+    engines = make_engines(w, args.smoke)
+
+    report = {"smoke": bool(args.smoke), "engines": {}}
+    for name, engine in engines.items():
+        print(f"[loadgen] sweeping {name} "
+              f"(batch={getattr(engine, 'batch_size', None) or engine.slots})")
+        report["engines"][name] = sweep(
+            engine, name, w, smoke=args.smoke, n_requests=n_requests,
+            qps_points=args.qps,
+        )
+        # hot-swap injection: refresh the registry from a churned catalog
+        # and serve one more batch — with metrics on, the recompile monitor
+        # must stay silent (the zero-recompile invariant, DESIGN.md §9)
+        churned = synthetic_catalog(rng, w["catalog"].sids.shape[0],
+                                    w["vocab"], w["L"])
+        w["registry"].swap(churned)
+        q = RequestQueue()
+        for i in range(4):
+            q.submit(rng.integers(0, w["vocab"], (8,)), n_tokens=w["L"],
+                     constraint_id=i % w["n_slots"])
+        engine.serve(q)
+        unexpected = engine.metrics.counter(
+            "serving_recompiles_total").value(expected="false")
+        report["engines"][name]["unexpected_recompiles"] = int(unexpected)
+        report["engines"][name]["hot_swaps"] = int(engine.metrics.counter(
+            "serving_hot_swaps_total").total())
+
+    report["overhead_gate"] = overhead_gate(args.smoke)
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"[loadgen] wrote {args.out}")
+    if args.metrics_out:
+        for name, engine in engines.items():
+            engine.metrics.write_snapshot(args.metrics_out)
+        print(f"[loadgen] metrics snapshots appended to {args.metrics_out}")
+
+    failures = []
+    for name, r in report["engines"].items():
+        if r["unexpected_recompiles"]:
+            failures.append(f"{name}: {r['unexpected_recompiles']} "
+                            "unexpected recompile(s) across hot swaps")
+        if len(r["points"]) < 2:
+            failures.append(f"{name}: fewer than 2 QPS points")
+    if not report["overhead_gate"]["passed"]:
+        g = report["overhead_gate"]
+        failures.append(
+            "instrumentation overhead gate: "
+            f"{g['instrumented_median_s']*1e6:.1f}us > budget "
+            f"{g['budget_s']*1e6:.1f}us (bare {g['bare_median_s']*1e6:.1f}us)"
+        )
+    if failures:
+        raise SystemExit("[loadgen] FAILED: " + "; ".join(failures))
+    print("[loadgen] all gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,7 +43,9 @@ dtypes with memcmp).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
+import time
 from concurrent.futures import Future
 from typing import Optional
 
@@ -54,8 +56,11 @@ from repro.core.trie import (
     check_index_capacity,
     sorted_unique_sids,
 )
+from repro.observability import MetricsRegistry
 
 __all__ = ["TrieSource", "AsyncRefresher", "row_keys"]
+
+logger = logging.getLogger("repro.constraints.refresh")
 
 
 # ---------------------------------------------------------------------------
@@ -468,6 +473,7 @@ class _Op:
     kind: str  # "snapshot" | "delta"
     payload: object
     futures: list
+    t_submit: float = 0.0  # time.monotonic() at enqueue (queue-wait metric)
 
 
 class AsyncRefresher:
@@ -496,7 +502,8 @@ class AsyncRefresher:
     """
 
     def __init__(self, registry, *, coalesce: bool = True,
-                 max_pending: int = 4):
+                 max_pending: int = 4,
+                 metrics: Optional[MetricsRegistry] = None):
         if max_pending < 1:
             raise ValueError("max_pending must be >= 1")
         self._registry = registry
@@ -510,6 +517,27 @@ class AsyncRefresher:
         self.applied = 0  # ops that installed a version
         self.failed = 0  # ops whose build raised
         self.last_error: Optional[BaseException] = None
+        # telemetry: default to the registry's MetricsRegistry so refresher
+        # and registry metrics land in one scrape/snapshot; the legacy int
+        # attributes above stay authoritative for existing callers
+        if metrics is None:
+            metrics = getattr(registry, "metrics", None)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_ops = self.metrics.counter(
+            "refresh_ops_total",
+            "async refresh ops, by kind and outcome "
+            "(applied/failed/coalesced)")
+        self._m_apply_s = self.metrics.histogram(
+            "refresh_apply_seconds",
+            "worker-side wall time of one refresh op (build + flip), by kind")
+        self._m_queue_s = self.metrics.histogram(
+            "refresh_queue_seconds",
+            "submit→worker-pickup wait of applied/failed ops")
+        self._m_depth = self.metrics.gauge(
+            "refresh_queue_depth", "ops waiting in the refresher queue")
+        self._m_backpressure = self.metrics.counter(
+            "refresh_backpressure_waits_total",
+            "submitter blocks because the queue was full (coalesce off)")
         self._thread = threading.Thread(
             target=self._worker, daemon=True, name="constraint-refresh"
         )
@@ -529,12 +557,16 @@ class AsyncRefresher:
         with self._cond:
             if self._closed:
                 raise RuntimeError("AsyncRefresher is closed")
+            now = time.monotonic()
             while True:
                 if self._coalesce and kind == "snapshot":
                     # authoritative full state: subsume everything queued
                     carried = [f for op in self._queue for f in op.futures]
-                    self.coalesced += len(self._queue)
-                    self._queue = [_Op(kind, payload, carried + [fut])]
+                    n = len(self._queue)
+                    self.coalesced += n
+                    if n:
+                        self._m_ops.inc(n, kind=kind, outcome="coalesced")
+                    self._queue = [_Op(kind, payload, carried + [fut], now)]
                     break
                 if (self._coalesce and kind == "delta" and self._queue
                         and self._queue[-1].kind == "delta"):
@@ -542,13 +574,16 @@ class AsyncRefresher:
                     last.payload = last.payload.compose(payload)
                     last.futures.append(fut)
                     self.coalesced += 1
+                    self._m_ops.inc(kind=kind, outcome="coalesced")
                     break
                 if len(self._queue) < self._max_pending:
-                    self._queue.append(_Op(kind, payload, [fut]))
+                    self._queue.append(_Op(kind, payload, [fut], now))
                     break
+                self._m_backpressure.inc(kind=kind)
                 self._cond.wait()  # backpressure: queue full, can't coalesce
                 if self._closed:
                     raise RuntimeError("AsyncRefresher is closed")
+            self._m_depth.set(len(self._queue))
             self._cond.notify_all()
         return fut
 
@@ -583,11 +618,14 @@ class AsyncRefresher:
                     return
                 op = self._queue.pop(0)
                 self._busy = True
+                self._m_depth.set(len(self._queue))
                 self._cond.notify_all()  # wake backpressure waiters
             # Transition futures to RUNNING; a future the caller already
             # cancelled is dropped here — setting a result on it would
             # raise InvalidStateError and kill the worker thread.
             live = [f for f in op.futures if f.set_running_or_notify_cancel()]
+            t0 = time.monotonic()
+            self._m_queue_s.observe(max(t0 - op.t_submit, 0.0), kind=op.kind)
             try:
                 if op.kind == "snapshot":
                     version = self._registry.swap(op.payload)
@@ -596,10 +634,19 @@ class AsyncRefresher:
             except BaseException as e:  # propagate, never kill serving
                 self.failed += 1
                 self.last_error = e
+                self._m_ops.inc(kind=op.kind, outcome="failed")
+                logger.error(
+                    "refresh %s failed (serving continues on the previous "
+                    "store): %s", op.kind, e, exc_info=e,
+                )
                 for f in live:
                     f.set_exception(e)
             else:
                 self.applied += 1
+                self._m_ops.inc(kind=op.kind, outcome="applied")
+                self._m_apply_s.observe(time.monotonic() - t0, kind=op.kind)
+                logger.debug("refresh %s applied: version %s", op.kind,
+                             version)
                 for f in live:
                     f.set_result(version)
             finally:

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -57,6 +58,7 @@ import numpy as np
 from repro.constraints.refresh import TrieSource, row_keys
 from repro.constraints.store import ConstraintStore, EnvelopeOverflow
 from repro.core.transition_matrix import TransitionMatrix
+from repro.observability import MetricsRegistry
 
 __all__ = [
     "ItemCatalog",
@@ -225,7 +227,8 @@ class ConstraintRegistry:
     """Slot-addressed predicate registry over a double-buffered store."""
 
     def __init__(self, vocab_size: int, *, dense_d: int = 2,
-                 headroom: float = 0.5):
+                 headroom: float = 0.5,
+                 metrics: Optional[MetricsRegistry] = None):
         self.vocab_size = vocab_size
         self.dense_d = dense_d
         self.headroom = headroom
@@ -239,6 +242,53 @@ class ConstraintRegistry:
         self._refresh_lock = threading.Lock()
         self._sources: list[TrieSource] = []
         self._mats: list[TransitionMatrix] = []
+        # telemetry (DESIGN.md §9) — all host-side, recorded on the refresh
+        # path only (never consulted by readers / serving engines)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_refresh_s = self.metrics.histogram(
+            "constraint_refresh_seconds",
+            "wall time of one registry refresh, by kind")
+        self._m_swaps = self.metrics.counter(
+            "constraint_swaps_total",
+            "front-buffer flips, by kind and hot/cold")
+        self._m_version = self.metrics.gauge(
+            "constraint_store_version", "front-buffer version")
+        self._m_generation = self.metrics.gauge(
+            "constraint_envelope_generation",
+            "capacity-envelope generation (bumps on cold swaps)")
+        self._m_states_frac = self.metrics.gauge(
+            "constraint_envelope_states_used_frac",
+            "largest member n_states over the envelope capacity — headroom "
+            "left before the next swap goes cold")
+        self._m_edges_frac = self.metrics.gauge(
+            "constraint_envelope_edges_used_frac",
+            "largest member n_edges over the envelope edge capacity")
+        self._m_store_bytes = self.metrics.gauge(
+            "constraint_store_bytes", "device bytes of the front store")
+        self._m_slot_sids = self.metrics.gauge(
+            "constraint_slot_sids", "live SIDs per predicate slot")
+        self._m_slot_util = self.metrics.gauge(
+            "constraint_slot_utilization_frac",
+            "measured slab bytes over the Appendix-B u_max bound, per slot")
+
+    def _record_store(self, store: ConstraintStore, version: int,
+                      names: list[str]) -> None:
+        """Publish envelope-headroom + slab-utilization gauges (refresh path)."""
+        from repro.core.memory_model import measure  # lazy: import cycle risk
+
+        self._m_version.set(version)
+        self._m_generation.set(self._envelope_generation)
+        self._m_store_bytes.set(store.nbytes())
+        ms = np.asarray(store.member_n_states)
+        me = np.asarray(store.member_n_edges)
+        self._m_states_frac.set(float(ms.max()) / max(store.n_states, 1))
+        self._m_edges_frac.set(float(me.max()) / max(store.n_edges, 1))
+        for i, name in enumerate(names):
+            if i < len(self._sources):
+                self._m_slot_sids.set(self._sources[i].n_sids, slot=name)
+            if i < len(self._mats):
+                self._m_slot_util.set(
+                    measure(self._mats[i])["utilization"], slot=name)
 
     # ------------------------------------------------------------------
     def register(self, name: str, predicate: Predicate) -> int:
@@ -331,6 +381,7 @@ class ConstraintRegistry:
                 if self._front is not None:
                     raise RuntimeError("already built; use swap() to refresh")
                 names = list(self._names)
+            t0 = time.monotonic()
             sources, mats = self._build_slots(catalog, names)
             store = ConstraintStore.from_matrices(mats, headroom=self.headroom)
             with self._lock:
@@ -338,6 +389,9 @@ class ConstraintRegistry:
                 self._version = 1
                 self._envelope_generation = 1
             self._sources, self._mats = sources, mats
+            self._m_refresh_s.observe(time.monotonic() - t0, kind="build")
+            self._m_swaps.inc(kind="build", cold="true")
+            self._record_store(store, 1, names)
             return store
 
     def swap(self, catalog: ItemCatalog, *,
@@ -357,10 +411,15 @@ class ConstraintRegistry:
                     raise RuntimeError("swap() before build()")
                 front = self._front
                 names = list(self._names)
+            t0 = time.monotonic()
             sources, mats = self._build_slots(catalog, names)
             back, cold = self._fit_or_regrow(front, mats, on_overflow)
             version = self._flip(back, cold)
             self._sources, self._mats = sources, mats
+            self._m_refresh_s.observe(time.monotonic() - t0, kind="snapshot")
+            self._m_swaps.inc(kind="snapshot",
+                              cold="true" if cold else "false")
+            self._record_store(back, version, names)
             return version
 
     def swap_delta(self, delta: CatalogDelta, *,
@@ -385,8 +444,10 @@ class ConstraintRegistry:
                 front = self._front
                 names = list(self._names)
             if delta.is_empty:
+                self._m_swaps.inc(kind="delta", cold="noop")
                 with self._lock:
                     return self._version
+            t0 = time.monotonic()
             added = delta.added
             # STAGE every slot against the original sources (stage_delta
             # never mutates retained state), validate the whole batch
@@ -407,6 +468,7 @@ class ConstraintRegistry:
                     staged[i] = st
                     mats.append(TransitionMatrix.from_flat_trie(st[0]))
             if not changed:
+                self._m_swaps.inc(kind="delta", cold="noop")
                 with self._lock:
                     return self._version
             back, cold = self._fit_or_regrow(front, mats, on_overflow)
@@ -415,6 +477,9 @@ class ConstraintRegistry:
                 if st is not None:
                     self._sources[i].commit(st)
             self._mats = mats
+            self._m_refresh_s.observe(time.monotonic() - t0, kind="delta")
+            self._m_swaps.inc(kind="delta", cold="true" if cold else "false")
+            self._record_store(back, version, names)
             return version
 
     def current(self) -> tuple[ConstraintStore, int]:

@@ -133,12 +133,16 @@ def beam_search(
             if step > 0
             else jnp.zeros((B, M), jnp.int32)
         )
+        # jax.named_scope markers are trace-time metadata only: they name
+        # the HLO in profiler timelines (DESIGN.md §9) and cannot change the
+        # computation — the frozen golden traces pin this bit-for-bit.
         if step == 0 and first_logits is not None:
             logits = jnp.broadcast_to(
                 first_logits[:, None, :], (B, M, first_logits.shape[-1])
             )
         else:
-            logits, carry = logits_fn(carry, last, step)  # (B, M, V)
+            with jax.named_scope(f"decode_logits_L{step}"):
+                logits, carry = logits_fn(carry, last, step)  # (B, M, V)
         V = logits.shape[-1]
         batch_ix = jnp.arange(B)[:, None]
         if policy.supports_topk_at(step):
@@ -148,32 +152,39 @@ def beam_search(
             # guarantees no dense winner is dropped, and the lists carry the
             # dense tie-break order, so results are bit-identical.
             C = policy.candidate_width(M, step)
-            c_lp, c_tok, c_next = policy.step_topk(
-                logits, state.nodes, step, C, constraint_ids=cids_bm,
-            )
-            total = state.scores[:, :, None] + c_lp  # (B, M, C)
-            top_scores, top_idx = jax.lax.top_k(total.reshape(B, M * C), M)
-            beam_idx = top_idx // C
-            token = jnp.take_along_axis(
-                c_tok.reshape(B, M * C), top_idx, axis=1
-            ).astype(jnp.int32)
-            new_nodes = jnp.take_along_axis(
-                c_next.reshape(B, M * C), top_idx, axis=1
-            )
+            with jax.named_scope(f"constraint_topk_L{step}"):
+                c_lp, c_tok, c_next = policy.step_topk(
+                    logits, state.nodes, step, C, constraint_ids=cids_bm,
+                )
+            with jax.named_scope(f"beam_advance_L{step}"):
+                total = state.scores[:, :, None] + c_lp  # (B, M, C)
+                top_scores, top_idx = jax.lax.top_k(
+                    total.reshape(B, M * C), M
+                )
+                beam_idx = top_idx // C
+                token = jnp.take_along_axis(
+                    c_tok.reshape(B, M * C), top_idx, axis=1
+                ).astype(jnp.int32)
+                new_nodes = jnp.take_along_axis(
+                    c_next.reshape(B, M * C), top_idx, axis=1
+                )
         else:
-            lp, next_dense = policy.step(
-                logits, state.nodes, step,
-                prefix_tokens=state.tokens if policy.needs_prefix else None,
-                constraint_ids=cids_bm,
-            )
-            total = state.scores[:, :, None] + lp  # (B, M, V)
-            flat = total.reshape(B, M * V)
-            top_scores, top_idx = jax.lax.top_k(flat, M)  # (B, M)
-            beam_idx = top_idx // V
-            token = (top_idx % V).astype(jnp.int32)
-            # Phase 4: state update via gathers — one gather for every
-            # backend (vocab-aligned next states, DESIGN.md §3.1).
-            new_nodes = next_dense[batch_ix, beam_idx, token]
+            with jax.named_scope(f"constraint_mask_L{step}"):
+                lp, next_dense = policy.step(
+                    logits, state.nodes, step,
+                    prefix_tokens=(state.tokens if policy.needs_prefix
+                                   else None),
+                    constraint_ids=cids_bm,
+                )
+            with jax.named_scope(f"beam_advance_L{step}"):
+                total = state.scores[:, :, None] + lp  # (B, M, V)
+                flat = total.reshape(B, M * V)
+                top_scores, top_idx = jax.lax.top_k(flat, M)  # (B, M)
+                beam_idx = top_idx // V
+                token = (top_idx % V).astype(jnp.int32)
+                # Phase 4: state update via gathers — one gather for every
+                # backend (vocab-aligned next states, DESIGN.md §3.1).
+                new_nodes = next_dense[batch_ix, beam_idx, token]
 
         new_tokens = state.tokens[batch_ix, beam_idx]  # (B, M, L)
         new_tokens = new_tokens.at[:, :, step].set(token)
@@ -181,7 +192,8 @@ def beam_search(
         if return_trace:
             trace.append(state)
         if carry_gather_fn is not None:
-            carry = carry_gather_fn(carry, beam_idx)
+            with jax.named_scope(f"carry_gather_L{step}"):
+                carry = carry_gather_fn(carry, beam_idx)
     if return_trace:
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trace)
         return state, carry, stacked

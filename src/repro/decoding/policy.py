@@ -207,6 +207,31 @@ class DecodePolicy:
             lp, nodes, step, width, constraint_ids=cids, normalized=True
         )
 
+    def plan_info(self, beams: int = 1) -> list:
+        """Machine-readable per-level plan for telemetry (DESIGN.md §9).
+
+        One dict per decode level: the backend class masking it, whether it
+        takes the candidate-compressed sparse branch, and (on compressed
+        levels) the per-beam top-C width for ``beams``.  Pure static
+        metadata — the values cannot change across registry hot-swaps, so
+        :func:`repro.observability.record_policy` publishes them once per
+        policy install.
+        """
+        rows = []
+        for step in range(len(self.plan)):
+            b = self.backend_for(step)
+            topk = self.supports_topk_at(step)
+            rows.append(dict(
+                level=step,
+                backend=type(b).__name__.replace("Backend", "").lower(),
+                sparse=not (hasattr(b, "levels")
+                            and getattr(b, "levels", None) == "dense"),
+                topk=topk,
+                candidate_width=(self.candidate_width(beams, step)
+                                 if topk else 0),
+            ))
+        return rows
+
     def describe(self) -> str:
         """Human-readable per-level plan, e.g. for benchmark/CLI banners."""
         def label(b):

@@ -6,6 +6,7 @@
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
@@ -15,8 +16,15 @@ from repro.core import TransitionMatrix
 from repro.core.vntk import NEG_INF
 from repro.decoding import DecodePolicy
 from repro.models import transformer
+from repro.observability import (
+    MetricsRegistry,
+    StepTimer,
+    start_http_server,
+)
 from repro.pipelines import gr_model_config
 from repro.serving.generative_retrieval import GenerativeRetriever
+
+logger = logging.getLogger("repro.launch.serve")
 
 
 def main():
@@ -60,7 +68,27 @@ def main():
                     help="CSR placement under --spmd: replicate the trie "
                          "(paper §A.3) or row-shard edges along the model "
                          "axis with a one-hop gather (DESIGN.md §6)")
+    ap.add_argument("--log-level", default="INFO",
+                    choices=["DEBUG", "INFO", "WARNING", "ERROR"],
+                    help="stdlib logging level for the repro.* loggers")
+    ap.add_argument("--metrics-json", metavar="PATH", default=None,
+                    help="append a JSON-lines MetricsRegistry snapshot to "
+                         "PATH on exit (DESIGN.md §9)")
+    ap.add_argument("--metrics-port-file", metavar="PATH", default=None,
+                    help="serve Prometheus text at /metrics on an ephemeral "
+                         "localhost port and write the bound port to PATH")
     args = ap.parse_args()
+
+    logging.basicConfig(
+        level=getattr(logging, args.log_level),
+        format="%(asctime)s %(levelname)s %(name)s %(message)s",
+    )
+    metrics = MetricsRegistry()
+    if args.metrics_port_file:
+        _, port = start_http_server(metrics, port=0)
+        with open(args.metrics_port_file, "w") as f:
+            f.write(str(port))
+        logger.info("metrics: http://127.0.0.1:%d/metrics", port)
 
     rng = np.random.default_rng(0)
     cfg = gr_model_config(args.vocab)
@@ -73,35 +101,40 @@ def main():
         tm = TransitionMatrix.from_sids(sids, args.vocab, dense_d=2)
         policy = DecodePolicy.static(tm, impl=args.impl, fused=args.fused,
                                      topk=not args.no_topk)
-        print(f"constraint index: {tm.n_states} states "
-              f"({time.time()-t0:.2f}s build); policy {policy.describe()}")
+        logger.info("constraint index: %d states (%.2fs build); policy %s",
+                    tm.n_states, time.time() - t0, policy.describe())
     if args.spmd:
         from repro.launch.mesh import make_debug_mesh
         from repro.serving.spmd_engine import SpmdRetriever
 
         mesh = make_debug_mesh(model=2 if args.spmd_rows == "model" else 1)
-        print(f"SPMD mesh: {dict(mesh.shape)} over {mesh.devices.size} "
-              f"device(s), CSR rows={args.spmd_rows}")
+        logger.info("SPMD mesh: %s over %d device(s), CSR rows=%s",
+                    dict(mesh.shape), mesh.devices.size, args.spmd_rows)
         r = SpmdRetriever(params, cfg, policy, args.sid_length, args.vocab,
                           beam_size=args.beam, mesh=mesh, rows=args.spmd_rows)
     else:
         r = GenerativeRetriever(params, cfg, policy, args.sid_length,
                                 args.vocab, beam_size=args.beam)
     hist = rng.integers(0, args.vocab, (args.batch, 16)).astype(np.int32)
-    beams, scores = r.retrieve(hist)  # compile
-    t0 = time.time()
-    for _ in range(args.requests):
-        beams, scores = r.retrieve(hist)
-    dt = (time.time() - t0) / args.requests
+    # StepTimer: warmup absorbs compilation, trials block on all outputs,
+    # and every trial lands in the step_wall_seconds{step} histogram
+    timer = StepTimer("retrieve_batch", metrics, warmup=1,
+                      trials=args.requests)
+    stats = timer.measure(lambda: r.retrieve(hist))
+    beams, scores = r.retrieve(hist)
     valid = {tuple(x) for x in sids}
     compliant = all(
         tuple(beams[b, m]) in valid
         for b in range(args.batch) for m in range(args.beam)
         if scores[b, m] > NEG_INF / 2
     ) if tm is not None else "n/a"
-    print(f"{dt*1e3:.1f} ms/request-batch of {args.batch} "
-          f"(beam {args.beam}); compliance: {compliant}")
-    print("top-1 SIDs:", beams[:, 0, :].tolist())
+    logger.info(
+        "%.1f ms/request-batch of %d (beam %d, p99 %.1f ms, dispatch "
+        "%.2f ms); compliance: %s",
+        stats.median * 1e3, args.batch, args.beam, stats.p99 * 1e3,
+        stats.dispatch_median * 1e3, compliant,
+    )
+    logger.info("top-1 SIDs: %s", beams[:, 0, :].tolist())
 
     if args.num_constraint_sets > 0 and tm is not None:
         from repro.constraints import (
@@ -112,18 +145,20 @@ def main():
         catalog = synthetic_catalog(
             rng, args.constraints, args.vocab, args.sid_length
         )
-        reg = ConstraintRegistry(args.vocab, headroom=0.5)
+        reg = ConstraintRegistry(args.vocab, headroom=0.5, metrics=metrics)
         for k in range(K):
             # staggered freshness windows: slot k serves items newer than
             # (k+1)/K of the catalog age span
             reg.register(f"fresh_{k}", freshness_window(90.0 * (k + 1) / K))
         t0 = time.time()
         store = reg.build(catalog)
-        print(f"constraint store: K={K} sets, {store.n_states} state envelope "
-              f"({time.time()-t0:.2f}s build, registry v{reg.version})")
-        print(f"  stacked store {store.nbytes()/1e6:.2f} MB vs single matrix "
-              f"{tm.nbytes()/1e6:.2f} MB "
-              f"({store.nbytes()/max(tm.nbytes(),1):.1f}x for {K} tenants)")
+        logger.info(
+            "constraint store: K=%d sets, %d state envelope (%.2fs build, "
+            "registry v%d)", K, store.n_states, time.time() - t0, reg.version)
+        logger.info(
+            "  stacked store %.2f MB vs single matrix %.2f MB (%.1fx for "
+            "%d tenants)", store.nbytes() / 1e6, tm.nbytes() / 1e6,
+            store.nbytes() / max(tm.nbytes(), 1), K)
         mc_policy = DecodePolicy.stacked(store, impl=args.impl,
                                          fused=args.fused,
                                          topk=not args.no_topk)
@@ -141,8 +176,8 @@ def main():
             for b in range(args.batch) for m in range(args.beam)
             if scores_mc[b, m] > NEG_INF / 2
         )
-        print(f"  mixed-constraint batch (cids {cids.tolist()}): "
-              f"per-request compliance {ok}")
+        logger.info("  mixed-constraint batch (cids %s): per-request "
+                    "compliance %s", cids.tolist(), ok)
 
         if args.refresh_interval > 0:
             from repro.constraints import AsyncRefresher, CatalogDelta
@@ -177,9 +212,10 @@ def main():
                     cold = r_mc.set_constraints(store)  # engine batch boundary
                     cold_swaps += int(cold)
                     beams_mc, _ = r_mc.retrieve(hist, constraint_ids=cids)
-                    print(f"  refresh cycle {cycle}: +/-{churn} items -> "
-                          f"registry v{v} (cold={cold}), top-1 "
-                          f"{beams_mc[0, 0].tolist()}")
+                    logger.info(
+                        "  refresh cycle %d: +/-%d items -> registry v%s "
+                        "(cold=%s), top-1 %s", cycle, churn, v, cold,
+                        beams_mc[0, 0].tolist())
                     time.sleep(args.refresh_interval)
             # a cold (regrown-envelope) swap retraces exactly once; hot
             # swaps must compile NOTHING — enforce it, don't just print it
@@ -189,9 +225,14 @@ def main():
                     f"{cold_swaps} cold swap(s) — hot swaps must stay "
                     "zero-recompile"
                 )
-            print(f"  async refresh: {args.refresh_cycles} cycles, "
-                  f"{cold_swaps} cold swap(s), {len(compiles)} recompiles "
-                  "(hot swaps stayed zero-recompile)")
+            logger.info(
+                "  async refresh: %d cycles, %d cold swap(s), %d recompiles "
+                "(hot swaps stayed zero-recompile)", args.refresh_cycles,
+                cold_swaps, len(compiles))
+
+    if args.metrics_json:
+        metrics.write_snapshot(args.metrics_json)
+        logger.info("metrics snapshot appended to %s", args.metrics_json)
 
 
 if __name__ == "__main__":

@@ -20,10 +20,23 @@ A **cold** swap — the registry regrew the capacity envelope because a
 snapshot outgrew it (DESIGN.md §7) — changes static metadata: the engine
 installs it the same way, the jitted step re-specializes exactly once
 (counted in ``cold_swaps``), and serving drains without dropping requests.
+
+Telemetry (DESIGN.md §9): every engine owns (or is handed) a
+:class:`~repro.observability.MetricsRegistry`.  Request latency is recorded
+in three host-side histograms per tenant lane — queue wait
+(enqueue→admit), service (admit→complete) and total (enqueue→complete) —
+plus batch occupancy, per-lane queue depth, decode-step counters, and a
+**recompile monitor**: compile events observed outside an expected window
+(the engine's first batch, a cold swap) increment
+``serving_recompiles_total{expected="false"}``, turning the zero-recompile
+hot-swap guarantee into a monitored invariant.  All instrumentation runs
+around the compiled calls; device work is bit-identical with metrics on or
+off.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -33,6 +46,12 @@ import numpy as np
 
 from repro.configs.base import TransformerConfig
 from repro.models import transformer
+from repro.observability import (
+    MetricsRegistry,
+    annotate,
+    compile_events,
+    record_policy,
+)
 
 __all__ = ["ServingEngine", "RequestQueue"]
 
@@ -43,6 +62,7 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     n_tokens: int
     constraint_id: int = 0  # which registry slot masks this request's SIDs
+    t_enqueue: float = 0.0  # time.monotonic() at submit (latency accounting)
 
 
 class RequestQueue:
@@ -73,7 +93,8 @@ class RequestQueue:
         if not lane:
             self._rr.append(constraint_id)
         lane.append(
-            Request(rid, np.asarray(prompt, np.int32), n_tokens, constraint_id)
+            Request(rid, np.asarray(prompt, np.int32), n_tokens,
+                    constraint_id, t_enqueue=time.monotonic())
         )
         self._len += 1
         return rid
@@ -99,13 +120,88 @@ class RequestQueue:
             out.append(r)
         return out
 
+    def lane_depths(self) -> dict[int, int]:
+        """Current depth of every lane ever seen (emptied lanes report 0,
+        so sampled gauges fall back to zero instead of going stale)."""
+        return {cid: len(lane) for cid, lane in self._lanes.items()}
+
     def __len__(self):
         return self._len
 
 
+class _EngineMetrics:
+    """Shared instrumentation for both serving engines (host-side only)."""
+
+    def __init__(self, registry: Optional[MetricsRegistry]):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self.requests = r.counter(
+            "serving_requests_total", "requests completed, by tenant lane")
+        self.rejected = r.counter(
+            "serving_rejected_total", "requests rejected at admission")
+        self.latency = r.histogram(
+            "serving_request_latency_seconds",
+            "per-request enqueue→complete wall time")
+        self.queue_wait = r.histogram(
+            "serving_request_queue_seconds",
+            "per-request enqueue→admit wait in the RequestQueue")
+        self.service = r.histogram(
+            "serving_request_service_seconds",
+            "per-request admit→complete service time")
+        self.batch_s = r.histogram(
+            "serving_batch_seconds", "wall time of one shared decode batch")
+        self.batches = r.counter("serving_batches_total", "batches served")
+        self.steps = r.counter(
+            "serving_decode_steps_total", "constrained decode steps executed")
+        self.occupancy = r.gauge(
+            "serving_batch_occupancy",
+            "active-slot fraction of the last shared batch")
+        self.queue_depth = r.gauge(
+            "serving_queue_depth", "queued requests, by tenant lane")
+        self.cold = r.counter(
+            "serving_cold_swaps_total",
+            "envelope regrowths (expected single recompiles) routed through "
+            "this engine")
+        self.hot = r.counter(
+            "serving_hot_swaps_total",
+            "zero-recompile registry store installs")
+        self.recompiles = r.counter(
+            "serving_recompiles_total",
+            "backend compiles during serving; expected=\"false\" must stay 0 "
+            "(the hot-swap zero-recompile invariant, monitored)")
+        self.store_version = r.gauge(
+            "serving_store_version", "registry version currently installed")
+
+    def sample_queue(self, queue) -> None:
+        for cid, depth in queue.lane_depths().items():
+            self.queue_depth.set(depth, lane=str(cid))
+
+    def record_batch(self, *, n_active: int, slots: int, steps: int,
+                     dt: float, compiles: int, expected: bool) -> None:
+        self.batches.inc()
+        self.steps.inc(steps)
+        self.batch_s.observe(dt)
+        self.occupancy.set(n_active / max(slots, 1))
+        if compiles:
+            self.recompiles.inc(
+                compiles, expected="true" if expected else "false")
+
+    def record_request(self, r: Request, t_admit: float,
+                       t_done: float) -> dict:
+        lane = str(r.constraint_id)
+        wait = max(t_admit - r.t_enqueue, 0.0)
+        total = max(t_done - r.t_enqueue, 0.0)
+        self.requests.inc(lane=lane)
+        self.queue_wait.observe(wait, lane=lane)
+        self.service.observe(max(t_done - t_admit, 0.0), lane=lane)
+        self.latency.observe(total, lane=lane)
+        return {"latency_s": total, "queue_s": wait}
+
+
 class ServingEngine:
     def __init__(self, params, cfg: TransformerConfig, batch_size: int,
-                 max_len: int, *, retriever=None, registry=None):
+                 max_len: int, *, retriever=None, registry=None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.params = params
         self.cfg = cfg
         self.batch_size = batch_size
@@ -113,13 +209,31 @@ class ServingEngine:
         self.retriever = retriever  # GenerativeRetriever: SID serving mode
         self.registry = registry  # ConstraintRegistry: hot-swappable store
         self._installed_version = None
-        self.cold_swaps = 0  # envelope regrowths routed through this engine
+        self._m = _EngineMetrics(metrics)
+        self._served_batches = 0
+        if retriever is not None:
+            record_policy(self._m.registry, retriever.policy,
+                          beams=retriever.M)
         self._prefill = jax.jit(
             lambda p, t: transformer.prefill(p, t, cfg, max_len=max_len)
         )
         self._decode = jax.jit(
             lambda p, c, t: transformer.decode_step(p, c, t, cfg)
         )
+
+    @property
+    def metrics(self) -> MetricsRegistry:
+        return self._m.registry
+
+    @property
+    def cold_swaps(self) -> int:
+        """Envelope regrowths routed through this engine.
+
+        Kept as an attribute-shaped property over the
+        ``serving_cold_swaps_total`` counter so pre-telemetry callers and
+        tests keep working unchanged.
+        """
+        return int(self._m.cold.total())
 
     # -- single-batch synchronous generation --------------------------------
     def generate(self, prompts: np.ndarray, n_tokens: int,
@@ -141,6 +255,27 @@ class ServingEngine:
             out.append(tok)
         return np.asarray(jnp.concatenate(out, axis=1))
 
+    # -- registry store install (shared by both serve modes) -----------------
+    def _install_current_store(self):
+        """Adopt the registry's front buffer; returns (version, was_cold)."""
+        store, version = self.registry.current()
+        cold = False
+        if version != self._installed_version:
+            # hot-swap path: only policy pytree leaves change, so the
+            # retriever's jitted step is reused without recompiling; a cold
+            # (regrown-envelope) swap changes static metadata and
+            # re-specializes exactly once
+            cold = self.retriever.set_constraints(store)
+            if cold:
+                self._m.cold.inc()
+                record_policy(self._m.registry, self.retriever.policy,
+                              beams=self.retriever.M)
+            else:
+                self._m.hot.inc()
+            self._installed_version = version
+            self._m.store_version.set(version)
+        return version, cold
+
     # -- constrained SID retrieval over a queue -------------------------------
     def _serve_retrieval(self, queue: RequestQueue) -> dict:
         """Drain the queue through the constrained retriever in shared batches.
@@ -154,18 +289,12 @@ class ServingEngine:
         results: dict[int, dict] = {}
         S = self.max_len // 2  # fixed prompt width => static shapes
         while len(queue):
+            t_admit = time.monotonic()
             batch = queue.pop_batch(self.batch_size)
-            version = None
+            self._m.sample_queue(queue)
+            version, cold = None, False
             if self.registry is not None:
-                store, version = self.registry.current()
-                if version != self._installed_version:
-                    # hot-swap path: only policy pytree leaves change, so
-                    # the retriever's jitted step is reused without
-                    # recompiling; a cold (regrown-envelope) swap changes
-                    # static metadata and re-specializes exactly once
-                    if self.retriever.set_constraints(store):
-                        self.cold_swaps += 1
-                    self._installed_version = version
+                version, cold = self._install_current_store()
             # A plain single-matrix retriever serves every request under the
             # one set: constraint ids stay host-side and must all be 0.
             num_sets = self.retriever.num_sets
@@ -180,16 +309,28 @@ class ServingEngine:
                         f"outside [0, {limit})"
                     )
                 cids[i] = r.constraint_id
-            beams, scores = self.retriever.retrieve(
-                hist, constraint_ids=cids if num_sets is not None else None
+            c0 = compile_events()
+            with annotate("serve_batch"):
+                beams, scores = self.retriever.retrieve(
+                    hist, constraint_ids=cids if num_sets is not None else None
+                )
+            t_done = time.monotonic()
+            self._m.record_batch(
+                n_active=len(batch), slots=self.batch_size,
+                steps=self.retriever.L, dt=t_done - t_admit,
+                compiles=compile_events() - c0,
+                expected=cold or self._served_batches == 0,
             )
+            self._served_batches += 1
             for i, r in enumerate(batch):
                 results[r.rid] = {
                     "sids": beams[i],
                     "scores": scores[i],
                     "constraint_id": r.constraint_id,
                     "store_version": version,
+                    **self._m.record_request(r, t_admit, t_done),
                 }
+        self._m.sample_queue(queue)
         return results
 
     # -- continuous batching over a queue ------------------------------------
@@ -198,17 +339,19 @@ class ServingEngine:
 
         Plain-LM mode returns {rid: generated token list}; retrieval mode
         (engine built with a ``retriever``) returns {rid: {sids, scores,
-        constraint_id, store_version}}.
+        constraint_id, store_version, latency_s, queue_s}}.
         """
         if self.retriever is not None:
             return self._serve_retrieval(queue)
         results: dict[int, list] = {}
         active: list[Optional[Request]] = [None] * self.batch_size
+        admit_t: dict[int, float] = {}
         remaining = np.zeros(self.batch_size, np.int64)
         prompts = np.zeros((self.batch_size, self.max_len // 2), np.int32)
 
         def admit():
             changed = False
+            now = time.monotonic()
             for i in range(self.batch_size):
                 if active[i] is None and len(queue):
                     r = queue.pop()
@@ -217,18 +360,24 @@ class ServingEngine:
                     prompts[i, :] = 0
                     prompts[i, : r.prompt.shape[0]] = r.prompt
                     results[r.rid] = []
+                    admit_t[r.rid] = now
                     changed = True
+            self._m.sample_queue(queue)
             return changed
 
         steps = 0
         while (any(a is not None for a in active) or len(queue)) and steps < max_steps:
             admit()
+            self._m.occupancy.set(
+                sum(a is not None for a in active) / max(self.batch_size, 1)
+            )
             # (re)prefill the whole batch when composition changed — slot-
             # granular caches would avoid this; fine at example scale.
             logits, cache = self._prefill(self.params, jnp.asarray(prompts))
             tok = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True).astype(jnp.int32)
             while any(a is not None for a in active):
                 steps += 1
+                self._m.steps.inc()
                 tok_np = np.asarray(tok)[:, 0]
                 done_any = False
                 for i, r in enumerate(active):
@@ -237,6 +386,9 @@ class ServingEngine:
                     results[r.rid].append(int(tok_np[i]))
                     remaining[i] -= 1
                     if remaining[i] <= 0:
+                        self._m.record_request(
+                            r, admit_t.pop(r.rid, r.t_enqueue),
+                            time.monotonic())
                         active[i] = None
                         done_any = True
                 if done_any and len(queue):

@@ -134,9 +134,12 @@ class GenerativeRetriever:
         B, S = history.shape
         M = self.M
         max_len = S + self.L + 1
-        pre_logits, cache = transformer.prefill(
-            params, history, self.cfg, max_len=max_len
-        )
+        # named_scope: trace-time profiler labels only (DESIGN.md §9) —
+        # no runtime cost, no change to the computation.
+        with jax.named_scope("prefill"):
+            pre_logits, cache = transformer.prefill(
+                params, history, self.cfg, max_len=max_len
+            )
         # tile the request cache across beams: (L, B, ...) -> (L, B*M, ...)
         def tile(a):
             if a.ndim >= 2 and a.shape[1] == B:
@@ -145,14 +148,15 @@ class GenerativeRetriever:
 
         import dataclasses as dc
 
-        cache = dc.replace(
-            cache,
-            **{
-                f.name: tile(getattr(cache, f.name))
-                for f in dc.fields(cache)
-                if f.name in ("k", "v", "c_kv", "k_rope")
-            },
-        )
+        with jax.named_scope("cache_beam_tile"):
+            cache = dc.replace(
+                cache,
+                **{
+                    f.name: tile(getattr(cache, f.name))
+                    for f in dc.fields(cache)
+                    if f.name in ("k", "v", "c_kv", "k_rope")
+                },
+            )
 
         def logits_fn(carry, last_tokens, step):
             c = carry

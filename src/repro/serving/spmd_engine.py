@@ -33,6 +33,7 @@ per-beam top-C lists and the ``(B, M*C)`` reduce are dp-local, and
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -48,6 +49,13 @@ from repro.distributed.constraint_sharding import (
     to_row_sharded,
 )
 from repro.distributed.sharding import dp_axes, dp_size, shard_map_compat
+from repro.observability import (
+    MetricsRegistry,
+    annotate,
+    compile_events,
+    record_policy,
+)
+from repro.serving.engine import _EngineMetrics
 from repro.serving.generative_retrieval import GenerativeRetriever
 
 __all__ = ["SpmdRetriever", "SpmdServingEngine"]
@@ -200,7 +208,8 @@ class SpmdServingEngine:
     """
 
     def __init__(self, retriever: SpmdRetriever, *, registry=None,
-                 slots: Optional[int] = None, prompt_width: int = 8):
+                 slots: Optional[int] = None, prompt_width: int = 8,
+                 metrics: Optional[MetricsRegistry] = None):
         n = retriever._dp_size
         slots = slots if slots is not None else max(2 * n, 4)
         self.slots = -(-slots // n) * n  # static-shape padding rule (§6)
@@ -208,7 +217,20 @@ class SpmdServingEngine:
         self.registry = registry
         self.prompt_width = prompt_width
         self._installed_version = None
-        self.cold_swaps = 0  # envelope regrowths routed through this engine
+        self._m = _EngineMetrics(metrics)
+        self._served_batches = 0
+        record_policy(self._m.registry, retriever.policy, beams=retriever.M)
+
+    @property
+    def metrics(self) -> MetricsRegistry:
+        return self._m.registry
+
+    @property
+    def cold_swaps(self) -> int:
+        """Envelope regrowths routed through this engine (a property over
+        the ``serving_cold_swaps_total`` counter, so pre-telemetry callers
+        and tests keep working unchanged)."""
+        return int(self._m.cold.total())
 
     def serve(self, queue, max_batches: int = 10_000) -> dict:
         results: dict[int, dict] = {}
@@ -216,14 +238,23 @@ class SpmdServingEngine:
         batches = 0
         while len(queue) and batches < max_batches:
             batches += 1
+            t_admit = time.monotonic()
             batch = queue.pop_batch(self.slots)  # round-robin fair admit
-            version = None
+            self._m.sample_queue(queue)
+            version, cold = None, False
             if self.registry is not None:
                 store, version = self.registry.current()
                 if version != self._installed_version:
-                    if self.retriever.set_constraints(store):
-                        self.cold_swaps += 1  # regrown envelope: one rebuild
+                    cold = self.retriever.set_constraints(store)
+                    if cold:
+                        self._m.cold.inc()  # regrown envelope: one rebuild
+                        record_policy(self._m.registry,
+                                      self.retriever.policy,
+                                      beams=self.retriever.M)
+                    else:
+                        self._m.hot.inc()
                     self._installed_version = version
+                    self._m.store_version.set(version)
             num_sets = self.retriever.num_sets
             limit = num_sets if num_sets is not None else 1
             hist = np.zeros((self.slots, S), np.int32)
@@ -240,15 +271,26 @@ class SpmdServingEngine:
                         "constraint_id": r.constraint_id,
                         "store_version": version,
                     }
+                    self._m.rejected.inc(lane=str(r.constraint_id))
                     continue
                 hist[i, : min(r.prompt.shape[0], S)] = r.prompt[:S]
                 cids[i] = r.constraint_id
                 active[i] = True
-            beams, scores = self.retriever.retrieve(
-                hist,
-                constraint_ids=cids if num_sets is not None else None,
-                active_mask=active,
+            c0 = compile_events()
+            with annotate("spmd_serve_batch"):
+                beams, scores = self.retriever.retrieve(
+                    hist,
+                    constraint_ids=cids if num_sets is not None else None,
+                    active_mask=active,
+                )
+            t_done = time.monotonic()
+            self._m.record_batch(
+                n_active=int(active.sum()), slots=self.slots,
+                steps=self.retriever.L, dt=t_done - t_admit,
+                compiles=compile_events() - c0,
+                expected=cold or self._served_batches == 0,
             )
+            self._served_batches += 1
             for i, r in enumerate(batch):
                 if r.rid in results:
                     continue  # rejected above
@@ -257,5 +299,7 @@ class SpmdServingEngine:
                     "scores": scores[i],
                     "constraint_id": r.constraint_id,
                     "store_version": version,
+                    **self._m.record_request(r, t_admit, t_done),
                 }
+        self._m.sample_queue(queue)
         return results
