@@ -2,7 +2,8 @@
 
 Closed-loop benchmarks (submit a batch, wait, repeat) hide queueing delay —
 the latency a production client actually sees under load.  This harness
-drives both serving engines **open-loop**: a producer thread submits
+drives all three serving engines (sequence-boundary, SPMD, and
+step-boundary continuous) **open-loop**: a producer thread submits
 requests on a Poisson arrival schedule (exponential inter-arrivals, seeded)
 regardless of whether the engine keeps up, while the main thread drains the
 ``RequestQueue`` through ``engine.serve``.  Per-request latency comes from
@@ -53,6 +54,7 @@ from repro.launch.mesh import make_subset_mesh
 from repro.models import transformer
 from repro.observability import MetricsRegistry, annotate
 from repro.pipelines import gr_model_config
+from repro.serving.continuous import ContinuousServingEngine
 from repro.serving.engine import RequestQueue, ServingEngine
 from repro.serving.generative_retrieval import GenerativeRetriever
 from repro.serving.spmd_engine import SpmdRetriever, SpmdServingEngine
@@ -68,7 +70,10 @@ def build_workload(smoke: bool, rng: np.random.Generator):
     cfg = gr_model_config(vocab)
     params = transformer.init_params(cfg, jax.random.key(0))
     catalog = synthetic_catalog(rng, n_items, vocab, L)
-    registry = ConstraintRegistry(vocab, headroom=0.5)
+    # dense_d=0 (all-sparse index) so the continuous engine's level-free
+    # masking is available; the sequence-boundary engines serve the same
+    # index, keeping the knee comparison apples-to-apples
+    registry = ConstraintRegistry(vocab, dense_d=0, headroom=0.5)
     registry.register("fresh", freshness_window(60.0))
     registry.register("cats", category_allowlist(0, 1, 2, 3))
     store = registry.build(catalog)
@@ -80,13 +85,13 @@ def build_workload(smoke: bool, rng: np.random.Generator):
 
 def make_engines(w, smoke: bool):
     batch = 4 if smoke else 8
+    retr = GenerativeRetriever(
+        w["params"], w["cfg"], w["policy"], w["L"], w["vocab"],
+        beam_size=w["beam"],
+    )
     eng = ServingEngine(
         w["params"], w["cfg"], batch_size=batch, max_len=16,
-        retriever=GenerativeRetriever(
-            w["params"], w["cfg"], w["policy"], w["L"], w["vocab"],
-            beam_size=w["beam"],
-        ),
-        registry=w["registry"],
+        retriever=retr, registry=w["registry"],
     )
     mesh = make_subset_mesh(data=1)
     spmd = SpmdServingEngine(
@@ -96,7 +101,16 @@ def make_engines(w, smoke: bool):
         ),
         registry=w["registry"], slots=batch, prompt_width=8,
     )
-    return {"serving_engine": eng, "spmd_engine": spmd}
+    # step-boundary engine: paged history KV lets it hold 2x the slots of
+    # the sequence-boundary batch at the same per-beam cache budget, and
+    # prompt-prefix sharing skips repeat prefills entirely
+    cont = ContinuousServingEngine(
+        retr, registry=w["registry"], slots=2 * batch, prompt_width=8,
+        page_size=8, prefill_chunk=batch,
+        share_width=2 * batch * w["beam"] // 2,
+    )
+    return {"serving_engine": eng, "spmd_engine": spmd,
+            "continuous_engine": cont}
 
 
 # ---------------------------------------------------------------------------
@@ -107,7 +121,14 @@ def run_open_loop(engine, qps: float, n_requests: int, vocab: int,
     """One offered-QPS point: Poisson arrivals vs a draining engine."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / qps, size=n_requests))
-    prompts = rng.integers(0, vocab, size=(n_requests, 8)).astype(np.int32)
+    # Zipf-ish prompt popularity over a small pool: production retrieval
+    # traffic repeats hot user histories, which is what the continuous
+    # engine's prompt-prefix sharing exploits (a repeat skips its prefill);
+    # the sequence-boundary engines see the identical request stream
+    pool = rng.integers(0, vocab, size=(12, 8)).astype(np.int32)
+    ranks = np.arange(1, len(pool) + 1, dtype=np.float64)
+    popularity = (1.0 / ranks) / (1.0 / ranks).sum()
+    prompts = pool[rng.choice(len(pool), size=n_requests, p=popularity)]
     cids = (np.arange(n_requests) % n_slots).astype(int)
     queue = RequestQueue()
     t0 = time.monotonic()
@@ -130,7 +151,9 @@ def run_open_loop(engine, qps: float, n_requests: int, vocab: int,
     t_last = time.monotonic()
     th.join()
 
-    lat = np.array([r["latency_s"] for r in results.values()])
+    # deadline-shed results carry {"error": ...} without latency fields
+    lat = np.array([r["latency_s"] for r in results.values()
+                    if "latency_s" in r])
     wall = max(t_last - t0, 1e-9)
     achieved = n_requests / wall
     # goodput against the REALIZED schedule: with small n the sampled
@@ -295,6 +318,19 @@ def main():
         report["engines"][name]["unexpected_recompiles"] = int(unexpected)
         report["engines"][name]["hot_swaps"] = int(engine.metrics.counter(
             "serving_hot_swaps_total").total())
+        if name == "continuous_engine":
+            # continuous-batching health: mid-flight slot refills happened,
+            # sharing saved real work, and the page pool stayed consistent
+            m = engine.metrics
+            report["engines"][name]["slot_reuse"] = int(
+                m.counter("serving_slot_reuse_total").total())
+            report["engines"][name]["prefix_share_hits"] = {
+                "prompt": int(m.counter(
+                    "serving_prefix_share_hits_total").value(kind="prompt")),
+                "mask_row": int(m.counter(
+                    "serving_prefix_share_hits_total").value(kind="mask_row")),
+            }
+            engine.alloc.check()
 
     report["overhead_gate"] = overhead_gate(args.smoke)
 
@@ -313,6 +349,10 @@ def main():
                             "unexpected recompile(s) across hot swaps")
         if len(r["points"]) < 2:
             failures.append(f"{name}: fewer than 2 QPS points")
+    cont = report["engines"].get("continuous_engine", {})
+    if cont and cont.get("slot_reuse", 0) < 1:
+        failures.append("continuous_engine: no mid-flight slot refill "
+                        "happened (step-boundary admission broken)")
     if not report["overhead_gate"]["passed"]:
         g = report["overhead_gate"]
         failures.append(

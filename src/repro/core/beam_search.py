@@ -38,8 +38,6 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import LEGACY_UNSET as _LEGACY_UNSET
-from repro.core.types import Impl
 from repro.core.vntk import NEG_INF
 
 __all__ = ["BeamState", "beam_search", "recall_at_k"]
@@ -73,11 +71,8 @@ def beam_search(
     length: int,
     policy=None,  # DecodePolicy | TransitionMatrix | ConstraintStore | None
     carry_gather_fn: Optional[CarryGatherFn] = None,
-    impl: Optional[Impl] = _LEGACY_UNSET,  # deprecated: bake into the policy
-    fused: bool = _LEGACY_UNSET,  # deprecated: bake into the policy
     first_logits: Optional[jax.Array] = None,
     constraint_ids: Optional[jax.Array] = None,
-    tm=_LEGACY_UNSET,  # deprecated alias of ``policy``
     return_trace: bool = False,
 ) -> tuple[BeamState, object]:
     """Run L constrained decode steps; returns final beams sorted by score.
@@ -102,13 +97,9 @@ def beam_search(
     fixture format (``tests/golden/``): cross-backend drift is then caught
     at the *step* it first diverges, not just in the final top-M.
     """
-    from repro.decoding.policy import coerce_policy  # lazy: import cycle
+    from repro.decoding.policy import as_policy  # lazy: import cycle
 
-    if tm is not _LEGACY_UNSET:
-        if policy is not None:
-            raise TypeError("pass either policy= or the legacy tm=, not both")
-        policy = tm
-    policy = coerce_policy(policy, impl, fused, caller="beam_search")
+    policy = as_policy(policy)
     if policy.requires_constraint_ids and constraint_ids is None:
         raise ValueError("ConstraintStore lookups need per-row constraint_ids")
     if constraint_ids is not None and not policy.requires_constraint_ids:

@@ -2,17 +2,13 @@
 
 ``repro.core`` (beam_search, constrained) and ``repro.decoding`` (backends,
 policy) sit on opposite sides of a lazy-import boundary; both need the same
-``Impl`` alias and the same legacy-kwarg sentinel, so they live here where
-either side can import them regardless of which package loads first.
+``Impl`` alias, so it lives here where either side can import it regardless
+of which package loads first.
 """
 from typing import Literal
 
-__all__ = ["Impl", "LEGACY_UNSET"]
+__all__ = ["Impl"]
 
 # Which VNTK formulation runs the sparse decode levels: the pure-XLA
 # formulation or the Pallas TPU kernel (interpret mode off-TPU).
 Impl = Literal["xla", "pallas"]
-
-# Sentinel for the deprecated impl=/fused=/tm= kwarg tunnel: distinguishes
-# "not passed" from an explicit None/False.
-LEGACY_UNSET = object()

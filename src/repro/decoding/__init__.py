@@ -11,8 +11,8 @@ backend plan that ``beam_search`` / ``GenerativeRetriever`` /
 Public surface:
   * ``DecodePolicy``        — per-level backend plan; the object serving code
                               passes around (a pytree: hot-swap safe).
-  * ``as_policy``           — legacy shim: matrix / store / baseline / None
-                              -> policy.
+  * ``as_policy``           — coercion helper: matrix / store / baseline /
+                              None -> policy.
   * ``ConstraintBackend``   — the protocol (mask_step + static metadata).
   * Backends: ``StaticBackend``, ``StackedStaticBackend``,
     ``CpuTrieBackend``, ``PPVBackend``, ``HashBitmapBackend``,
@@ -30,18 +30,14 @@ from repro.decoding.backends import (
     UnconstrainedBackend,
 )
 from repro.decoding.policy import (
-    LEGACY_UNSET,
     DecodePolicy,
     as_policy,
-    coerce_policy,
 )
 
 __all__ = [
     "ConstraintBackend",
     "DecodePolicy",
     "as_policy",
-    "coerce_policy",
-    "LEGACY_UNSET",
     "Impl",
     "Rows",
     "StaticBackend",

@@ -250,6 +250,41 @@ class StaticBackend:
             )
         return vntk_xla(log_probs, nodes, self.tm, bmax)
 
+    @property
+    def supports_level_free(self) -> bool:
+        """True when ONE mask call can serve rows at heterogeneous decode
+        levels (continuous batching): needs an all-sparse index
+        (``dense_d == 0``) so every level — including the root — resolves
+        through the CSR and node ids are globally unique across levels."""
+        return self.levels != "dense" and self.tm.dense_d == 0
+
+    def level_free_mask(self, log_probs, nodes, *, constraint_ids=None):
+        """Level-agnostic ``mask_step``: rows may sit at different trie
+        depths.  The admissible set is fully determined by each row's node's
+        CSR row; ``bmax`` (the speculative edge-gather width) is the global
+        maximum over levels, and only sizes the gather — extra invalid slots
+        scatter to the overflow column, so the output is bit-identical to
+        the per-level call at whatever level each node is on."""
+        del constraint_ids
+        if not self.supports_level_free:
+            raise ValueError(
+                "level-free masking needs an all-sparse index (dense_d == 0)"
+                f"; this StaticBackend has dense_d={self.tm.dense_d}, "
+                f"levels={self.levels!r}"
+            )
+        bmax = max(
+            max(self.tm.bmax_for_step(s) for s in range(self.tm.sid_length)),
+            1,
+        )
+        if self.impl == "pallas":
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            return kernel_ops.vntk(
+                log_probs, nodes, self.tm.row_pointers, self.tm.edges, bmax,
+                self.tm.vocab_size,
+            )
+        return vntk_xla(log_probs, nodes, self.tm, bmax)
+
     def fused_step(self, logits, nodes, step, *, prefix_tokens=None,
                    constraint_ids=None):
         """Phases 1-2 in one HBM pass (sparse steps; dense steps fall back
@@ -374,6 +409,38 @@ class StackedStaticBackend:
                 log_probs, nodes, self.store, constraint_ids=constraint_ids
             )
         bmax = max(self.store.bmax_for_step(step), 1)
+        if self.impl == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.vntk(
+                log_probs, nodes, self.store.row_pointers, self.store.edges,
+                bmax, self.store.vocab_size, constraint_ids=constraint_ids,
+            )
+        return vntk_stacked_xla(
+            log_probs, nodes, self.store, bmax, constraint_ids
+        )
+
+    @property
+    def supports_level_free(self) -> bool:
+        """See :attr:`StaticBackend.supports_level_free` — the stacked
+        variant additionally keys every lookup on ``constraint_ids``."""
+        return self.levels != "dense" and self.store.dense_d == 0
+
+    def level_free_mask(self, log_probs, nodes, *, constraint_ids=None):
+        """Level-agnostic stacked ``mask_step`` (see
+        :meth:`StaticBackend.level_free_mask`)."""
+        self._require_ids(constraint_ids)
+        if not self.supports_level_free:
+            raise ValueError(
+                "level-free masking needs an all-sparse index (dense_d == 0)"
+                f"; this StackedStaticBackend has "
+                f"dense_d={self.store.dense_d}, levels={self.levels!r}"
+            )
+        bmax = max(
+            max(self.store.bmax_for_step(s)
+                for s in range(self.store.sid_length)),
+            1,
+        )
         if self.impl == "pallas":
             from repro.kernels import ops as kernel_ops
 

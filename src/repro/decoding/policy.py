@@ -18,7 +18,6 @@ registry hot-swap (DESIGN.md §4, asserted in ``tests/test_constraint_store``).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -31,7 +30,7 @@ from repro.core.baselines import (
     PPVBaseline,
 )
 from repro.core.transition_matrix import TransitionMatrix
-from repro.core.types import LEGACY_UNSET
+from repro.core.vntk import NEG_INF
 from repro.decoding.backends import (
     ConstraintBackend,
     CpuTrieBackend,
@@ -43,7 +42,7 @@ from repro.decoding.backends import (
     UnconstrainedBackend,
 )
 
-__all__ = ["DecodePolicy", "as_policy", "coerce_policy", "LEGACY_UNSET"]
+__all__ = ["DecodePolicy", "as_policy"]
 
 
 @jax.tree_util.register_dataclass
@@ -293,6 +292,133 @@ class DecodePolicy:
             constraint_ids=cids,
         )
 
+    # -- level-free masking (continuous batching, DESIGN.md §10) -----------
+    @property
+    def supports_level_free(self) -> bool:
+        """True when one mask call serves rows at heterogeneous decode
+        levels: a single-backend plan whose backend is all-sparse
+        (``dense_d == 0``, so node ids are globally unique across levels and
+        ``(constraint_id, node)`` alone determines the admissible set)."""
+        if len(set(self.plan)) != 1:
+            return False
+        return bool(getattr(
+            self.backends[self.plan[0]], "supports_level_free", False
+        ))
+
+    def level_free_step(
+        self,
+        logits: jax.Array,  # (N, V) raw logits (or log-probs)
+        nodes: jax.Array,  # (N,) int32 per-row states, ANY mixture of levels
+        *,
+        constraint_ids: Optional[jax.Array] = None,
+        normalized: bool = False,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Phases 1-2 with per-row levels: ``(masked_log_probs, next_dense)``.
+
+        Bit-identical to :meth:`step` at whatever level each row's node sits
+        on (asserted in ``tests/test_continuous.py``).  Always
+        normalize-then-mask — the fused kernel is per-level and is not
+        consulted here.
+        """
+        if not self.supports_level_free:
+            raise ValueError(
+                f"[{self.describe()}] cannot mask level-free; build the "
+                "policy over a dense_d=0 index "
+                "(TransitionMatrix.from_sids(..., dense_d=0))"
+            )
+        b = self.backends[self.plan[0]]
+        if constraint_ids is not None and not self.requires_constraint_ids:
+            raise ValueError(
+                "constraint_ids requires a stacked ConstraintStore policy"
+            )
+        cids = constraint_ids if b.supports_stacked else None
+        lp = logits if normalized else jax.nn.log_softmax(
+            logits.astype(jnp.float32), axis=-1
+        )
+        return b.level_free_mask(lp, nodes, constraint_ids=cids)
+
+    def shared_mask_step(
+        self,
+        logits: jax.Array,  # (N, V) raw logits (or log-probs)
+        nodes: jax.Array,  # (N,) int32 per-row states
+        *,
+        constraint_ids: Optional[jax.Array] = None,
+        share_width: Optional[int] = None,
+        normalized: bool = False,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Trie-prefix-shared Phases 1-2: rows with equal
+        ``(constraint_id, node)`` — beams sitting on the same trie node —
+        compute ONE mask/next-state row instead of N independent ones.
+
+        Returns ``(masked_log_probs, next_dense, n_unique)``.  The mask and
+        next-state rows are pure functions of the key, so deduplication is
+        exact: the mask row is materialized once from zero log-probs (its
+        entries are then exactly ``0.0`` on admissible tokens and
+        ``NEG_INF`` elsewhere) and re-applied per row by select, which is
+        bitwise identical to masking each row independently.
+        ``share_width`` caps the representative-row count ``U`` (static
+        shape); batches with more than ``U`` distinct keys fall back to the
+        full per-row computation under a ``lax.cond``.  ``N - n_unique`` is
+        the number of mask rows saved this step (the prefix-share hit
+        counter).
+        """
+        if not self.supports_level_free:
+            raise ValueError(
+                f"[{self.describe()}] cannot mask level-free; build the "
+                "policy over a dense_d=0 index"
+            )
+        b = self.backends[self.plan[0]]
+        if constraint_ids is not None and not self.requires_constraint_ids:
+            raise ValueError(
+                "constraint_ids requires a stacked ConstraintStore policy"
+            )
+        cids = constraint_ids if b.supports_stacked else None
+        lp = logits if normalized else jax.nn.log_softmax(
+            logits.astype(jnp.float32), axis=-1
+        )
+        N, V = lp.shape
+        if cids is not None:
+            idx = self.constraints
+            keys = (cids.astype(jnp.int32) * jnp.int32(idx.n_states + 1)
+                    + nodes.astype(jnp.int32))
+        else:
+            keys = nodes.astype(jnp.int32)
+        order = jnp.argsort(keys)  # stable; any representative is valid
+        sk = jnp.take(keys, order)
+        newk = jnp.concatenate(
+            [jnp.ones((1,), bool), sk[1:] != sk[:-1]]
+        )
+        uid_sorted = jnp.cumsum(newk.astype(jnp.int32)) - 1  # (N,)
+        n_unique = uid_sorted[-1] + 1
+        inv = jnp.zeros(N, jnp.int32).at[order].set(uid_sorted)
+        U = N if share_width is None else int(share_width)
+
+        def _shared(lp):
+            # representative source row per unique key (mode="drop" parks
+            # overflow keys harmlessly when n_unique > U — that branch is
+            # unreachable under the cond below)
+            rep_src = jnp.zeros(U, jnp.int32).at[uid_sorted].set(
+                order.astype(jnp.int32), mode="drop"
+            )
+            rep_nodes = jnp.take(nodes, rep_src)
+            rep_cids = None if cids is None else jnp.take(cids, rep_src)
+            mask_rows, next_rows = b.level_free_mask(
+                jnp.zeros((U, V), lp.dtype), rep_nodes,
+                constraint_ids=rep_cids,
+            )
+            mask = jnp.take(mask_rows, inv, axis=0)  # (N, V) in {0, NEG_INF}
+            nxt = jnp.take(next_rows, inv, axis=0)
+            return jnp.where(mask == 0.0, lp, NEG_INF), nxt
+
+        def _full(lp):
+            return b.level_free_mask(lp, nodes, constraint_ids=cids)
+
+        if U >= N:
+            masked, nxt = _shared(lp)
+        else:
+            masked, nxt = jax.lax.cond(n_unique <= U, _shared, _full, lp)
+        return masked, nxt, n_unique
+
     # -- hot-swap ----------------------------------------------------------
     def with_constraints(self, obj) -> "DecodePolicy":
         """A new policy with ``obj`` (matrix or store) in place of the old.
@@ -412,44 +538,6 @@ class DecodePolicy:
                   plan: Sequence[int]) -> "DecodePolicy":
         """Escape hatch: an arbitrary per-level composition."""
         return cls(backends=tuple(backends), plan=tuple(plan))
-
-
-def coerce_policy(policy, impl=LEGACY_UNSET, fused=LEGACY_UNSET, *,
-                  caller: str) -> DecodePolicy:
-    """One-release deprecation shim shared by ``beam_search`` and
-    ``GenerativeRetriever``.
-
-    Accepts a DecodePolicy or any legacy constraint carrier.  The deprecated
-    ``impl=``/``fused=`` kwargs are honored (with a DeprecationWarning) when
-    converting a legacy carrier, and rejected alongside a real policy — the
-    policy already fixed them at construction.
-    """
-    legacy = {}
-    if impl is not LEGACY_UNSET:
-        legacy["impl"] = impl
-    if fused is not LEGACY_UNSET:
-        legacy["fused"] = fused
-    if isinstance(policy, DecodePolicy):
-        if legacy:
-            raise TypeError(
-                "impl=/fused= cannot be combined with a DecodePolicy; bake "
-                "them into the policy (DecodePolicy.static(tm, impl=..., "
-                "fused=...))"
-            )
-        return policy
-    if legacy:
-        warnings.warn(
-            f"{caller}(impl=..., fused=...) is deprecated; pass a "
-            "DecodePolicy (e.g. DecodePolicy.static(tm, impl=..., "
-            "fused=...)) — the kwarg tunnel will be removed next release",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-    return as_policy(
-        policy,
-        impl=legacy.get("impl") or "xla",
-        fused=bool(legacy.get("fused") or False),
-    )
 
 
 def as_policy(obj, *, impl: Impl = "xla", fused: bool = False) -> DecodePolicy:

@@ -2,6 +2,28 @@
 
     PYTHONPATH=src python -m repro.launch.serve --constraints 20000 \
         --batch 4 --beam 8
+
+Which engine when (``--engine``):
+
+===========  ==============================================================
+batch        Sequence-boundary ``ServingEngine`` (default).  One fused jit
+             per batch — the lowest per-request dispatch overhead.  Best
+             for offline/bulk retrieval and uniform prompt lengths, where
+             slots finishing together wastes nothing.
+spmd         ``SpmdServingEngine`` over a (data, model) mesh.  Same
+             sequence-boundary semantics scaled across devices; pick it
+             when one host's devices must serve a single logical batch.
+continuous   Step-boundary ``ContinuousServingEngine`` (DESIGN.md §10).
+             Paged history KV + chunked prefill + trie-prefix sharing:
+             slots refill the moment a request completes, repeat prompts
+             skip their prefill, and per-request TTFT is L steps from
+             admission instead of a whole batch drain.  Best under live
+             mixed traffic (hot prompts, ragged arrivals, SLO deadlines);
+             needs a ``dense_d=0`` constraint index.
+===========  ==============================================================
+
+Per-request results are bit-identical across all three engines (fuzz-
+asserted in tests/test_continuous.py and tests/test_spmd_serving.py).
 """
 from __future__ import annotations
 
@@ -59,9 +81,15 @@ def main():
                          "stayed zero-recompile")
     ap.add_argument("--refresh-cycles", type=int, default=3,
                     help="churn cycles to run under --refresh-interval")
+    ap.add_argument("--engine", choices=["batch", "spmd", "continuous"],
+                    default="batch",
+                    help="serving engine (see the module docstring's "
+                         "which-engine-when table); 'continuous' runs the "
+                         "step-boundary engine demo over a RequestQueue")
     ap.add_argument("--spmd", action="store_true",
-                    help="serve SPMD over a (data, model) mesh spanning every "
-                         "visible device (simulate a multi-chip host with "
+                    help="alias for --engine spmd: serve SPMD over a (data, "
+                         "model) mesh spanning every visible device "
+                         "(simulate a multi-chip host with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument("--spmd-rows", choices=["replicated", "model"],
                     default="replicated",
@@ -90,20 +118,60 @@ def main():
             f.write(str(port))
         logger.info("metrics: http://127.0.0.1:%d/metrics", port)
 
+    if args.spmd:
+        args.engine = "spmd"
+
     rng = np.random.default_rng(0)
     cfg = gr_model_config(args.vocab)
     params = transformer.init_params(cfg, jax.random.key(0))
     sids = rng.integers(0, args.vocab, size=(args.constraints, args.sid_length))
     tm = None
     policy = DecodePolicy.unconstrained()
-    if not args.unconstrained:
+    if not args.unconstrained or args.engine == "continuous":
         t0 = time.time()
-        tm = TransitionMatrix.from_sids(sids, args.vocab, dense_d=2)
+        # the continuous engine's level-free masking needs the all-sparse
+        # index (node ids globally unique across levels)
+        dense_d = 0 if args.engine == "continuous" else 2
+        tm = TransitionMatrix.from_sids(sids, args.vocab, dense_d=dense_d)
         policy = DecodePolicy.static(tm, impl=args.impl, fused=args.fused,
                                      topk=not args.no_topk)
         logger.info("constraint index: %d states (%.2fs build); policy %s",
                     tm.n_states, time.time() - t0, policy.describe())
-    if args.spmd:
+
+    if args.engine == "continuous":
+        from repro.serving.continuous import ContinuousServingEngine
+        from repro.serving.engine import RequestQueue
+
+        r = GenerativeRetriever(params, cfg, policy, args.sid_length,
+                                args.vocab, beam_size=args.beam)
+        engine = ContinuousServingEngine(
+            r, slots=args.batch, prompt_width=16,
+            prefill_chunk=max(args.batch // 2, 1), metrics=metrics)
+        queue = RequestQueue()
+        n_req = args.requests * args.batch
+        pool = rng.integers(0, args.vocab, (max(n_req // 3, 1), 16))
+        rids = [queue.submit(pool[i % len(pool)].astype(np.int32),
+                             args.sid_length) for i in range(n_req)]
+        t0 = time.time()
+        results = engine.serve(queue)
+        lat = np.array([results[i]["latency_s"] for i in rids])
+        hits = engine.metrics.counter("serving_prefix_share_hits_total")
+        logger.info(
+            "continuous: %d requests in %.1f ms (p50 %.1f ms, p99 %.1f ms); "
+            "slot reuse %d, share hits prompt=%d mask_row=%d",
+            n_req, (time.time() - t0) * 1e3,
+            float(np.quantile(lat, 0.5)) * 1e3,
+            float(np.quantile(lat, 0.99)) * 1e3,
+            int(engine.metrics.counter("serving_slot_reuse_total").total()),
+            int(hits.value(kind="prompt")), int(hits.value(kind="mask_row")))
+        top1 = results[rids[0]]["sids"][0].tolist()
+        logger.info("top-1 SIDs (request 0): %s", top1)
+        if args.metrics_json:
+            metrics.write_snapshot(args.metrics_json)
+            logger.info("metrics snapshot appended to %s", args.metrics_json)
+        return
+
+    if args.engine == "spmd":
         from repro.launch.mesh import make_debug_mesh
         from repro.serving.spmd_engine import SpmdRetriever
 

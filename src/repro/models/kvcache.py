@@ -1,4 +1,4 @@
-"""KV caches: full, ring-buffered (sliding-window), and MLA latent.
+"""KV caches: full, ring-buffered (sliding-window), MLA latent, and paged.
 
 All caches are per-layer-stacked pytrees (leading axis = n_layers) so the
 decode step can ``lax.scan`` over layers carrying the matching cache slice.
@@ -6,6 +6,14 @@ decode step can ``lax.scan`` over layers carrying the matching cache slice.
 The ring cache keeps only ``window`` slots; insertion is at ``pos % window``
 and every slot remembers its absolute position for masking — this is what
 makes mixtral long_500k decode O(window) in memory instead of O(S).
+
+Paged pools (DESIGN.md §10) back the continuous-batching engine: history KV
+lives in a flat pool of fixed-size pages indexed through a per-slot page
+table, so shared prompt prefixes are stored once and join/evict is a
+host-side free-list operation — never a device reshape.  The device-side
+helpers here (``init_page_pool`` / ``scatter_pages`` / ``gather_pages``) are
+pure shape plumbing; ownership and refcounts are host state
+(:class:`repro.serving.continuous.PagedKVAllocator`).
 """
 from __future__ import annotations
 
@@ -14,7 +22,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["KVCache", "MLACache", "init_kv_cache", "init_mla_cache"]
+__all__ = [
+    "KVCache", "MLACache", "init_kv_cache", "init_mla_cache",
+    "init_page_pool", "scatter_pages", "gather_pages", "pages_for",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -76,3 +87,65 @@ def advance_positions(slot_pos: jax.Array, pos: jax.Array, n_slots: int, ring: b
     """Mark the slot written at this step with its absolute position."""
     slot = jnp.where(ring, pos % n_slots, jnp.minimum(pos, n_slots - 1))
     return slot_pos.at[slot].set(pos), slot
+
+
+# ---------------------------------------------------------------------------
+# Paged history pools (continuous batching, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def pages_for(seq_len: int, page_size: int) -> int:
+    """Pages needed to hold ``seq_len`` KV columns."""
+    return -(-int(seq_len) // int(page_size))
+
+
+def init_page_pool(
+    n_layers, n_pages, page_size, n_kv_heads, head_dim, v_dim=None,
+    dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """(k_pool, v_pool), each (n_layers, n_pages, page_size, KVH, Dh).
+
+    Page 0 is conventionally the allocator's NULL page (never handed out),
+    so an all-zero page table is always safe to gather through.
+    """
+    v_dim = v_dim or head_dim
+    return (
+        jnp.zeros((n_layers, n_pages, page_size, n_kv_heads, head_dim),
+                  dtype),
+        jnp.zeros((n_layers, n_pages, page_size, n_kv_heads, v_dim), dtype),
+    )
+
+
+def scatter_pages(pool: jax.Array, rows: jax.Array,
+                  page_ids: jax.Array) -> jax.Array:
+    """Commit prefilled KV rows into the pool at ``page_ids``.
+
+    pool (n_layers, P, ps, KVH, Dh); rows (n_layers, B, S, KVH, Dh) with
+    ``S`` padded by zeros up to ``n_pages_per_row * ps``; page_ids
+    (B, n_pages_per_row) int32.  Rows sharing a page id (refcounted prompt
+    sharing) must carry identical content — the scatter order is undefined.
+    """
+    L, P, ps = pool.shape[0], pool.shape[1], pool.shape[2]
+    B, S = rows.shape[1], rows.shape[2]
+    n_per = page_ids.shape[1]
+    pad = n_per * ps - S
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    paged = rows.reshape(L, B * n_per, ps, *rows.shape[3:])
+    return pool.at[:, page_ids.reshape(-1)].set(paged.astype(pool.dtype))
+
+
+def gather_pages(pool_layer: jax.Array, page_table: jax.Array,
+                 hist_len: int) -> jax.Array:
+    """Read ``hist_len`` history columns per slot through the page table.
+
+    pool_layer (P, ps, KVH, Dh); page_table (slots, n_pages) ->
+    (slots, hist_len, KVH, Dh).  The trailing ``n_pages*ps - hist_len``
+    columns are sliced off, so page-granule padding never reaches attention
+    (exact-width gathers keep the softmax reduction bit-identical to the
+    contiguous cache).
+    """
+    slots, n_pages = page_table.shape
+    ps = pool_layer.shape[1]
+    flat = jnp.take(pool_layer, page_table.reshape(-1), axis=0)
+    return flat.reshape(slots, n_pages * ps, *pool_layer.shape[2:])[
+        :, :hist_len
+    ]

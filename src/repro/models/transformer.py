@@ -39,7 +39,7 @@ from repro.models.moe import moe_ffn, moe_init
 
 __all__ = [
     "init_params", "param_specs", "forward", "lm_loss", "prefill",
-    "decode_step", "init_cache",
+    "decode_step", "paged_decode_step", "init_cache",
 ]
 
 
@@ -376,7 +376,7 @@ def _merge(caches):
     return tuple(jnp.concatenate(p, axis=0) for p in parts)
 
 
-def _decode_attn_gqa(p, x, cfg, k_cache, v_cache, slot_pos, pos):
+def _decode_attn_gqa(p, x, cfg, k_cache, v_cache, slot_pos, pos, slot=None):
     B = x.shape[0]
     hd = cfg.resolved_head_dim()
     H, KV = cfg.n_heads, cfg.n_kv_heads
@@ -429,9 +429,12 @@ def _decode_attn_gqa(p, x, cfg, k_cache, v_cache, slot_pos, pos):
             * v_new.astype(jnp.float32)[:, :, :, None, :]
         out = (out_c + out_n).reshape(B, 1, H, hd).astype(x.dtype)
         return out.reshape(B, 1, H * hd) @ p["wo"]["w"], (k_new, v_new)
-    slots = k_cache.shape[1]
-    ring = cfg.sliding_window is not None and cfg.sliding_window <= slots
-    slot = jnp.where(ring, pos % slots, jnp.minimum(pos, slots - 1))
+    if slot is None:
+        # standalone call: derive the write slot from the config (decode_step
+        # passes the cache-derived slot so the two can never disagree)
+        slots = k_cache.shape[1]
+        ring = cfg.sliding_window is not None and cfg.sliding_window <= slots
+        slot = jnp.where(ring, pos % slots, jnp.minimum(pos, slots - 1))
     k_cache = kv_lib.write_slot(k_cache, k_new, slot)
     v_cache = kv_lib.write_slot(v_cache, v_new, slot)
     out = decode_attention(
@@ -610,9 +613,9 @@ def decode_step(params, cache, tokens: jax.Array, cfg: TransformerConfig):
     else:
         slots = cache.k.shape[2]
         ring = cache.ring
-    write_slot = jnp.where(ring, pos % slots, jnp.minimum(pos, slots - 1)) \
-        if not mla else jnp.minimum(pos, slots - 1)
-    slot_pos = cache.slot_pos.at[write_slot].set(pos)
+    slot_pos, write_slot = kv_lib.advance_positions(
+        cache.slot_pos, pos, slots, ring=False if mla else ring
+    )
 
     def body(x, inp):
         if mla:
@@ -626,7 +629,7 @@ def decode_step(params, cache, tokens: jax.Array, cfg: TransformerConfig):
             p, kc, vc = inp
             h = rms_norm(p["ln_attn"], x, cfg.norm_eps)
             attn_out, (kc, vc) = _decode_attn_gqa(
-                p["attn"], h, cfg, kc, vc, slot_pos, pos
+                p["attn"], h, cfg, kc, vc, slot_pos, pos, slot=write_slot
             )
             new_cache = (kc, vc)
         x = x + attn_out
@@ -684,3 +687,123 @@ def decode_step(params, cache, tokens: jax.Array, cfg: TransformerConfig):
             ring=ring,
         )
     return logits, new_cache
+
+
+def paged_decode_step(
+    params,
+    k_pool: jax.Array,  # (n_layers, P, page_size, KVH, Dh) shared history
+    v_pool: jax.Array,  # (n_layers, P, page_size, KVH, Dh)
+    page_table: jax.Array,  # (slots, n_pages) int32 page ids per slot
+    suffix_k: jax.Array,  # (n_layers, slots, M, Ls, KVH, Dh) decoded KV
+    suffix_v: jax.Array,  # (n_layers, slots, M, Ls, KVH, Dh)
+    tokens: jax.Array,  # (slots, M) int32 last emitted token per beam
+    pos: jax.Array,  # (slots,) int32 attention position (= S + level - 1)
+    write_col: jax.Array,  # (slots,) int32 suffix column receiving this k/v
+    cfg: TransformerConfig,
+    *,
+    hist_len: int,  # static S: history columns attended per slot
+):
+    """One continuous-batching decode step through the paged KV cache.
+
+    Rows may sit at *different* decode levels: ``pos`` and ``write_col`` are
+    per-slot vectors, and attention masks each row to its own ``[0, pos]``
+    window.  History KV is read through ``page_table`` (one stored copy per
+    slot — or per shared prompt — instead of per beam); per-beam decoded
+    suffixes live in the dense ``suffix_k/v`` arrays where beam permutation
+    is a plain gather.
+
+    Bit-identity contract (DESIGN.md §10, fuzz-asserted in
+    ``tests/test_continuous.py``): for a row at level ``l >= 1`` with
+    ``pos = S + l - 1`` this computes exactly what the ``l``-th sequential
+    :func:`decode_step` computes for that row — the gathered history is
+    sliced to exactly ``hist_len`` columns and concatenated with the
+    ``Ls = L + 1``-column suffix, so the attention width ``S + L + 1``
+    matches the sequence-boundary engine's ``max_len`` and every reduction
+    keeps its shape.  Rows whose output is unused (level-0 or dead slots)
+    must point ``write_col`` at the trash column ``Ls - 1``, which no
+    in-range ``pos`` can ever attend to.
+
+    Returns ``(logits (slots*M, 1, vocab), new_suffix_k, new_suffix_v)``.
+    """
+    if (cfg.attention == "mla" or cfg.sliding_window is not None
+            or cfg.defer_cache_write or cfg.moe is not None
+            or cfg.decode_split_k):
+        raise NotImplementedError(
+            "paged_decode_step supports dense GQA models without sliding "
+            "window / MLA / MoE / deferred writes"
+        )
+    slots, M = tokens.shape
+    N = slots * M
+    S = int(hist_len)
+    Ls = suffix_k.shape[3]
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ps = k_pool.shape[2]
+    n_pages = page_table.shape[1]
+    if n_pages * ps < S:
+        raise ValueError(
+            f"page table covers {n_pages * ps} columns < hist_len {S}"
+        )
+    x = jnp.take(params["emb"], tokens.reshape(N, 1), axis=0)  # (N, 1, D)
+    pos_row = jnp.repeat(pos, M)  # (N,)
+    pages = page_table.reshape(-1)
+    # synthetic slot positions: history cols 0..S-1 then suffix cols at
+    # S..S+Ls-1 — identical to the sequential cache's slot_pos for every
+    # column <= pos (prefill stamps 0..S-1, step l writes S+l-1), and the
+    # trash column S+Ls-1 > pos is always masked.
+    slot_positions = jnp.arange(S + Ls, dtype=jnp.int32)
+    col_mask = (jnp.arange(Ls, dtype=jnp.int32)[None, None, :]
+                == write_col[:, None, None])  # (slots, 1, Ls)
+
+    def body(x, inp):
+        p, kp, vp, sk, sv = inp
+        h = rms_norm(p["ln_attn"], x, cfg.norm_eps)
+        a = p["attn"]
+
+        def proj(pp, width):
+            y = h @ pp["w"]
+            if "b" in pp:
+                y = y + pp["b"]
+            return y.reshape(N, 1, width, hd)
+
+        q = proj(a["wq"], H)
+        k_new = proj(a["wk"], KV)
+        v_new = proj(a["wv"], KV)
+        q = apply_rope(q, pos_row[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos_row[:, None], cfg.rope_theta)
+        # write this step's k/v into the per-beam suffix BEFORE attention
+        # (decode_step order), at each slot's own column
+        sk = jnp.where(
+            col_mask[..., None, None],
+            k_new.reshape(slots, M, 1, KV, hd).astype(sk.dtype), sk,
+        )
+        sv = jnp.where(
+            col_mask[..., None, None],
+            v_new.reshape(slots, M, 1, KV, hd).astype(sv.dtype), sv,
+        )
+        # history through the page table: one stored copy per slot, fanned
+        # out across beams only as a transient gather
+        hk = kv_lib.gather_pages(kp, page_table, S)
+        hv = kv_lib.gather_pages(vp, page_table, S)
+        hk = jnp.repeat(hk, M, axis=0)  # (N, S, KV, hd)
+        hv = jnp.repeat(hv, M, axis=0)
+        kc = jnp.concatenate(
+            [hk, sk.reshape(N, Ls, KV, hd).astype(hk.dtype)], axis=1
+        )
+        vc = jnp.concatenate(
+            [hv, sv.reshape(N, Ls, KV, hd).astype(hv.dtype)], axis=1
+        )
+        out = decode_attention(q, kc, vc, slot_positions, pos_row)
+        x = x + out.reshape(N, 1, H * hd) @ a["wo"]["w"]
+        hh = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+        x = x + swiglu(p["ffn"], hh)
+        return x, (sk, sv)
+
+    x, (new_sk, new_sv) = jax.lax.scan(
+        body, x,
+        (params["dense_layers"], k_pool, v_pool, suffix_k, suffix_v),
+        unroll=cfg.layer_unroll,
+    )
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ _unemb(params, cfg)).astype(jnp.float32)  # (N, 1, V)
+    return logits, new_sk, new_sv

@@ -8,6 +8,7 @@ bit-identical with telemetry on or off.
 """
 from repro.observability.metrics import (
     DEFAULT_LATENCY_BUCKETS_S,
+    TOKEN_LATENCY_BUCKETS_S,
     Counter,
     Gauge,
     Histogram,
@@ -33,6 +34,7 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "DEFAULT_LATENCY_BUCKETS_S",
+    "TOKEN_LATENCY_BUCKETS_S",
     "start_http_server",
     "StepTimer",
     "StepStats",

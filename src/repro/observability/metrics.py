@@ -48,6 +48,7 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "DEFAULT_LATENCY_BUCKETS_S",
+    "TOKEN_LATENCY_BUCKETS_S",
     "start_http_server",
 ]
 
@@ -55,6 +56,11 @@ __all__ = [
 # for a CPU-container smoke run and a real accelerator step in the same
 # catalog; 26 fixed edges keep every histogram cell at 27 int64 counts.
 DEFAULT_LATENCY_BUCKETS_S = tuple(2.5e-5 * 2.0 ** i for i in range(26))
+
+# Finer preset for per-token quantities (TTFT, time-per-output-token): the
+# interesting range sits well below a request latency, so start at 5 us and
+# stop around 40 s instead of stretching to minutes.
+TOKEN_LATENCY_BUCKETS_S = tuple(5.0e-6 * 2.0 ** i for i in range(24))
 
 _NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 _LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")

@@ -1,0 +1,21 @@
+"""Continuous-batching serving subsystem (DESIGN.md §10).
+
+Step-boundary join/evict over a paged history KV pool with trie-prefix
+sharing.  See :class:`ContinuousServingEngine` for the contract; the
+sequence-boundary engines live one package up
+(``repro.serving.ServingEngine`` / ``SpmdServingEngine``).
+"""
+from repro.serving.continuous.engine import ContinuousServingEngine
+from repro.serving.continuous.paged_kv import (
+    PagedKVAllocator,
+    PrefixShareTable,
+)
+from repro.serving.continuous.scheduler import SlotState, StepScheduler
+
+__all__ = [
+    "ContinuousServingEngine",
+    "PagedKVAllocator",
+    "PrefixShareTable",
+    "StepScheduler",
+    "SlotState",
+]

@@ -47,6 +47,7 @@ import numpy as np
 from repro.configs.base import TransformerConfig
 from repro.models import transformer
 from repro.observability import (
+    TOKEN_LATENCY_BUCKETS_S,
     MetricsRegistry,
     annotate,
     compile_events,
@@ -148,6 +149,15 @@ class _EngineMetrics:
         self.service = r.histogram(
             "serving_request_service_seconds",
             "per-request admit→complete service time")
+        self.ttft = r.histogram(
+            "serving_request_ttft_seconds",
+            "per-request enqueue→first emitted SID token (sequence-boundary "
+            "engines emit all tokens at completion, so there ttft == total)",
+            buckets=TOKEN_LATENCY_BUCKETS_S)
+        self.tpot = r.histogram(
+            "serving_request_tpot_seconds",
+            "per-request service time per output token",
+            buckets=TOKEN_LATENCY_BUCKETS_S)
         self.batch_s = r.histogram(
             "serving_batch_seconds", "wall time of one shared decode batch")
         self.batches = r.counter("serving_batches_total", "batches served")
@@ -186,8 +196,12 @@ class _EngineMetrics:
             self.recompiles.inc(
                 compiles, expected="true" if expected else "false")
 
-    def record_request(self, r: Request, t_admit: float,
-                       t_done: float) -> dict:
+    def record_request(self, r: Request, t_admit: float, t_done: float, *,
+                       t_first: Optional[float] = None,
+                       n_out: Optional[int] = None) -> dict:
+        """``t_first`` = wall time the first output token existed (defaults
+        to ``t_done``: sequence-boundary engines only surface tokens at batch
+        completion); ``n_out`` = output tokens, for the per-token rate."""
         lane = str(r.constraint_id)
         wait = max(t_admit - r.t_enqueue, 0.0)
         total = max(t_done - r.t_enqueue, 0.0)
@@ -195,6 +209,12 @@ class _EngineMetrics:
         self.queue_wait.observe(wait, lane=lane)
         self.service.observe(max(t_done - t_admit, 0.0), lane=lane)
         self.latency.observe(total, lane=lane)
+        self.ttft.observe(
+            max((t_done if t_first is None else t_first) - r.t_enqueue, 0.0),
+            lane=lane)
+        if n_out:
+            self.tpot.observe(
+                max(t_done - t_admit, 0.0) / max(int(n_out), 1), lane=lane)
         return {"latency_s": total, "queue_s": wait}
 
 
@@ -328,7 +348,8 @@ class ServingEngine:
                     "scores": scores[i],
                     "constraint_id": r.constraint_id,
                     "store_version": version,
-                    **self._m.record_request(r, t_admit, t_done),
+                    **self._m.record_request(r, t_admit, t_done,
+                                             n_out=self.retriever.L),
                 }
         self._m.sample_queue(queue)
         return results

@@ -31,8 +31,7 @@ import numpy as np
 
 from repro.configs.base import TransformerConfig
 from repro.core import beam_search
-from repro.core.types import LEGACY_UNSET as _LEGACY_UNSET
-from repro.decoding import coerce_policy
+from repro.decoding import as_policy
 from repro.models import transformer
 
 __all__ = ["GenerativeRetriever"]
@@ -47,23 +46,12 @@ class GenerativeRetriever:
         sid_length: int = None,
         sid_vocab: int = None,
         beam_size: int = 20,
-        impl=_LEGACY_UNSET,  # deprecated: bake into the policy
-        fused=_LEGACY_UNSET,  # deprecated: bake into the policy
-        tm=_LEGACY_UNSET,  # deprecated keyword alias of ``policy``
     ):
         self.params = params
         self.cfg = cfg
-        if tm is not _LEGACY_UNSET:
-            if policy is not None:
-                raise TypeError(
-                    "pass either policy= or the legacy tm=, not both"
-                )
-            policy = tm
         if sid_length is None or sid_vocab is None:
             raise TypeError("sid_length and sid_vocab are required")
-        self.policy = coerce_policy(
-            policy, impl, fused, caller="GenerativeRetriever"
-        )
+        self.policy = as_policy(policy)
         self.L = sid_length
         self.V = sid_vocab
         self.M = beam_size
@@ -95,13 +83,10 @@ class GenerativeRetriever:
         return jax.tree_util.tree_structure(self.policy) != before
 
     @property
-    def tm(self):
-        """Deprecated alias: the underlying TransitionMatrix / store."""
+    def constraints(self):
+        """The underlying TransitionMatrix / ConstraintStore (read-only;
+        install refreshed constraints via :meth:`set_constraints`)."""
         return self.policy.constraints
-
-    @tm.setter
-    def tm(self, obj) -> None:
-        self.set_constraints(obj)
 
     # -- serving -------------------------------------------------------------
     def retrieve(self, history: np.ndarray,

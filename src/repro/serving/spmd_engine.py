@@ -299,7 +299,8 @@ class SpmdServingEngine:
                     "scores": scores[i],
                     "constraint_id": r.constraint_id,
                     "store_version": version,
-                    **self._m.record_request(r, t_admit, t_done),
+                    **self._m.record_request(r, t_admit, t_done,
+                                             n_out=self.retriever.L),
                 }
         self._m.sample_queue(queue)
         return results

@@ -27,7 +27,7 @@ def test_constrained_beams_always_valid(rng):
     table = jnp.asarray(rng.normal(size=(length, vocab)).astype(np.float32))
     state, _ = beam_search(
         static_logits_fn(table), None, batch_size=3, beam_size=8,
-        length=length, tm=tm,
+        length=length, policy=tm,
     )
     valid = {tuple(r) for r in sids}
     beams = np.asarray(state.tokens)
@@ -47,7 +47,7 @@ def test_unconstrained_can_hallucinate(rng):
     table = jnp.asarray(rng.normal(size=(length, vocab)).astype(np.float32))
     state, _ = beam_search(
         static_logits_fn(table), None, batch_size=1, beam_size=4,
-        length=length, tm=None,
+        length=length, policy=None,
     )
     valid = {tuple(r) for r in sids}
     beams = np.asarray(state.tokens)
@@ -61,7 +61,7 @@ def test_beam_scores_sorted_and_correct(rng):
     table = jnp.asarray(rng.normal(size=(length, vocab)).astype(np.float32))
     state, _ = beam_search(
         static_logits_fn(table), None, batch_size=2, beam_size=6,
-        length=length, tm=tm,
+        length=length, policy=tm,
     )
     scores = np.asarray(state.scores)
     assert np.all(np.diff(scores, axis=1) <= 1e-6)  # descending
@@ -86,7 +86,7 @@ def test_top_beam_is_global_argmax(rng):
     M = min(len(sids), 16)
     state, _ = beam_search(
         static_logits_fn(table), None, batch_size=1, beam_size=M,
-        length=length, tm=tm,
+        length=length, policy=tm,
     )
     assert tuple(np.asarray(state.tokens)[0, 0]) == best[1]
 

@@ -5,10 +5,8 @@ dense+VNTK on XLA / Pallas / fused, the stacked multi-tenant store, and the
 §5.2 baselines — runs through the *same* policy-driven ``beam_search`` and,
 when the method is exact, returns identical top-M SIDs and scores on a
 shared synthetic trie.  Plus 100% corpus compliance (paper §5.4) for every
-constrained backend, and the legacy kwarg-tunnel deprecation shim.
+constrained backend, and the ``as_policy`` coercion surface.
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -208,7 +206,7 @@ def test_constraint_ids_pairing(shared, rng):
 
 
 # ---------------------------------------------------------------------------
-# legacy shim: as_policy + deprecated kwarg tunnel
+# as_policy coercions (the documented non-deprecated surface)
 # ---------------------------------------------------------------------------
 def test_as_policy_coercions(shared, rng):
     sids, tm, _ = shared
@@ -225,7 +223,10 @@ def test_as_policy_coercions(shared, rng):
         as_policy(object())
 
 
-def test_legacy_kwargs_deprecated_but_equivalent(shared):
+def test_legacy_kwarg_tunnel_removed(shared):
+    """The PR 2 ``tm=``/``impl=``/``fused=`` shim is gone: bare carriers
+    still coerce through ``policy=`` (via as_policy), but the deprecated
+    kwarg names are plain TypeErrors now."""
     _, tm, table = shared
     want_tokens, want_scores = run_policy(DecodePolicy.static(tm), table)
 
@@ -233,21 +234,14 @@ def test_legacy_kwargs_deprecated_but_equivalent(shared):
         b, m = last.shape
         return jnp.broadcast_to(table[step], (b, m, V)), carry
 
-    with pytest.warns(DeprecationWarning, match="DecodePolicy"):
-        state, _ = beam_search(logits_fn, None, B, M, L, tm=tm, impl="xla")
+    # a bare TransitionMatrix as policy= is the supported coercion
+    state, _ = beam_search(logits_fn, None, B, M, L, policy=tm)
     np.testing.assert_array_equal(np.asarray(state.tokens), want_tokens)
     np.testing.assert_allclose(np.asarray(state.scores), want_scores,
                                rtol=1e-6)
-    # bare tm= without the kwarg tunnel is accepted silently
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        state2, _ = beam_search(logits_fn, None, B, M, L, tm=tm)
-    np.testing.assert_array_equal(np.asarray(state2.tokens), want_tokens)
-    with pytest.raises(TypeError, match="not both"):
-        beam_search(logits_fn, None, B, M, L, DecodePolicy.static(tm), tm=tm)
-    with pytest.raises(TypeError, match="bake"):
-        beam_search(logits_fn, None, B, M, L, DecodePolicy.static(tm),
-                    impl="pallas")
+    for legacy in ({"tm": tm}, {"impl": "xla"}, {"fused": True}):
+        with pytest.raises(TypeError):
+            beam_search(logits_fn, None, B, M, L, **legacy)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,124 @@
+"""Direct unit tests for the KV cache layer (ring, slot writes, paged pools).
+
+The ring/advance semantics were previously only exercised indirectly through
+full decode runs; these pin them at the function level — including the
+wraparound path and the decode_step/attention slot agreement that used to be
+derived independently in two places.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import kvcache as kv
+
+
+# ---------------------------------------------------------------------------
+# advance_positions: ring wraparound + linear clamp
+# ---------------------------------------------------------------------------
+def test_advance_positions_ring_wraparound():
+    n_slots = 4
+    slot_pos = jnp.full((n_slots,), -1, jnp.int32)
+    for pos in range(11):
+        slot_pos, slot = kv.advance_positions(
+            slot_pos, jnp.asarray(pos, jnp.int32), n_slots, ring=True)
+        assert int(slot) == pos % n_slots
+        assert int(slot_pos[pos % n_slots]) == pos
+    # after wrapping, every slot holds the latest position that mapped to it
+    want = [8, 9, 10, 7]  # pos % 4 -> slot; last writers of each slot
+    assert slot_pos.tolist() == want
+
+
+def test_advance_positions_linear_clamps_at_last_slot():
+    n_slots = 4
+    slot_pos = jnp.arange(n_slots, dtype=jnp.int32)
+    for pos in (2, 3, 4, 9):
+        _, slot = kv.advance_positions(
+            slot_pos, jnp.asarray(pos, jnp.int32), n_slots, ring=False)
+        assert int(slot) == min(pos, n_slots - 1)
+
+
+# ---------------------------------------------------------------------------
+# write_slot: only the target slot changes; values are dtype-cast
+# ---------------------------------------------------------------------------
+def test_write_slot_isolation_and_cast():
+    B, S, H, D = 2, 5, 3, 4
+    base = jnp.arange(B * S * H * D, dtype=jnp.bfloat16).reshape(B, S, H, D)
+    new = jnp.full((B, 1, H, D), 2.5, jnp.float32)
+    out = kv.write_slot(base, new, jnp.asarray(2, jnp.int32))
+    assert out.dtype == base.dtype
+    np.testing.assert_array_equal(
+        np.asarray(out[:, [0, 1, 3, 4]], np.float32),
+        np.asarray(base[:, [0, 1, 3, 4]], np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(out[:, 2], np.float32),
+        np.full((B, H, D), 2.5, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# cache constructors
+# ---------------------------------------------------------------------------
+def test_init_kv_cache_ring_flag_semantics():
+    c = kv.init_kv_cache(2, 1, max_len=16, n_kv_heads=2, head_dim=4,
+                         window=8)
+    assert c.ring and c.k.shape[2] == 8
+    c = kv.init_kv_cache(2, 1, max_len=6, n_kv_heads=2, head_dim=4,
+                         window=8)
+    assert not c.ring and c.k.shape[2] == 6  # window never reached
+    c = kv.init_kv_cache(2, 1, max_len=6, n_kv_heads=2, head_dim=4)
+    assert not c.ring and c.k.shape[2] == 6
+    assert c.slot_pos.tolist() == [-1] * 6 and int(c.pos) == 0
+
+
+def test_init_mla_cache_shapes():
+    c = kv.init_mla_cache(3, 2, max_len=7, kv_lora_rank=8, rope_dim=4,
+                          dtype=jnp.float32)
+    assert c.c_kv.shape == (3, 2, 7, 8)
+    assert c.k_rope.shape == (3, 2, 7, 4)
+    assert c.slot_pos.shape == (7,) and c.slot_pos.tolist() == [-1] * 7
+    assert int(c.pos) == 0
+
+
+# ---------------------------------------------------------------------------
+# paged pools
+# ---------------------------------------------------------------------------
+def test_pages_for():
+    assert kv.pages_for(0, 4) == 0
+    assert kv.pages_for(1, 4) == 1
+    assert kv.pages_for(4, 4) == 1
+    assert kv.pages_for(5, 4) == 2
+
+
+def test_scatter_gather_round_trip_exact_width():
+    rng = np.random.default_rng(0)
+    nl, B, S, H, D, ps = 2, 3, 6, 2, 4, 4  # S=6 needs 2 pages of 4
+    n_per = kv.pages_for(S, ps)
+    pool, _ = kv.init_page_pool(nl, 1 + B * n_per, ps, H, D)
+    rows = jnp.asarray(rng.standard_normal((nl, B, S, H, D)), jnp.float32)
+    page_ids = jnp.arange(1, 1 + B * n_per, dtype=jnp.int32).reshape(B, n_per)
+    pool = kv.scatter_pages(pool, rows, page_ids)
+    got = kv.gather_pages(pool[0], page_ids, S)
+    # exact hist_len slice: page-granule padding never comes back
+    assert got.shape == (B, S, H, D)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows[0]))
+
+
+def test_gather_pages_null_page_reads_zeros():
+    pool, _ = kv.init_page_pool(1, 4, 4, 2, 4)
+    table = jnp.zeros((2, 1), jnp.int32)  # all slots -> NULL page
+    got = kv.gather_pages(pool[0], table, 3)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_shared_page_is_stored_once():
+    """Two slots pointing at the same page read identical storage."""
+    nl, ps, H, D = 1, 4, 2, 3
+    pool, _ = kv.init_page_pool(nl, 3, ps, H, D)
+    rows = jnp.asarray(
+        np.random.default_rng(1).standard_normal((nl, 1, 4, H, D)),
+        jnp.float32)
+    pool = kv.scatter_pages(pool, rows, jnp.asarray([[1]], jnp.int32))
+    table = jnp.asarray([[1], [1]], jnp.int32)
+    got = kv.gather_pages(pool[0], table, 4)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(got[1]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(rows[0, 0]))
