@@ -22,6 +22,8 @@ Public surface:
   * ``EnvelopeOverflow``    — a refresh outgrew the capacity envelope (the
                               registry turns this into a cold regrow swap).
   * ``freshness_window`` / ``category_allowlist`` — built-in predicates.
+  * ``TieredTrie`` / ``TriePrefetcher`` / ``tiered_beam_search`` — HBM/host
+                              tiering for 100M+-SID catalogs (DESIGN.md §11).
 """
 from repro.constraints.refresh import AsyncRefresher, TrieSource
 from repro.constraints.registry import (
@@ -33,6 +35,11 @@ from repro.constraints.registry import (
     synthetic_catalog,
 )
 from repro.constraints.store import ConstraintStore, EnvelopeOverflow
+from repro.constraints.tiering import (
+    TieredTrie,
+    TriePrefetcher,
+    tiered_beam_search,
+)
 
 __all__ = [
     "ConstraintStore",
@@ -45,4 +52,7 @@ __all__ = [
     "freshness_window",
     "category_allowlist",
     "synthetic_catalog",
+    "TieredTrie",
+    "TriePrefetcher",
+    "tiered_beam_search",
 ]

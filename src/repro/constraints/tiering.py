@@ -1,0 +1,349 @@
+"""HBM/host tiering for 100M+-SID tries (DESIGN.md §11).
+
+A 100M-SID catalog's deep trie levels dominate the constraint footprint
+(``K1 * min(V^l, |C|)`` bytes per level, paper Appendix B) while serving
+touches only ``B*M`` of their rows per step.  This module splits the
+canonical CSR slab at a level boundary:
+
+  * **hot tier** — the dense band plus the first sparse levels stay
+    device-resident; decode steps below the boundary run the ordinary
+    :class:`~repro.decoding.DecodePolicy` (VNTK, candidate-topk, compressed
+    slab — all unchanged, on a slab truncated to the hot prefix).  The
+    level-major edge layout (``core.trie.LevelBlocks``) is what makes the
+    truncation a single slice.
+  * **cold tier** — deep levels live in host memory as numpy arrays.  For a
+    cold step, the surviving beam nodes (known at the previous step's
+    boundary) drive an async host gather of each beam's speculative
+    ``(bmax, 2)`` edge burst — ``B*M*bmax`` entries, independent of catalog
+    size — which overlaps the decoder's logits computation and lands on
+    device as a pregathered slab for :func:`vntk_pregathered`.
+
+Bit-identity: the host gather reproduces exactly the speculative window the
+device kernel would have read (zero-filled out-of-range, like the oracle's
+``mode="fill"`` gather), and :func:`vntk_pregathered` is the reference
+scatter minus the table lookup — so tiered decoding matches
+:func:`~repro.core.beam_search.beam_search` on the untiered policy bit for
+bit (asserted in ``tests/test_tiering.py``).
+
+The capacity model for the split lives in
+:func:`repro.core.memory_model.plan_tiers`; :meth:`TieredTrie.tier_bytes`
+reports the realized footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trie import LevelBlocks, infer_level_blocks
+from repro.core.transition_matrix import TransitionMatrix
+from repro.core.vntk import NEG_INF
+
+__all__ = [
+    "TieredTrie",
+    "TriePrefetcher",
+    "vntk_pregathered",
+    "tiered_beam_search",
+]
+
+
+@partial(jax.jit, static_argnames=("vocab",))
+def vntk_pregathered(log_probs, gathered, lens, vocab: int):
+    """Phases 2-4 of Alg. 2 on a pregathered speculative slab.
+
+    ``gathered`` is the ``(nb, bmax, 2)`` stacked ``[token, next_state]``
+    burst the host prefetcher staged (zero-filled outside each row's
+    window) and ``lens`` the per-row child counts; the math below is
+    :func:`~repro.core.vntk.vntk_reference_scatter` with the device-side
+    table gather removed, so outputs are bit-identical to the untiered
+    mask step.
+    """
+    V = vocab
+    batch_shape = log_probs.shape[:-1]
+    lp_flat = log_probs.reshape(-1, V)
+    nb, bmax, _ = gathered.shape
+    offsets = jnp.arange(bmax, dtype=jnp.int32)
+    valid = offsets[None, :] < lens.reshape(-1)[:, None]
+    cols = gathered[:, :, 0]
+    nxt = jnp.where(valid, gathered[:, :, 1], 0)
+    scatter_idx = jnp.where(valid, cols, V)
+    rows = jnp.arange(nb)[:, None]
+    cand_lp = jnp.take_along_axis(lp_flat, jnp.clip(cols, 0, V - 1), axis=1)
+    masked = jnp.full((nb, V + 1), NEG_INF, dtype=log_probs.dtype)
+    masked = masked.at[rows, scatter_idx].set(
+        jnp.where(valid, cand_lp, NEG_INF))[:, :V]
+    next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
+    next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
+    return (masked.reshape(batch_shape + (V,)),
+            next_dense.reshape(batch_shape + (V,)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredTrie:
+    """Hot/cold split of a single TransitionMatrix at a level boundary.
+
+    ``hot_steps`` is the first COLD decode step: steps ``< hot_steps`` are
+    served by the device-resident policy, steps ``>= hot_steps`` by the
+    host tier.  ``hot_steps == sid_length`` degenerates to fully-resident.
+    """
+
+    tm: TransitionMatrix  # the full matrix the split was derived from
+    blocks: LevelBlocks
+    hot_steps: int
+    cold_base: int  # first cold edge index (== hot edge-prefix length)
+    edges_cold: np.ndarray  # (E - cold_base, 2) int32, HOST memory
+    row_pointers_host: np.ndarray  # (S+1,) HOST copy driving the prefetch
+
+    @classmethod
+    def from_matrix(
+        cls,
+        tm: TransitionMatrix,
+        *,
+        hot_steps: Optional[int] = None,
+        hbm_budget: Optional[int] = None,
+    ) -> "TieredTrie":
+        """Split ``tm`` so steps ``>= hot_steps`` read from host memory.
+
+        With ``hot_steps=None`` and an ``hbm_budget`` (bytes), picks the
+        deepest boundary whose device bytes (dense tables + row pointers +
+        hot edge prefix) fit; with neither, everything stays hot.
+        """
+        if tm.is_stacked:
+            raise NotImplementedError(
+                "tiering splits a single TransitionMatrix; tier each "
+                "ConstraintStore member before stacking"
+            )
+        L = tm.sid_length
+        d = min(tm.dense_d, L)
+        rp = np.asarray(tm.row_pointers)
+        edges = np.asarray(tm.edges)
+        blocks = infer_level_blocks(
+            rp, edges, n_states=tm.n_states, n_edges=tm.n_edges,
+            sid_length=L, dense_d=tm.dense_d, vocab_size=tm.vocab_size,
+        )
+        if hot_steps is None:
+            if hbm_budget is None:
+                hot_steps = L
+            else:
+                fixed = tm.nbytes() - edges.nbytes  # dense tables + rp
+                hot_steps = d
+                for s in range(d, L):
+                    prefix = int(blocks.edge_offsets[s + 1]) * 8
+                    if fixed + prefix > hbm_budget:
+                        break
+                    hot_steps = s + 1
+        hot_steps = max(d, min(int(hot_steps), L))
+        cold_base = int(blocks.edge_offsets[hot_steps])
+        return cls(
+            tm=tm,
+            blocks=blocks,
+            hot_steps=hot_steps,
+            cold_base=cold_base,
+            edges_cold=np.ascontiguousarray(
+                edges[cold_base: tm.n_edges], dtype=np.int32
+            ),
+            row_pointers_host=np.asarray(rp, dtype=np.int64),
+        )
+
+    def hot_policy(self, *, impl: str = "xla", topk: bool = True,
+                   compressed: bool = False):
+        """DecodePolicy for the hot steps, its edge slab cut at the boundary.
+
+        Built from the full matrix (so the compressed slab, plan, and
+        static metadata are the canonical ones), then every backend's
+        ``edges`` / ``tok_delta`` leaf is sliced to the hot prefix — the
+        level-major layout guarantees steps ``< hot_steps`` never index
+        past it, and the XLA references zero-fill any speculative
+        over-read.  Pallas DMA has no out-of-range story, so the tiered
+        driver is XLA-only.
+        """
+        from repro.decoding.backends import StaticBackend
+        from repro.decoding.policy import DecodePolicy
+
+        if impl != "xla":
+            raise ValueError(
+                "tiered decoding drives the XLA references; impl='pallas' "
+                "would DMA past the truncated hot slab"
+            )
+        pol = DecodePolicy.static(
+            self.tm, impl=impl, fused=False, topk=topk,
+            compressed=compressed,
+        )
+        cut = max(self.cold_base, 1)  # keep a non-empty gather axis
+
+        def trunc(b):
+            if not isinstance(b, StaticBackend):
+                return b
+            tm2 = dataclasses.replace(b.tm, edges=b.tm.edges[:cut])
+            slab2 = (dataclasses.replace(
+                b.slab, tok_delta=b.slab.tok_delta[:cut])
+                if b.slab is not None else None)
+            return dataclasses.replace(b, tm=tm2, slab=slab2)
+
+        return dataclasses.replace(
+            pol, backends=tuple(trunc(b) for b in pol.backends)
+        )
+
+    def tier_bytes(self) -> dict:
+        """Realized footprint of the split (cf. ``memory_model.plan_tiers``)."""
+        edges_nb = int(np.asarray(self.tm.edges).nbytes)
+        hot_edges = int(self.cold_base) * 8
+        fixed = self.tm.nbytes() - edges_nb
+        return dict(
+            hot_steps=int(self.hot_steps),
+            cold_base=int(self.cold_base),
+            hbm_bytes=int(fixed + hot_edges),
+            host_bytes=int(self.edges_cold.nbytes),
+        )
+
+    def gather_cold(self, nodes: np.ndarray, step: int):
+        """Host-side speculative burst for a cold step's beam nodes.
+
+        Returns ``(gathered (nb, bmax, 2) int32, lens (nb,) int32)`` —
+        exactly the window the device oracle's ``mode="fill"`` gather
+        would read (zeros outside the slab), so the downstream scatter is
+        bit-identical.
+        """
+        if step < self.hot_steps:
+            raise ValueError(f"step {step} is hot (< {self.hot_steps})")
+        bmax = max(self.tm.bmax_for_step(step), 1)
+        n = np.asarray(nodes, dtype=np.int64).reshape(-1)
+        rp = self.row_pointers_host
+        starts = rp[n]
+        lens = rp[n + 1] - starts
+        idx = starts[:, None] + np.arange(bmax, dtype=np.int64)[None, :]
+        rel = idx - self.cold_base
+        n_cold = self.edges_cold.shape[0]
+        in_range = (rel >= 0) & (rel < n_cold)
+        g = self.edges_cold[np.clip(rel, 0, max(n_cold - 1, 0))]
+        g[~in_range] = 0
+        return g.astype(np.int32), lens.astype(np.int32)
+
+
+class TriePrefetcher:
+    """Async host->device staging of cold-tier bursts (DESIGN.md §11).
+
+    One background worker overlaps the host gather + transfer with the
+    decoder's logits computation: the nodes surviving step ``t-1`` fully
+    determine step ``t``'s speculative window, so the prefetch is issued
+    the moment the previous beam advance is *dispatched* (JAX's async
+    dispatch means the worker's ``np.asarray(nodes)`` blocks only until
+    that one array materializes, not the whole step).
+    """
+
+    def __init__(self, tiered: TieredTrie):
+        self.tiered = tiered
+        self._pool = ThreadPoolExecutor(max_workers=1)
+
+    def prefetch(self, nodes, step: int):
+        """Stage the burst for ``nodes`` at cold ``step``; returns a future
+        resolving to device arrays ``(gathered, lens)``."""
+        def work():
+            g, lens = self.tiered.gather_cold(np.asarray(nodes), step)
+            return jax.device_put(g), jax.device_put(lens)
+
+        return self._pool.submit(work)
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def tiered_beam_search(
+    logits_fn,
+    carry,
+    batch_size: int,
+    beam_size: int,
+    length: int,
+    tiered: TieredTrie,
+    *,
+    policy=None,
+    prefetcher: Optional[TriePrefetcher] = None,
+):
+    """Constrained beam search over a tiered trie (Alg. 1, host cold tier).
+
+    Hot steps run ``policy`` (default: ``tiered.hot_policy()``) exactly as
+    :func:`~repro.core.beam_search.beam_search` would; cold steps consume
+    the prefetcher's pregathered slab through :func:`vntk_pregathered`.
+    The loop is a host loop (the cold gather is host work), so it cannot
+    sit under one ``jax.jit`` — each step's device math is jitted
+    per-level like the eager search.  Returns ``(BeamState, carry)``,
+    bit-identical to the untiered search.
+    """
+    from repro.core.beam_search import BeamState, _init_state
+
+    if policy is None:
+        policy = tiered.hot_policy()
+    own_prefetcher = prefetcher is None
+    if own_prefetcher:
+        prefetcher = TriePrefetcher(tiered)
+    B, M = batch_size, beam_size
+    state = _init_state(B, M, length)
+    pending = None  # in-flight prefetch for the next cold step
+    try:
+        for step in range(length):
+            last = (state.tokens[:, :, step - 1] if step > 0
+                    else jnp.zeros((B, M), jnp.int32))
+            logits, carry = logits_fn(carry, last, step)
+            V = logits.shape[-1]
+            batch_ix = jnp.arange(B)[:, None]
+            if step < tiered.hot_steps:
+                if policy.supports_topk_at(step):
+                    C = policy.candidate_width(M, step)
+                    c_lp, c_tok, c_next = policy.step_topk(
+                        logits, state.nodes, step, C)
+                    total = state.scores[:, :, None] + c_lp
+                    top_scores, top_idx = jax.lax.top_k(
+                        total.reshape(B, M * C), M)
+                    beam_idx = top_idx // C
+                    token = jnp.take_along_axis(
+                        c_tok.reshape(B, M * C), top_idx, axis=1
+                    ).astype(jnp.int32)
+                    new_nodes = jnp.take_along_axis(
+                        c_next.reshape(B, M * C), top_idx, axis=1)
+                else:
+                    lp, next_dense = policy.step(logits, state.nodes, step)
+                    total = state.scores[:, :, None] + lp
+                    top_scores, top_idx = jax.lax.top_k(
+                        total.reshape(B, M * V), M)
+                    beam_idx = top_idx // V
+                    token = (top_idx % V).astype(jnp.int32)
+                    new_nodes = next_dense[batch_ix, beam_idx, token]
+            else:
+                if pending is None:  # first cold step: no overlap possible
+                    pending = prefetcher.prefetch(state.nodes, step)
+                gathered, lens = pending.result()
+                pending = None
+                lp_norm = jax.nn.log_softmax(
+                    logits.astype(jnp.float32), axis=-1)
+                lp, next_dense = vntk_pregathered(lp_norm, gathered, lens, V)
+                next_dense = next_dense.reshape(B, M, V)
+                total = state.scores[:, :, None] + lp.reshape(B, M, V)
+                top_scores, top_idx = jax.lax.top_k(
+                    total.reshape(B, M * V), M)
+                beam_idx = top_idx // V
+                token = (top_idx % V).astype(jnp.int32)
+                new_nodes = next_dense[batch_ix, beam_idx, token]
+
+            new_tokens = state.tokens[batch_ix, beam_idx]
+            new_tokens = new_tokens.at[:, :, step].set(token)
+            state = BeamState(
+                tokens=new_tokens, scores=top_scores, nodes=new_nodes)
+            if step + 1 >= tiered.hot_steps and step + 1 < length:
+                # overlap: next step's window depends only on these nodes
+                pending = prefetcher.prefetch(state.nodes, step + 1)
+    finally:
+        if own_prefetcher:
+            prefetcher.close()
+    return state, carry

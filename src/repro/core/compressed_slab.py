@@ -1,0 +1,149 @@
+"""Delta-compressed CSR edge slab for 100M+-SID catalogs (DESIGN.md §11).
+
+The uncompressed stacked CSR spends 8 B per edge: an int32 token column and
+an int32 next state.  Both are redundant under the canonical builder layout
+(:func:`repro.core.trie.infer_level_blocks`):
+
+  * **tokens** are strictly ascending within a row, so each edge stores the
+    delta to its left neighbour — the row start keeps the absolute token.
+    Deltas are bounded by ``vocab_size - 1``, so any vocab ``<= 32768`` fits
+    int16 and the column array halves;
+  * **next states** are consecutive over each level's edge block
+    (``dst[e] = e + base[level]``), so the whole next-state array collapses
+    to an O(L) per-level base table.
+
+Per-node bytes drop from 12 (4 rowptr + 4 token + 4 next) to 6
+(4 rowptr + 2 delta) — a 50% slab cut, 2x that of a 4x-larger vocab's
+next-state savings alone.  Decompression is one int32 cumsum over the
+speculative burst (which always begins at a row start), fused into the
+VNTK DMA wave: XLA oracles in :mod:`repro.core.vntk`
+(``vntk_compressed_*``), Pallas kernels in :mod:`repro.kernels.vntk`.
+Outputs are bit-identical to the uncompressed path — garbage beyond a
+row's end decompresses to garbage exactly like the uncompressed
+speculative over-read, and every consumer masks it with ``iota < n_child``.
+
+A slab that does not satisfy the canonical layout (hand-built arrays,
+corruption) raises at construction; there is no silent fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trie import infer_level_blocks
+
+__all__ = ["CompressedSlab", "INT16_MAX_VOCAB"]
+
+# Largest vocab whose tokens/deltas (<= V-1) fit an int16 delta slab.
+INT16_MAX_VOCAB = 32768
+
+
+def _delta_encode(row_pointers, edges, *, n_states, n_edges, sid_length,
+                  dense_d, vocab_size, pad_to, dtype) -> tuple:
+    """(tok_delta (pad_to,), level_base (L,)) for one member, verified."""
+    rp = np.asarray(row_pointers, dtype=np.int64)
+    eg = np.asarray(edges)
+    blocks = infer_level_blocks(
+        rp, eg, n_states=n_states, n_edges=n_edges, sid_length=sid_length,
+        dense_d=dense_d, vocab_size=vocab_size,
+    )
+    E = int(n_edges)
+    out = np.zeros(pad_to, dtype=dtype)
+    if E:
+        tok = eg[:E, 0].astype(np.int64)
+        mark = np.zeros(E + 1, dtype=bool)
+        mark[rp[:n_states]] = True  # every row's first edge keeps the absolute
+        d = tok.copy()
+        d[1:] = np.where(mark[1:E], tok[1:], tok[1:] - tok[:-1])
+        # round-trip check: segment cumsum (the kernel decode) must recover
+        # the tokens exactly — this is the whole bit-identity contract
+        starts = np.nonzero(mark[:E])[0]
+        gov = starts[np.searchsorted(starts, np.arange(E), side="right") - 1]
+        c = np.cumsum(d)
+        if not np.array_equal(c - (c[gov] - d[gov]), tok):
+            raise ValueError("delta encoding failed round-trip verification")
+        out[:E] = d.astype(dtype)
+    return out, blocks.base.astype(np.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompressedSlab:
+    """Device-resident compressed edge slab (single matrix or stacked store).
+
+    A frozen pytree designed to ride next to its TransitionMatrix /
+    ConstraintStore inside a jitted decode step: leaf shapes and dtypes are
+    functions of the envelope only, so a registry hot-swap that recomputes
+    the slab never changes the treedef (zero-recompile contract, §4).
+    """
+
+    # --- device arrays (pytree leaves) ---
+    tok_delta: jax.Array  # (E+pad,) or (K, E+pad) int16|int32 delta tokens
+    level_base: jax.Array  # (L,) or (K, L) int32: next = edge_idx + base[step]
+    # --- static metadata ---
+    vocab_size: int = dataclasses.field(metadata=dict(static=True))
+    sid_length: int = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_matrix(cls, tm) -> "CompressedSlab":
+        """Compress a single TransitionMatrix-like object (duck-typed:
+        ``row_pointers``/``edges`` + the usual static metadata)."""
+        dtype = np.int16 if tm.vocab_size <= INT16_MAX_VOCAB else np.int32
+        tok, base = _delta_encode(
+            tm.row_pointers, tm.edges, n_states=tm.n_states,
+            n_edges=tm.n_edges, sid_length=tm.sid_length, dense_d=tm.dense_d,
+            vocab_size=tm.vocab_size, pad_to=tm.edges.shape[-2], dtype=dtype,
+        )
+        return cls(tok_delta=jnp.asarray(tok), level_base=jnp.asarray(base),
+                   vocab_size=int(tm.vocab_size),
+                   sid_length=int(tm.sid_length))
+
+    @classmethod
+    def from_store(cls, store) -> "CompressedSlab":
+        """Compress every member of a stacked ConstraintStore.
+
+        Members share one capacity envelope; each member's real
+        ``n_states``/``n_edges`` prefix is compressed independently and the
+        delta slab zero-padded to the envelope (zero deltas decompress to a
+        constant run that the ``iota < n_child`` sanitization never admits —
+        envelope padding stays semantically invisible, §4).
+        """
+        K = store.num_sets
+        E = store.edges.shape[-2]
+        dtype = np.int16 if store.vocab_size <= INT16_MAX_VOCAB else np.int32
+        toks = np.zeros((K, E), dtype=dtype)
+        bases = np.zeros((K, store.sid_length), dtype=np.int32)
+        for k in range(K):
+            m = store.member(k)
+            toks[k], bases[k] = _delta_encode(
+                m.row_pointers, m.edges, n_states=m.n_states,
+                n_edges=m.n_edges, sid_length=m.sid_length,
+                dense_d=m.dense_d, vocab_size=m.vocab_size, pad_to=E,
+                dtype=dtype,
+            )
+        return cls(tok_delta=jnp.asarray(toks), level_base=jnp.asarray(bases),
+                   vocab_size=int(store.vocab_size),
+                   sid_length=int(store.sid_length))
+
+    @classmethod
+    def build(cls, obj) -> "CompressedSlab":
+        """Compress a matrix or store by shape (stacked iff ``is_stacked``)."""
+        return (cls.from_store(obj) if getattr(obj, "is_stacked", False)
+                else cls.from_matrix(obj))
+
+    # ------------------------------------------------------------------
+    @property
+    def is_stacked(self) -> bool:
+        return self.level_base.ndim == 2
+
+    def base_for_step(self, step: int) -> jax.Array:
+        """Next-state base at decode step ``step`` (scalar, or (K,) stacked)."""
+        return self.level_base[..., step].astype(jnp.int32)
+
+    def nbytes(self) -> int:
+        return (self.tok_delta.size * self.tok_delta.dtype.itemsize
+                + self.level_base.size * self.level_base.dtype.itemsize)

@@ -4,9 +4,14 @@
 
     U_max = (1/8 + K2) |V|^d  +  K1 * sum_{l=d+1..L} min(|V|^l, |C|)
 
-and ``capacity_rule_of_thumb`` reproduces the "~90 MB per 1M constraints"
-planning rule of §B.3.  ``measure`` reports the *actual* bytes of a built
-TransitionMatrix so tests can assert actual <= U_max (the paper observes
+and ``capacity_rule_of_thumb`` is the §B.3 planning rule ("~90 MB per 1M
+constraints" at the paper's V=2048, L=8, d=2 setting), evaluated as
+``u_max`` at the requested catalog size directly: the dense term
+``(1/8+K2)|V|^d`` does not scale with |C|, so the old
+``u_max(1M) * |C|/1M`` extrapolation overcounted it 10x at 10M SIDs and
+buried the true per-item cost at 10k.  ``measure`` reports the *actual*
+bytes of a built TransitionMatrix (or any trie-like object exposing the
+same fields) so tests can assert actual <= U_max (the paper observes
 <=75% utilization in production due to prefix clustering).
 
 ``decode_step_traffic`` models the per-step HBM bytes the constraint stage
@@ -14,14 +19,23 @@ moves on the two decode paths (DESIGN.md §8): the dense path writes two full
 vocab-aligned ``(B*M, V)`` tensors (masked log-probs + next-state map) and
 re-reads them for the ``M*V`` top-k; the candidate-compressed path writes
 three ``(B*M, C)`` tensors with ``C = min(round_up(M, lane), V)`` — constant
-in ``V``, which is what flattens the fig3 vocab-scaling curves.
+in ``V``, which is what flattens the fig3 vocab-scaling curves.  The lane
+comes from :func:`repro.core.vntk.topk_lane` so the table quotes the width
+the kernel actually allocates (128 Pallas / 8 XLA), not a private default.
+
+Large-catalog extensions (DESIGN.md §11): ``k1_compressed`` /
+``u_max_compressed`` model the delta-encoded slab (per-node bytes drop from
+12 to 4 + tok, tok = 2 where the vocab fits int16 deltas — the next-state
+array vanishes entirely because destinations are consecutive per level),
+and ``plan_tiers`` models an HBM/host split at a level boundary with the
+per-step prefetch staging cost.
 """
 from __future__ import annotations
 
-from repro.core.transition_matrix import TransitionMatrix
-from repro.core.vntk import candidate_width
+from repro.core.vntk import candidate_width, topk_lane
 
 __all__ = ["u_max", "capacity_rule_of_thumb", "measure", "decode_step_traffic",
+           "k1_compressed", "u_max_compressed", "plan_tiers",
            "K1_DEFAULT", "K2_DEFAULT"]
 
 # K1: bytes per CSR trie node. The paper counts 12 B for the three CSR arrays
@@ -55,9 +69,36 @@ def capacity_rule_of_thumb(
     sid_length: int = 8,
     dense_d: int = 2,
 ) -> float:
-    """Planning estimate in bytes (the §B.3 '90 MB per 1M items' rule)."""
-    per_million = u_max(vocab_size, 1_000_000, sid_length, dense_d)
-    return per_million * (n_constraints / 1_000_000)
+    """Planning estimate in bytes (the §B.3 rule, ~90 MB at 1M items).
+
+    Evaluates the closed form at ``n_constraints`` directly.  The dense
+    ``(1/8+K2)|V|^d`` term is a fixed cost independent of catalog size;
+    only the sparse ``K1 * sum min(|V|^l, |C|)`` levels scale with |C|.
+    """
+    return float(u_max(vocab_size, n_constraints, sid_length, dense_d))
+
+
+def k1_compressed(vocab_size: int) -> int:
+    """Per-node bytes of the delta-encoded slab (DESIGN.md §11).
+
+    4 B row pointer + the edge token delta (2 B when every delta fits
+    int16, i.e. ``vocab_size <= 32768``, else 4 B).  No next-state bytes:
+    destination states are consecutive over each level's edge block, so
+    ``next = edge_index + level_base[level]`` with an O(L) base table.
+    """
+    return 4 + (2 if vocab_size <= 32768 else 4)
+
+
+def u_max_compressed(
+    vocab_size: int,
+    n_constraints: int,
+    sid_length: int,
+    dense_d: int = 2,
+    k2: int = K2_DEFAULT,
+) -> int:
+    """``u_max`` under the compressed-slab encoding (same dense term)."""
+    return u_max(vocab_size, n_constraints, sid_length, dense_d,
+                 k1=k1_compressed(vocab_size), k2=k2)
 
 
 def decode_step_traffic(
@@ -66,7 +107,8 @@ def decode_step_traffic(
     beams: int,
     *,
     width: int | None = None,
-    lane: int = 8,
+    lane: int | None = None,
+    impl: str = "xla",
     lp_bytes: int = 4,
     idx_bytes: int = 4,
 ) -> dict:
@@ -83,11 +125,14 @@ def decode_step_traffic(
                     ``M*C`` lanes.
 
     ``width=None`` derives ``C`` from :func:`~repro.core.vntk.candidate_width`
-    with the given ``lane``.  Returns both totals plus their ratio — the
-    model the DESIGN.md §8 table quotes and ``tests/test_memory_model``
-    sanity-checks against array sizes.
+    at the lane the ``impl`` kernel tiles to (:func:`~repro.core.vntk
+    .topk_lane`: 128 Pallas, 8 XLA); pass ``lane=`` to override.  Returns
+    both totals plus their ratio — the model the DESIGN.md §8 table quotes
+    and ``tests/test_memory_model`` sanity-checks against array sizes.
     """
     nb = batch * beams
+    if lane is None:
+        lane = topk_lane(impl)
     C = candidate_width(beams, vocab_size, lane=lane) if width is None else width
     dense_write = nb * vocab_size * (lp_bytes + idx_bytes)
     dense_select_read = nb * vocab_size * lp_bytes
@@ -97,6 +142,7 @@ def decode_step_traffic(
     cand_total = cand_write + cand_select_read
     return dict(
         width=int(C),
+        lane=int(lane),
         dense_write_bytes=int(dense_write),
         dense_total_bytes=int(dense_total),
         candidate_write_bytes=int(cand_write),
@@ -105,23 +151,116 @@ def decode_step_traffic(
     )
 
 
-def measure(tm: TransitionMatrix) -> dict:
-    """Actual byte usage of a built TransitionMatrix, split by component."""
-    dense_bytes = (
-        tm.l0_mask_packed.size * tm.l0_mask_packed.dtype.itemsize
-        + tm.l0_states.size * tm.l0_states.dtype.itemsize
-        + tm.l1_mask_packed.size * tm.l1_mask_packed.dtype.itemsize
-        + tm.l1_states.size * tm.l1_states.dtype.itemsize
-    )
-    sparse_bytes = (
-        tm.row_pointers.size * tm.row_pointers.dtype.itemsize
-        + tm.edges.size * tm.edges.dtype.itemsize
-    )
+def _nbytes(arr) -> int:
+    """Bytes of an array-like; 0 for absent (None) tables."""
+    if arr is None:
+        return 0
+    return int(arr.size) * int(arr.dtype.itemsize)
+
+
+def measure(tm, slab=None) -> dict:
+    """Actual byte usage of a built trie, split by component.
+
+    ``tm`` is any object with ``row_pointers``/``edges`` plus the usual
+    scalar metadata — a :class:`TransitionMatrix`, a ``FlatTrie``, or a
+    duck-typed equivalent.  Dense-level tables are discovered by probing
+    ``l{i}_mask_packed`` / ``l{i}_states`` for every ``i``; absent (None)
+    tables — e.g. a ``dense_d=0`` trie, the continuous engine's default —
+    count zero bytes instead of crashing, and deeper dense bands are
+    summed without code changes.
+
+    ``slab`` (optional): a compressed slab for the same trie (DESIGN.md
+    §11).  When given, ``compressed_bytes`` reports the bytes of the
+    compressed representation (row pointers + delta tokens + level bases,
+    replacing ``edges``) and ``compression_ratio`` its win over the
+    uncompressed slab.
+    """
+    dense_bytes = 0
+    i = 0
+    while hasattr(tm, f"l{i}_mask_packed") or hasattr(tm, f"l{i}_states"):
+        dense_bytes += _nbytes(getattr(tm, f"l{i}_mask_packed", None))
+        dense_bytes += _nbytes(getattr(tm, f"l{i}_states", None))
+        i += 1
+    sparse_bytes = _nbytes(tm.row_pointers) + _nbytes(tm.edges)
     bound = u_max(tm.vocab_size, tm.n_constraints, tm.sid_length, tm.dense_d)
-    return dict(
+    out = dict(
         dense_bytes=int(dense_bytes),
         sparse_bytes=int(sparse_bytes),
         total_bytes=int(dense_bytes + sparse_bytes),
         u_max_bytes=int(bound),
         utilization=float((dense_bytes + sparse_bytes) / max(bound, 1)),
+    )
+    if slab is not None:
+        comp = (_nbytes(tm.row_pointers) + _nbytes(slab.tok_delta)
+                + _nbytes(slab.level_base))
+        out["compressed_bytes"] = int(comp)
+        out["compressed_total_bytes"] = int(dense_bytes + comp)
+        out["compression_ratio"] = float(sparse_bytes / max(comp, 1))
+    return out
+
+
+def plan_tiers(
+    vocab_size: int,
+    n_constraints: int,
+    sid_length: int,
+    dense_d: int = 2,
+    *,
+    hot_levels: int | None = None,
+    batch: int = 1,
+    beams: int = 10,
+    bmax: int | None = None,
+    compressed: bool = False,
+    hbm_budget: int | None = None,
+    k2: int = K2_DEFAULT,
+) -> dict:
+    """Model an HBM/host tier split of the sparse levels (DESIGN.md §11).
+
+    Levels ``< hot_levels`` (plus the dense band) stay HBM-resident; levels
+    ``>= hot_levels`` live in host memory and are prefetched per step as a
+    ``(B*M, bmax)`` staged slab driven by the surviving beam nodes.  With
+    ``hot_levels=None`` and an ``hbm_budget``, picks the deepest split
+    whose hot bytes fit the budget (falling back to the dense band + level
+    ``dense_d`` alone); with neither, everything is hot.
+
+    Returns per-level node capacities and the modeled ``hbm_bytes`` /
+    ``host_bytes`` / ``prefetch_bytes_per_step`` — finite for any catalog
+    size, which is the whole point: a 100M-SID trie that cannot fit HBM
+    still has a concrete, finite serving plan.
+    """
+    k1 = k1_compressed(vocab_size) if compressed else K1_DEFAULT
+    dense = int((0.125 + k2) * (vocab_size ** dense_d)) if dense_d > 0 else 0
+    # per-level node capacity, levels dense_d+1 .. L (paper Appendix B)
+    caps = {lvl: min(vocab_size ** lvl, n_constraints)
+            for lvl in range(dense_d + 1, sid_length + 1)}
+    level_bytes = {lvl: k1 * cap for lvl, cap in caps.items()}
+    levels = sorted(level_bytes)
+    if hot_levels is None:
+        if hbm_budget is None:
+            hot_levels = sid_length
+        else:
+            hot_levels = dense_d
+            acc = dense
+            for lvl in levels:
+                if acc + level_bytes[lvl] > hbm_budget:
+                    break
+                acc += level_bytes[lvl]
+                hot_levels = lvl
+    hot_levels = max(dense_d, min(int(hot_levels), sid_length))
+    hot_sparse = sum(b for lvl, b in level_bytes.items() if lvl <= hot_levels)
+    cold = sum(b for lvl, b in level_bytes.items() if lvl > hot_levels)
+    # staged slab: one speculative (token, next) burst per live beam; the
+    # prefetcher stages at most B*M rows of bmax edges per cold step
+    if bmax is None:
+        bmax = min(vocab_size, 128)
+    edge_entry = 2 if compressed and vocab_size <= 32768 else 8
+    staging = batch * beams * bmax * (8 if not compressed else edge_entry + 4)
+    return dict(
+        hot_levels=int(hot_levels),
+        dense_bytes=int(dense),
+        level_bytes={int(k): int(v) for k, v in level_bytes.items()},
+        hbm_bytes=int(dense + hot_sparse + staging),
+        host_bytes=int(cold),
+        prefetch_bytes_per_step=int(staging if cold else 0),
+        total_bytes=int(dense + hot_sparse + cold),
+        compressed=bool(compressed),
     )

@@ -27,7 +27,8 @@ from typing import Sequence
 import numpy as np
 
 __all__ = ["FlatTrie", "build_flat_trie", "pack_bits", "unpack_bits_word",
-           "sorted_unique_sids", "check_index_capacity"]
+           "sorted_unique_sids", "check_index_capacity", "LevelBlocks",
+           "infer_level_blocks"]
 
 
 def pack_bits(bits: np.ndarray) -> np.ndarray:
@@ -295,6 +296,116 @@ def build_flat_trie(
         trie.l1_mask_packed = pack_bits(l1_mask)
         trie.l1_states = l1_states
     return trie
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelBlocks:
+    """Per-level structure of a canonical CSR slab (DESIGN.md §11).
+
+    ``build_flat_trie`` emits edges level-major with, per level, consecutive
+    destination states (``dst[e] = e + base`` over the level's edge block)
+    and token-ascending rows.  This record captures that structure for a
+    bare ``(row_pointers, edges)`` pair — it is what the compressed slab
+    and the HBM/host tiering split both key on.
+
+    Indexing is by DECODE STEP ``s`` (source states at trie level ``s``):
+      * ``edge_offsets (L+1,)`` — edges consulted at step ``s`` occupy
+        ``[edge_offsets[s], edge_offsets[s+1])``; dense-band steps
+        (``s < dense_d``) have empty ranges and ``edge_offsets[L] == n_edges``.
+      * ``base (L,)`` — ``next_state = edge_index + base[s]`` for step-``s``
+        edges (0 for dense-band steps, which never read the CSR).
+      * ``state_offsets (L+2,)`` — first state id of each level (1 for the
+        trimmed dense levels, mirroring ``FlatTrie.level_offsets``).
+    """
+
+    edge_offsets: np.ndarray
+    base: np.ndarray
+    state_offsets: np.ndarray
+
+
+def infer_level_blocks(
+    row_pointers: np.ndarray,
+    edges: np.ndarray,
+    *,
+    n_states: int,
+    n_edges: int,
+    sid_length: int,
+    dense_d: int,
+    vocab_size: int | None = None,
+) -> LevelBlocks:
+    """Recover (and verify) the per-level block structure of a CSR slab.
+
+    Works on the bare arrays — a loaded :class:`TransitionMatrix` or a
+    :class:`ConstraintStore` member carries no ``level_offsets``, so the
+    blocks are re-derived from two structural facts of the canonical
+    builder output: states of one level are contiguous, and each level's
+    edges target exactly the next level's (consecutive) states.  Every
+    inferred property is then CHECKED against the arrays; a slab that was
+    not produced by the canonical builder (or was corrupted) raises
+    ``ValueError`` rather than silently decoding garbage.
+    """
+    L = int(sid_length)
+    d_eff = min(int(dense_d), L)
+    rp = np.asarray(row_pointers[: n_states + 1], dtype=np.int64)
+    E = int(n_edges)
+    edge_offsets = np.zeros(L + 1, dtype=np.int64)
+    base = np.zeros(L, dtype=np.int64)
+    state_offsets = np.ones(L + 2, dtype=np.int64)
+    if E == 0:
+        # fully-dense trie: leaves only, zero CSR edges
+        state_offsets[d_eff + 1:] = n_states
+        return LevelBlocks(edge_offsets, base, state_offsets)
+    tok = np.asarray(edges[:E, 0], dtype=np.int64)
+    dst = np.asarray(edges[:E, 1], dtype=np.int64)
+
+    # state-block bounds per level, starting at the first sparse level: the
+    # first edge's destination is the first state of the next level, and each
+    # block's out-degree equals the size of the block it feeds.
+    bounds = [1, int(dst[0])]
+    while bounds[-1] < n_states:
+        lo, hi = bounds[-2], bounds[-1]
+        if not (1 <= lo < hi <= n_states):
+            raise ValueError(
+                f"non-canonical CSR slab: level bounds {bounds} do not "
+                f"partition states [1, {n_states})")
+        n_out = int(rp[hi] - rp[lo])
+        if n_out <= 0:
+            raise ValueError(
+                "non-canonical CSR slab: empty intermediate level block")
+        bounds.append(hi + n_out)
+    if bounds[-1] != n_states or len(bounds) - 1 != L - d_eff + 1:
+        raise ValueError(
+            f"non-canonical CSR slab: inferred {len(bounds) - 1} level "
+            f"blocks over {bounds[-1]} states, expected {L - d_eff + 1} "
+            f"blocks over {n_states}")
+
+    for b in range(len(bounds) - 2):  # edge-bearing levels d_eff .. L-1
+        s = d_eff + b
+        e0, e1 = int(rp[bounds[b]]), int(rp[bounds[b + 1]])
+        edge_offsets[s] = e0
+        edge_offsets[s + 1:] = e1
+        base[s] = bounds[b + 1] - e0
+        if not np.array_equal(dst[e0:e1],
+                              np.arange(e0, e1, dtype=np.int64) + base[s]):
+            raise ValueError(
+                f"non-canonical CSR slab: step-{s} destinations are not "
+                f"consecutive (base {base[s]})")
+    edge_offsets[L] = E
+    for b, v in enumerate(bounds):  # bounds[b] = first state of level d_eff+b
+        state_offsets[d_eff + b] = v
+
+    # rows must be strictly token-ascending (delta encoding needs positive
+    # deltas; also what the §8 tie-break contract assumes)
+    if E > 1:
+        mark = np.zeros(E + 1, dtype=bool)
+        mark[rp[:-1]] = True
+        if not np.all((tok[1:] > tok[:-1]) | mark[1:E]):
+            raise ValueError(
+                "non-canonical CSR slab: row tokens are not strictly "
+                "ascending")
+    if tok.min() < 0 or (vocab_size is not None and tok.max() >= vocab_size):
+        raise ValueError("non-canonical CSR slab: edge tokens out of range")
+    return LevelBlocks(edge_offsets, base, state_offsets)
 
 
 def random_constraint_set(

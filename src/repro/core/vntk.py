@@ -20,6 +20,9 @@ from repro.core.transition_matrix import TransitionMatrix
 
 __all__ = [
     "NEG_INF",
+    "LANE_XLA",
+    "LANE_PALLAS",
+    "topk_lane",
     "candidate_width",
     "vntk_xla",
     "vntk_stacked_xla",
@@ -29,12 +32,28 @@ __all__ = [
     "vntk_stacked_topk_xla",
     "vntk_topk_reference",
     "vntk_stacked_topk_reference",
+    "vntk_compressed_reference",
+    "vntk_stacked_compressed_reference",
+    "vntk_compressed_topk_reference",
+    "vntk_stacked_compressed_topk_reference",
 ]
 
 NEG_INF = -1.0e10
 
+# Candidate-width lane rounding (DESIGN.md §8): the ONE place both the
+# kernels and the traffic model (`core.memory_model.decode_step_traffic`)
+# derive C's alignment from.  The Pallas kernel tiles its output block to
+# the TPU lane width; the XLA formulation only needs sublane rounding.
+LANE_PALLAS = 128
+LANE_XLA = 8
 
-def candidate_width(beams: int, vocab_size: int, lane: int = 8) -> int:
+
+def topk_lane(impl: str | None = "xla") -> int:
+    """Lane the candidate-topk output width is rounded to for ``impl``."""
+    return LANE_PALLAS if impl == "pallas" else LANE_XLA
+
+
+def candidate_width(beams: int, vocab_size: int, lane: int = LANE_XLA) -> int:
     """Per-beam candidate count ``C`` for the compressed decode step.
 
     ``C = min(round_up(M, lane), V)`` (DESIGN.md §8): a beam can contribute at
@@ -306,6 +325,159 @@ def vntk_stacked_topk_xla(
         log_probs, nodes, constraint_ids, store.row_pointers, store.edges,
         bmax, store.vocab_size, width,
     )
+
+
+# ---------------------------------------------------------------------------
+# Compressed-slab decode (DESIGN.md §11): delta tokens + per-level next base
+# ---------------------------------------------------------------------------
+def _expand_delta_slots(tok_delta, starts, lens, bmax, base):
+    """Reconstruct ``(cols, nxt, valid)`` from a delta slab's speculative burst.
+
+    ``tok_delta[e]`` holds the absolute token at a CSR row start and the
+    positive token delta elsewhere (rows are token-ascending), so a burst
+    that begins at ``starts`` decompresses with one int32 cumsum.  The next
+    state of edge ``e`` is ``e + base`` — the trie builder emits destination
+    states consecutively over each level's edge block, so the whole
+    next-state array collapses to one per-level base constant.  Slots past
+    a row's end decompress to garbage exactly like the uncompressed path's
+    speculative over-read; every consumer masks them with ``valid``.
+    """
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    idx = starts[:, None] + offsets[None, :]  # (nb, bmax) global edge index
+    deltas = jnp.take(
+        tok_delta, idx, axis=0, mode="fill", fill_value=0
+    ).astype(jnp.int32)
+    cols = jnp.cumsum(deltas, axis=1)
+    valid = offsets[None, :] < lens[:, None]
+    base = jnp.asarray(base, jnp.int32)
+    base = base[:, None] if base.ndim == 1 else base
+    nxt = jnp.where(valid, idx.astype(jnp.int32) + base, 0)
+    return cols, nxt, valid
+
+
+def vntk_compressed_reference(
+    log_probs: jax.Array,  # (..., V)
+    nodes: jax.Array,  # (...,) int32 current trie states
+    row_pointers: jax.Array,  # (S+1,)
+    tok_delta: jax.Array,  # (E+pad,) int16/int32 delta-encoded edge tokens
+    base,  # scalar or (nb,) int32: next_state = edge_index + base
+    bmax: int,
+    vocab_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 2 over the compressed slab — bit-identical to
+    :func:`vntk_reference_scatter` on the same trie (the XLA oracle for the
+    compressed Pallas DMA front)."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    nb = n_flat.shape[0]
+    starts = row_pointers[n_flat]
+    lens = row_pointers[n_flat + 1] - starts
+    cols, nxt, valid = _expand_delta_slots(tok_delta, starts, lens, bmax, base)
+    scatter_idx = jnp.where(valid, cols, V)
+    rows = jnp.arange(nb)[:, None]
+    cand_lp = jnp.take_along_axis(lp_flat, jnp.clip(cols, 0, V - 1), axis=1)
+    masked = jnp.full((nb, V + 1), NEG_INF, dtype=log_probs.dtype)
+    masked = masked.at[rows, scatter_idx].set(
+        jnp.where(valid, cand_lp, NEG_INF))[:, :V]
+    next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
+    next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
+    return (masked.reshape(batch_shape + (V,)),
+            next_dense.reshape(batch_shape + (V,)))
+
+
+def vntk_stacked_compressed_reference(
+    log_probs: jax.Array,
+    nodes: jax.Array,
+    constraint_ids: jax.Array,  # (...,) int32
+    row_pointers: jax.Array,  # (K, S+1)
+    tok_delta: jax.Array,  # (K, E) int16/int32
+    base_k: jax.Array,  # (K,) int32 per-member level base for this step
+    bmax: int,
+    vocab_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Stacked-store compressed decode (constraint-axis gather, shared math)."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    cid = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    nb = n_flat.shape[0]
+    starts = row_pointers[cid, n_flat]
+    lens = row_pointers[cid, n_flat + 1] - starts
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    idx = starts[:, None] + offsets[None, :]
+    deltas = tok_delta[cid[:, None], idx].astype(jnp.int32)
+    cols = jnp.cumsum(deltas, axis=1)
+    valid = offsets[None, :] < lens[:, None]
+    nxt = jnp.where(
+        valid, idx.astype(jnp.int32) + base_k[cid][:, None], 0)
+    scatter_idx = jnp.where(valid, cols, V)
+    rows = jnp.arange(nb)[:, None]
+    cand_lp = jnp.take_along_axis(lp_flat, jnp.clip(cols, 0, V - 1), axis=1)
+    masked = jnp.full((nb, V + 1), NEG_INF, dtype=log_probs.dtype)
+    masked = masked.at[rows, scatter_idx].set(
+        jnp.where(valid, cand_lp, NEG_INF))[:, :V]
+    next_dense = jnp.zeros((nb, V + 1), dtype=jnp.int32)
+    next_dense = next_dense.at[rows, scatter_idx].set(nxt)[:, :V]
+    return (masked.reshape(batch_shape + (V,)),
+            next_dense.reshape(batch_shape + (V,)))
+
+
+def vntk_compressed_topk_reference(
+    log_probs: jax.Array,
+    nodes: jax.Array,
+    row_pointers: jax.Array,
+    tok_delta: jax.Array,
+    base,
+    bmax: int,
+    vocab_size: int,
+    width: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Candidate-compressed step over the compressed slab: decompress the
+    burst, then the exact §8 dense-rank selection — bit-identical to
+    :func:`vntk_topk_reference`."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    starts = row_pointers[n_flat]
+    lens = row_pointers[n_flat + 1] - starts
+    cols, nxt, valid = _expand_delta_slots(tok_delta, starts, lens, bmax, base)
+    sc, tok, nx = _topk_from_candidates(lp_flat, cols, nxt, valid, width, V)
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nx.reshape(shp)
+
+
+def vntk_stacked_compressed_topk_reference(
+    log_probs: jax.Array,
+    nodes: jax.Array,
+    constraint_ids: jax.Array,
+    row_pointers: jax.Array,
+    tok_delta: jax.Array,
+    base_k: jax.Array,
+    bmax: int,
+    vocab_size: int,
+    width: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stacked compressed candidate-topk (the K-store twin)."""
+    V = vocab_size
+    batch_shape = nodes.shape
+    n_flat = nodes.reshape(-1)
+    cid = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    lp_flat = log_probs.reshape(-1, V)
+    starts = row_pointers[cid, n_flat]
+    lens = row_pointers[cid, n_flat + 1] - starts
+    offsets = jnp.arange(bmax, dtype=starts.dtype)
+    idx = starts[:, None] + offsets[None, :]
+    deltas = tok_delta[cid[:, None], idx].astype(jnp.int32)
+    cols = jnp.cumsum(deltas, axis=1)
+    valid = offsets[None, :] < lens[:, None]
+    nxt = jnp.where(valid, idx.astype(jnp.int32) + base_k[cid][:, None], 0)
+    sc, tok, nx = _topk_from_candidates(lp_flat, cols, nxt, valid, width, V)
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nx.reshape(shp)
 
 
 def vntk_stacked_reference_scatter(

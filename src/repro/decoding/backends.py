@@ -35,10 +35,12 @@ from repro.core.baselines import (
     HashBitmapBaseline,
     PPVBaseline,
 )
+from repro.core.compressed_slab import CompressedSlab
 from repro.core.transition_matrix import TransitionMatrix
 from repro.core.types import Impl
 from repro.core.vntk import (
     candidate_width,
+    topk_lane,
     vntk_stacked_topk_xla,
     vntk_stacked_xla,
     vntk_topk_xla,
@@ -169,11 +171,13 @@ def _dense_at(step: int, dense_d: int, levels: Levels, who: str) -> bool:
 def _topk_lane(impl: Impl) -> int:
     """Lane granularity for the candidate width ``C`` (DESIGN.md §8).
 
-    The Pallas kernel writes ``(nb, C)`` blocks, so ``C`` rounds to the TPU
-    lane width; the XLA oracle has no layout constraint and rounds to the
-    sublane only (keeping fuzz-scale vocabularies genuinely compressed).
+    Delegates to :func:`repro.core.vntk.topk_lane` — the single source the
+    kernels, this routing layer, and the §8 traffic model
+    (:func:`repro.core.memory_model.decode_step_traffic`) all share, so the
+    width the model quotes is the width the kernel actually allocates
+    (128 Pallas lanes; sublane-only 8 for the layout-free XLA oracle).
     """
-    return 128 if impl == "pallas" else 8
+    return topk_lane(impl)
 
 
 # ---------------------------------------------------------------------------
@@ -189,9 +193,17 @@ class StaticBackend:
     ``"auto"`` (route per step, the legacy one-backend-for-all-levels shape).
     ``impl`` picks the XLA formulation or the Pallas TPU kernel for sparse
     steps; ``fused`` opts into the fused masked-logsoftmax kernel.
+
+    ``slab`` (optional) is the delta-compressed edge slab of DESIGN.md §11:
+    when present, every sparse lookup routes through the compressed kernels
+    — the speculative burst moves the int16 delta tokens instead of the
+    ``(slot, 2)`` int32 pairs, bit-identical outputs — and a registry
+    hot-swap recomputes it alongside the matrix (same envelope, same
+    treedef, zero recompiles).
     """
 
     tm: TransitionMatrix
+    slab: Optional[CompressedSlab] = None
     impl: Impl = dataclasses.field(default="xla", metadata=dict(static=True))
     fused: bool = dataclasses.field(default=False, metadata=dict(static=True))
     levels: Levels = dataclasses.field(
@@ -229,6 +241,13 @@ class StaticBackend:
                     specs.tm, edges=PartitionSpec("model", None)
                 ),
             )
+            if self.slab is not None:
+                specs = dataclasses.replace(
+                    specs,
+                    slab=dataclasses.replace(
+                        specs.slab, tok_delta=PartitionSpec("model")
+                    ),
+                )
         return specs
 
     def mask_step(self, log_probs, nodes, step, *, prefix_tokens=None,
@@ -241,6 +260,14 @@ class StaticBackend:
                 return dense_mask.dense_lookup_l0(log_probs, self.tm)
             return dense_mask.dense_lookup_l1(log_probs, nodes, self.tm)
         bmax = max(self.tm.bmax_for_step(step), 1)
+        if self.slab is not None:
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            return kernel_ops.vntk_compressed(
+                log_probs, nodes, self.tm.row_pointers, self.slab.tok_delta,
+                self.slab.base_for_step(step), bmax, self.tm.vocab_size,
+                impl=self.impl,
+            )
         if self.impl == "pallas":
             from repro.kernels import ops as kernel_ops  # lazy: import cycle
 
@@ -255,8 +282,11 @@ class StaticBackend:
         """True when ONE mask call can serve rows at heterogeneous decode
         levels (continuous batching): needs an all-sparse index
         (``dense_d == 0``) so every level — including the root — resolves
-        through the CSR and node ids are globally unique across levels."""
-        return self.levels != "dense" and self.tm.dense_d == 0
+        through the CSR and node ids are globally unique across levels.
+        The compressed slab opts out: its next states derive from a
+        per-LEVEL base, so one call cannot serve mixed depths."""
+        return (self.levels != "dense" and self.tm.dense_d == 0
+                and self.slab is None)
 
     def level_free_mask(self, log_probs, nodes, *, constraint_ids=None):
         """Level-agnostic ``mask_step``: rows may sit at different trie
@@ -298,6 +328,12 @@ class StaticBackend:
         from repro.kernels import ops as kernel_ops
 
         bmax = max(self.tm.bmax_for_step(step), 1)
+        if self.slab is not None:
+            return kernel_ops.vntk_compressed(
+                logits, nodes, self.tm.row_pointers, self.slab.tok_delta,
+                self.slab.base_for_step(step), bmax, self.tm.vocab_size,
+                impl=self.impl, fused_logsoftmax=True,
+            )
         return kernel_ops.vntk_fused_logsoftmax(
             logits, nodes, self.tm.row_pointers, self.tm.edges, bmax,
             self.tm.vocab_size,
@@ -319,6 +355,14 @@ class StaticBackend:
                 f"row at dense step {step}; fix the policy plan"
             )
         bmax = max(self.tm.bmax_for_step(step), 1)
+        if self.slab is not None:
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            return kernel_ops.vntk_compressed_topk(
+                values, nodes, self.tm.row_pointers, self.slab.tok_delta,
+                self.slab.base_for_step(step), bmax, self.tm.vocab_size,
+                width, impl=self.impl, fused_logsoftmax=not normalized,
+            )
         if self.impl == "pallas":
             from repro.kernels import ops as kernel_ops  # lazy: import cycle
 
@@ -344,9 +388,13 @@ class StackedStaticBackend:
     the per-row ``constraint_ids``.  The store rides as a pytree leaf with
     swap-invariant static metadata, so a registry hot-swap never recompiles
     a jitted step holding this backend.
+
+    ``slab`` (optional) is the per-member delta-compressed edge slab
+    (DESIGN.md §11); see :class:`StaticBackend`.
     """
 
     store: ConstraintStore
+    slab: Optional[CompressedSlab] = None
     impl: Impl = dataclasses.field(default="xla", metadata=dict(static=True))
     fused: bool = dataclasses.field(default=False, metadata=dict(static=True))
     levels: Levels = dataclasses.field(
@@ -386,6 +434,13 @@ class StackedStaticBackend:
                     specs.store, edges=PartitionSpec(None, "model", None)
                 ),
             )
+            if self.slab is not None:
+                specs = dataclasses.replace(
+                    specs,
+                    slab=dataclasses.replace(
+                        specs.slab, tok_delta=PartitionSpec(None, "model")
+                    ),
+                )
         return specs
 
     def _require_ids(self, constraint_ids):
@@ -409,6 +464,15 @@ class StackedStaticBackend:
                 log_probs, nodes, self.store, constraint_ids=constraint_ids
             )
         bmax = max(self.store.bmax_for_step(step), 1)
+        if self.slab is not None:
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.vntk_compressed(
+                log_probs, nodes, self.store.row_pointers,
+                self.slab.tok_delta, self.slab.base_for_step(step), bmax,
+                self.store.vocab_size, impl=self.impl,
+                constraint_ids=constraint_ids,
+            )
         if self.impl == "pallas":
             from repro.kernels import ops as kernel_ops
 
@@ -424,7 +488,8 @@ class StackedStaticBackend:
     def supports_level_free(self) -> bool:
         """See :attr:`StaticBackend.supports_level_free` — the stacked
         variant additionally keys every lookup on ``constraint_ids``."""
-        return self.levels != "dense" and self.store.dense_d == 0
+        return (self.levels != "dense" and self.store.dense_d == 0
+                and self.slab is None)
 
     def level_free_mask(self, log_probs, nodes, *, constraint_ids=None):
         """Level-agnostic stacked ``mask_step`` (see
@@ -465,6 +530,13 @@ class StackedStaticBackend:
         from repro.kernels import ops as kernel_ops
 
         bmax = max(self.store.bmax_for_step(step), 1)
+        if self.slab is not None:
+            return kernel_ops.vntk_compressed(
+                logits, nodes, self.store.row_pointers, self.slab.tok_delta,
+                self.slab.base_for_step(step), bmax, self.store.vocab_size,
+                impl=self.impl, constraint_ids=constraint_ids,
+                fused_logsoftmax=True,
+            )
         return kernel_ops.vntk_fused_logsoftmax(
             logits, nodes, self.store.row_pointers, self.store.edges, bmax,
             self.store.vocab_size, constraint_ids=constraint_ids,
@@ -482,6 +554,15 @@ class StackedStaticBackend:
                 f"candidate row at dense step {step}; fix the policy plan"
             )
         bmax = max(self.store.bmax_for_step(step), 1)
+        if self.slab is not None:
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            return kernel_ops.vntk_compressed_topk(
+                values, nodes, self.store.row_pointers, self.slab.tok_delta,
+                self.slab.base_for_step(step), bmax, self.store.vocab_size,
+                width, impl=self.impl, constraint_ids=constraint_ids,
+                fused_logsoftmax=not normalized,
+            )
         if self.impl == "pallas":
             from repro.kernels import ops as kernel_ops  # lazy: import cycle
 

@@ -29,6 +29,7 @@ from repro.core.baselines import (
     HashBitmapBaseline,
     PPVBaseline,
 )
+from repro.core.compressed_slab import CompressedSlab
 from repro.core.transition_matrix import TransitionMatrix
 from repro.core.vntk import NEG_INF
 from repro.decoding.backends import (
@@ -237,7 +238,8 @@ class DecodePolicy:
             if isinstance(b, (StaticBackend, StackedStaticBackend)):
                 kind = "dense-bitpack" if b.levels == "dense" else (
                     f"vntk[{b.impl}{'+fused' if b.fused else ''}"
-                    f"{'+topk' if self.candidate_topk else ''}]")
+                    f"{'+topk' if self.candidate_topk else ''}"
+                    f"{'+slab' if b.slab is not None else ''}]")
                 if isinstance(b, StackedStaticBackend):
                     return f"stacked(K={b.num_sets}):{kind}"
                 return kind
@@ -432,11 +434,19 @@ class DecodePolicy:
         swapped, hit = [], False
         for b in self.backends:
             if isinstance(b, StackedStaticBackend) and stacked:
-                swapped.append(dataclasses.replace(b, store=obj))
+                # backends carrying a compressed slab (DESIGN.md §11) get it
+                # recomputed for the new constraints: the envelope fixes the
+                # slab's shapes/dtypes, so the treedef — and therefore every
+                # jitted step keyed on this policy — is unchanged
+                slab = (CompressedSlab.from_store(obj)
+                        if b.slab is not None else None)
+                swapped.append(dataclasses.replace(b, store=obj, slab=slab))
                 hit = True
             elif (isinstance(b, StaticBackend) and not stacked
                     and isinstance(obj, TransitionMatrix)):
-                swapped.append(dataclasses.replace(b, tm=obj))
+                slab = (CompressedSlab.from_matrix(obj)
+                        if b.slab is not None else None)
+                swapped.append(dataclasses.replace(b, tm=obj, slab=slab))
                 hit = True
             else:
                 swapped.append(b)
@@ -451,28 +461,36 @@ class DecodePolicy:
     # -- factories ---------------------------------------------------------
     @classmethod
     def static(cls, tm: TransitionMatrix, *, impl: Impl = "xla",
-               fused: bool = False, topk: bool = True) -> "DecodePolicy":
+               fused: bool = False, topk: bool = True,
+               compressed: bool = False) -> "DecodePolicy":
         """STATIC plan: dense bit-packed lookups for levels < ``dense_d``,
         VNTK (``impl``, optionally ``fused``) for the deeper levels.
         ``topk`` opts the sparse levels into candidate-compressed decoding
-        (on by default; DESIGN.md §8)."""
+        (on by default; DESIGN.md §8).  ``compressed`` builds the
+        delta-compressed edge slab (DESIGN.md §11) and routes every sparse
+        lookup through it — bit-identical outputs, int16 DMA bursts."""
         if getattr(tm, "is_stacked", False):
-            return cls.stacked(tm, impl=impl, fused=fused, topk=topk)
+            return cls.stacked(tm, impl=impl, fused=fused, topk=topk,
+                               compressed=compressed)
         L, d = tm.sid_length, min(tm.dense_d, tm.sid_length)
+        slab = (CompressedSlab.from_matrix(tm)
+                if compressed and d < L else None)
         if d == 0:
             return cls(
-                backends=(StaticBackend(tm, impl=impl, fused=fused,
-                                        levels="sparse"),),
+                backends=(StaticBackend(tm, slab=slab, impl=impl,
+                                        fused=fused, levels="sparse"),),
                 plan=(0,) * L,
                 candidate_topk=topk,
             )
         if d >= L:
+            # fully dense band: nothing to compress
             return cls(backends=(StaticBackend(tm, levels="dense"),),
                        plan=(0,) * L, candidate_topk=topk)
         return cls(
             backends=(
                 StaticBackend(tm, levels="dense"),
-                StaticBackend(tm, impl=impl, fused=fused, levels="sparse"),
+                StaticBackend(tm, slab=slab, impl=impl, fused=fused,
+                              levels="sparse"),
             ),
             plan=tuple(0 if s < d else 1 for s in range(L)),
             candidate_topk=topk,
@@ -480,13 +498,16 @@ class DecodePolicy:
 
     @classmethod
     def stacked(cls, store: ConstraintStore, *, impl: Impl = "xla",
-                fused: bool = False, topk: bool = True) -> "DecodePolicy":
+                fused: bool = False, topk: bool = True,
+                compressed: bool = False) -> "DecodePolicy":
         """Multi-tenant STATIC plan over a stacked ConstraintStore."""
         L, d = store.sid_length, min(store.dense_d, store.sid_length)
+        slab = (CompressedSlab.from_store(store)
+                if compressed and d < L else None)
         if d == 0:
             return cls(
-                backends=(StackedStaticBackend(store, impl=impl, fused=fused,
-                                               levels="sparse"),),
+                backends=(StackedStaticBackend(store, slab=slab, impl=impl,
+                                               fused=fused, levels="sparse"),),
                 plan=(0,) * L,
                 candidate_topk=topk,
             )
@@ -496,8 +517,8 @@ class DecodePolicy:
         return cls(
             backends=(
                 StackedStaticBackend(store, levels="dense"),
-                StackedStaticBackend(store, impl=impl, fused=fused,
-                                     levels="sparse"),
+                StackedStaticBackend(store, slab=slab, impl=impl,
+                                     fused=fused, levels="sparse"),
             ),
             plan=tuple(0 if s < d else 1 for s in range(L)),
             candidate_topk=topk,

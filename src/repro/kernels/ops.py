@@ -16,15 +16,20 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.vntk import (
+    vntk_compressed_pallas,
+    vntk_compressed_topk_pallas,
     vntk_fused_logsoftmax_pallas,
     vntk_pallas,
+    vntk_stacked_compressed_pallas,
+    vntk_stacked_compressed_topk_pallas,
     vntk_stacked_fused_logsoftmax_pallas,
     vntk_stacked_pallas,
     vntk_stacked_topk_pallas,
     vntk_topk_pallas,
 )
 
-__all__ = ["vntk", "vntk_fused_logsoftmax", "vntk_topk", "embedding_bag"]
+__all__ = ["vntk", "vntk_fused_logsoftmax", "vntk_topk", "vntk_compressed",
+           "vntk_compressed_topk", "embedding_bag"]
 
 
 def _resolve(impl: str | None) -> str:
@@ -109,6 +114,68 @@ def vntk_topk(values, nodes, row_pointers, edges, bmax: int, vocab: int,
     return _ref.vntk_stacked_topk_ref(
         values, nodes, constraint_ids, row_pointers, edges, bmax, vocab,
         width, fused_logsoftmax=fused_logsoftmax,
+    )
+
+
+@partial(jax.jit, static_argnames=("bmax", "vocab", "impl",
+                                   "fused_logsoftmax"))
+def vntk_compressed(values, nodes, row_pointers, tok_delta, base, bmax: int,
+                    vocab: int, impl: str | None = None, constraint_ids=None,
+                    fused_logsoftmax: bool = False):
+    """VNTK over the compressed slab (DESIGN.md §11): vocab-aligned outputs.
+
+    ``tok_delta``/``base`` come from a
+    :class:`repro.core.compressed_slab.CompressedSlab` (``base`` is that
+    step's ``level_base`` entry — scalar, or per-member ``(K,)`` with
+    ``constraint_ids``).  Bit-identical to :func:`vntk` /
+    :func:`vntk_fused_logsoftmax` on the same trie.
+    """
+    if constraint_ids is None:
+        if _resolve(impl) == "pallas":
+            return vntk_compressed_pallas(
+                values, nodes, row_pointers, tok_delta, base, bmax, vocab,
+                fused_logsoftmax=fused_logsoftmax,
+            )
+        return _ref.vntk_compressed_ref(
+            values, nodes, row_pointers, tok_delta, base, bmax, vocab,
+            fused_logsoftmax=fused_logsoftmax,
+        )
+    if _resolve(impl) == "pallas":
+        return vntk_stacked_compressed_pallas(
+            values, nodes, constraint_ids, row_pointers, tok_delta, base,
+            bmax, vocab, fused_logsoftmax=fused_logsoftmax,
+        )
+    return _ref.vntk_stacked_compressed_ref(
+        values, nodes, constraint_ids, row_pointers, tok_delta, base, bmax,
+        vocab, fused_logsoftmax=fused_logsoftmax,
+    )
+
+
+@partial(jax.jit, static_argnames=("bmax", "vocab", "width", "impl",
+                                   "fused_logsoftmax"))
+def vntk_compressed_topk(values, nodes, row_pointers, tok_delta, base,
+                         bmax: int, vocab: int, width: int,
+                         impl: str | None = None, constraint_ids=None,
+                         fused_logsoftmax: bool = False):
+    """Candidate-compressed VNTK over the compressed slab (§8 x §11)."""
+    if constraint_ids is None:
+        if _resolve(impl) == "pallas":
+            return vntk_compressed_topk_pallas(
+                values, nodes, row_pointers, tok_delta, base, bmax, vocab,
+                width, fused_logsoftmax=fused_logsoftmax,
+            )
+        return _ref.vntk_compressed_topk_ref(
+            values, nodes, row_pointers, tok_delta, base, bmax, vocab, width,
+            fused_logsoftmax=fused_logsoftmax,
+        )
+    if _resolve(impl) == "pallas":
+        return vntk_stacked_compressed_topk_pallas(
+            values, nodes, constraint_ids, row_pointers, tok_delta, base,
+            bmax, vocab, width, fused_logsoftmax=fused_logsoftmax,
+        )
+    return _ref.vntk_stacked_compressed_topk_ref(
+        values, nodes, constraint_ids, row_pointers, tok_delta, base, bmax,
+        vocab, width, fused_logsoftmax=fused_logsoftmax,
     )
 
 

@@ -11,7 +11,11 @@ import jax.numpy as jnp
 
 from repro.core.vntk import (
     NEG_INF,
+    vntk_compressed_reference,
+    vntk_compressed_topk_reference,
     vntk_reference_scatter,
+    vntk_stacked_compressed_reference,
+    vntk_stacked_compressed_topk_reference,
     vntk_stacked_reference_scatter,
     vntk_stacked_topk_reference,
     vntk_topk_reference,
@@ -24,6 +28,10 @@ __all__ = [
     "vntk_stacked_fused_logsoftmax_ref",
     "vntk_topk_ref",
     "vntk_stacked_topk_ref",
+    "vntk_compressed_ref",
+    "vntk_stacked_compressed_ref",
+    "vntk_compressed_topk_ref",
+    "vntk_stacked_compressed_topk_ref",
     "embedding_bag_ref",
 ]
 
@@ -71,6 +79,47 @@ def vntk_stacked_topk_ref(values, nodes, constraint_ids, row_pointers, edges,
           if fused_logsoftmax else values)
     return vntk_stacked_topk_reference(
         lp, nodes, constraint_ids, row_pointers, edges, bmax, vocab, width
+    )
+
+
+def vntk_compressed_ref(values, nodes, row_pointers, tok_delta, base, bmax,
+                        vocab, fused_logsoftmax=False):
+    """Compressed-slab oracle (DESIGN.md §11): delta-decode + scatter."""
+    lp = (jax.nn.log_softmax(values.astype(jnp.float32), axis=-1)
+          if fused_logsoftmax else values)
+    return vntk_compressed_reference(
+        lp, nodes, row_pointers, tok_delta, base, bmax, vocab
+    )
+
+
+def vntk_stacked_compressed_ref(values, nodes, constraint_ids, row_pointers,
+                                tok_delta, base_k, bmax, vocab,
+                                fused_logsoftmax=False):
+    lp = (jax.nn.log_softmax(values.astype(jnp.float32), axis=-1)
+          if fused_logsoftmax else values)
+    return vntk_stacked_compressed_reference(
+        lp, nodes, constraint_ids, row_pointers, tok_delta, base_k, bmax, vocab
+    )
+
+
+def vntk_compressed_topk_ref(values, nodes, row_pointers, tok_delta, base,
+                             bmax, vocab, width, fused_logsoftmax=False):
+    """Compressed-slab candidate-compressed oracle."""
+    lp = (jax.nn.log_softmax(values.astype(jnp.float32), axis=-1)
+          if fused_logsoftmax else values)
+    return vntk_compressed_topk_reference(
+        lp, nodes, row_pointers, tok_delta, base, bmax, vocab, width
+    )
+
+
+def vntk_stacked_compressed_topk_ref(values, nodes, constraint_ids,
+                                     row_pointers, tok_delta, base_k, bmax,
+                                     vocab, width, fused_logsoftmax=False):
+    lp = (jax.nn.log_softmax(values.astype(jnp.float32), axis=-1)
+          if fused_logsoftmax else values)
+    return vntk_stacked_compressed_topk_reference(
+        lp, nodes, constraint_ids, row_pointers, tok_delta, base_k, bmax,
+        vocab, width
     )
 
 

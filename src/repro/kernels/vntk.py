@@ -34,6 +34,18 @@ Selection is a branch-free rank-by-counting pass (TPUs have no in-VMEM sort):
 followed by a compare-broadcast scatter into the ``C`` output lanes; the
 index tie-break reproduces the dense path's flat-index tie order exactly
 (candidate slots are token-ascending, see ``core.vntk._topk_from_candidates``).
+
+The **compressed-slab** kernels (``vntk_compressed_*``, DESIGN.md §11) swap
+the ``(E, 2)`` int32 edge slab for the delta-encoded token array of
+:class:`repro.core.compressed_slab.CompressedSlab` — int16 where the vocab
+permits — so the speculative burst moves 2 B/slot over the DMA instead of
+8 B.  Decompression is fused into the same wave: an int32 cumsum over the
+burst (which always begins at a CSR row start, so the absolute anchor is
+slot 0) recovers the token columns, and next states are rebuilt as
+``row_start + slot + level_base`` with the per-beam base arriving as a tiny
+blocked input.  Everything downstream of the decode is the shared
+projection/selection machinery, so outputs are bit-identical to the
+uncompressed kernels.
 """
 from __future__ import annotations
 
@@ -53,6 +65,10 @@ __all__ = [
     "vntk_stacked_fused_logsoftmax_pallas",
     "vntk_topk_pallas",
     "vntk_stacked_topk_pallas",
+    "vntk_compressed_pallas",
+    "vntk_stacked_compressed_pallas",
+    "vntk_compressed_topk_pallas",
+    "vntk_stacked_compressed_topk_pallas",
 ]
 
 
@@ -109,7 +125,10 @@ def _dma_front(
     reads ``edge_scratch`` until every edge wait has returned, and
     ``beam_tile`` waits can only be satisfied by ``beam_tile`` completions.
     With ``cids_ref`` both tensors carry a leading constraint axis (stacked
-    store, §4).
+    store, §4).  The front is shape-agnostic in the trailing slot layout:
+    the same two waves move the raw ``(slot, 2)`` int32 burst or the
+    compressed slab's flat int16/int32 delta burst (§11) — only the scratch
+    destination's shape/dtype differ.
     """
     def rp_src(i):
         sl = pl.ds(nodes_ref[i], 2)
@@ -139,9 +158,36 @@ def _dma_front(
         cp2.wait()
 
 
+def _decode_delta_slots(rp_scratch, tok_scratch, base_ref):
+    """Fused slab decompression (DESIGN.md §11): delta burst -> slot arrays.
+
+    The burst in ``tok_scratch`` starts at this beam's CSR row start, whose
+    delta IS the absolute token, so one int32 cumsum along the slot axis
+    recovers every column (the cast happens BEFORE the cumsum: int16 partial
+    sums would wrap for vocabularies near the int16 limit).  Slots past the
+    row end decode to garbage exactly like the uncompressed speculative
+    over-read — the shared ``iota < n_child`` sanitization masks both.  Next
+    states need no stored bytes at all: destinations are consecutive over
+    each level's edge block, so ``next = row_start + slot + level_base``.
+    """
+    beam_tile, bmax_padded = tok_scratch.shape
+    n_child = rp_scratch[:, 1] - rp_scratch[:, 0]  # (beam_tile,)
+    cols_all = jnp.cumsum(tok_scratch[...].astype(jnp.int32), axis=1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (beam_tile, bmax_padded), 1)
+    next_all = rp_scratch[:, 0][:, None] + iota + base_ref[...][:, None]
+    return n_child, cols_all, next_all
+
+
+def _raw_slots(rp_scratch, edge_scratch):
+    """Slot arrays of the uncompressed ``(beam_tile, bmax_padded, 2)`` burst."""
+    n_child = rp_scratch[:, 1] - rp_scratch[:, 0]  # (beam_tile,)
+    return n_child, edge_scratch[:, :, 0], edge_scratch[:, :, 1]
+
+
 def _project_and_write(
-    rp_scratch,
-    edge_scratch,
+    n_child,
+    cols_all,
+    next_all,
     logits_ref,
     out_lp_ref,
     out_next_ref,
@@ -152,9 +198,11 @@ def _project_and_write(
     beam_tile: int,
     fused_logsoftmax: bool,
 ):
-    """Phases 3+4 (+ optional fused log-softmax): shared by both DMA fronts."""
-    n_child = rp_scratch[:, 1] - rp_scratch[:, 0]  # (beam_tile,)
+    """Phases 3+4 (+ optional fused log-softmax): shared by all DMA fronts.
 
+    Consumes the decoded slot arrays ``(n_child, cols_all, next_all)`` so the
+    same projection serves both the raw ``(slot, 2)`` burst and the
+    delta-decompressed compressed slab."""
     # ---- Phase 3+4: chunked sanitize + compare-broadcast projection ----
     n_chunks = bmax_padded // slot_chunk
     iota_slot = jax.lax.broadcasted_iota(jnp.int32, (beam_tile, slot_chunk), 1)
@@ -164,9 +212,12 @@ def _project_and_write(
 
     def chunk_body(c, carry):
         mask, nxt = carry
-        sl = edge_scratch[:, pl.ds(c * slot_chunk, slot_chunk), :]  # (beam_tile, slot_chunk, 2)
-        cols = sl[:, :, 0]
-        vals = sl[:, :, 1]
+        cols = jax.lax.dynamic_slice_in_dim(
+            cols_all, c * slot_chunk, slot_chunk, axis=1
+        )
+        vals = jax.lax.dynamic_slice_in_dim(
+            next_all, c * slot_chunk, slot_chunk, axis=1
+        )
         valid = (c * slot_chunk + iota_slot) < n_child[:, None]
         hit = (cols[:, :, None] == iota_v) & valid[:, :, None]
         mask = mask | jnp.any(hit, axis=1)
@@ -192,8 +243,9 @@ def _project_and_write(
 
 
 def _project_and_select(
-    rp_scratch,
-    edge_scratch,
+    n_child,
+    cols_all,
+    next_all,
     logits_ref,
     out_sc_ref,
     out_tok_ref,
@@ -215,10 +267,10 @@ def _project_and_select(
     valid children by (lp desc, token asc), then the smallest missing tokens
     at NEG_INF (the dense tie-break's invalid-continuation order), exactly
     as in :func:`repro.core.vntk._topk_from_candidates`.  Only the
-    ``(beam_tile, width)`` winners ever leave VMEM.
+    ``(beam_tile, width)`` winners ever leave VMEM.  Like
+    :func:`_project_and_write` it consumes decoded slot arrays, serving both
+    the raw and the compressed DMA fronts.
     """
-    n_child = rp_scratch[:, 1] - rp_scratch[:, 0]  # (beam_tile,)
-
     x = logits_ref[...]
     xf = x.astype(jnp.float32)
     if fused_logsoftmax:
@@ -236,8 +288,9 @@ def _project_and_select(
     )
 
     def chunk_body(c, cand):
-        sl = edge_scratch[:, pl.ds(c * slot_chunk, slot_chunk), :]
-        cols = sl[:, :, 0]
+        cols = jax.lax.dynamic_slice_in_dim(
+            cols_all, c * slot_chunk, slot_chunk, axis=1
+        )
         valid = (c * slot_chunk + iota_slot) < n_child[:, None]
         hit = (cols[:, :, None] == iota_v) & valid[:, :, None]
         # token columns within a CSR row are unique: <= 1 non-zero term
@@ -255,8 +308,6 @@ def _project_and_select(
         jnp.int32, (beam_tile, bmax_padded), 1
     )
     valid_full = iota_full < n_child[:, None]
-    cols_all = edge_scratch[:, :, 0]
-    next_all = edge_scratch[:, :, 1]
     real_key = jnp.where(valid_full, cand_lp, minf)
     real_tok = jnp.where(valid_full, cols_all, 0)
     real_next = jnp.where(valid_full, next_all, 0)
@@ -331,9 +382,9 @@ def _vntk_topk_body(
         sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
     )
     _project_and_select(
-        rp_scratch, edge_scratch, logits_ref, out_sc_ref, out_tok_ref,
-        out_next_ref, bmax_padded=bmax_padded, slot_chunk=slot_chunk,
-        vocab=vocab, beam_tile=beam_tile, width=width,
+        *_raw_slots(rp_scratch, edge_scratch), logits_ref, out_sc_ref,
+        out_tok_ref, out_next_ref, bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk, vocab=vocab, beam_tile=beam_tile, width=width,
         fused_logsoftmax=fused_logsoftmax,
     )
 
@@ -365,9 +416,9 @@ def _vntk_stacked_topk_body(
         cids_ref=cids_ref,
     )
     _project_and_select(
-        rp_scratch, edge_scratch, logits_ref, out_sc_ref, out_tok_ref,
-        out_next_ref, bmax_padded=bmax_padded, slot_chunk=slot_chunk,
-        vocab=vocab, beam_tile=beam_tile, width=width,
+        *_raw_slots(rp_scratch, edge_scratch), logits_ref, out_sc_ref,
+        out_tok_ref, out_next_ref, bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk, vocab=vocab, beam_tile=beam_tile, width=width,
         fused_logsoftmax=fused_logsoftmax,
     )
 
@@ -395,9 +446,9 @@ def _vntk_body(
         sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
     )
     _project_and_write(
-        rp_scratch, edge_scratch, logits_ref, out_lp_ref, out_next_ref,
-        bmax_padded=bmax_padded, slot_chunk=slot_chunk, vocab=vocab,
-        beam_tile=beam_tile, fused_logsoftmax=fused_logsoftmax,
+        *_raw_slots(rp_scratch, edge_scratch), logits_ref, out_lp_ref,
+        out_next_ref, bmax_padded=bmax_padded, slot_chunk=slot_chunk,
+        vocab=vocab, beam_tile=beam_tile, fused_logsoftmax=fused_logsoftmax,
     )
 
 
@@ -432,9 +483,145 @@ def _vntk_stacked_body(
         cids_ref=cids_ref,
     )
     _project_and_write(
-        rp_scratch, edge_scratch, logits_ref, out_lp_ref, out_next_ref,
-        bmax_padded=bmax_padded, slot_chunk=slot_chunk, vocab=vocab,
-        beam_tile=beam_tile, fused_logsoftmax=fused_logsoftmax,
+        *_raw_slots(rp_scratch, edge_scratch), logits_ref, out_lp_ref,
+        out_next_ref, bmax_padded=bmax_padded, slot_chunk=slot_chunk,
+        vocab=vocab, beam_tile=beam_tile, fused_logsoftmax=fused_logsoftmax,
+    )
+
+
+def _vntk_compressed_body(
+    nodes_ref,
+    base_ref,
+    logits_ref,
+    rowptr_hbm,
+    tok_hbm,
+    out_lp_ref,
+    out_next_ref,
+    rp_scratch,
+    tok_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    fused_logsoftmax: bool,
+):
+    """Compressed-slab front end (DESIGN.md §11): the edge wave DMAs the
+    delta token burst (2 B/slot at int16) and decompression is fused right
+    behind the wait — cumsum for columns, ``row_start + slot + base`` for
+    next states — before the shared projection."""
+    _dma_front(
+        nodes_ref, rowptr_hbm, tok_hbm, rp_scratch, tok_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+    )
+    _project_and_write(
+        *_decode_delta_slots(rp_scratch, tok_scratch, base_ref), logits_ref,
+        out_lp_ref, out_next_ref, bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk, vocab=vocab, beam_tile=beam_tile,
+        fused_logsoftmax=fused_logsoftmax,
+    )
+
+
+def _vntk_stacked_compressed_body(
+    nodes_ref,
+    cids_ref,
+    base_ref,
+    logits_ref,
+    rowptr_hbm,
+    tok_hbm,
+    out_lp_ref,
+    out_next_ref,
+    rp_scratch,
+    tok_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    fused_logsoftmax: bool,
+):
+    _dma_front(
+        nodes_ref, rowptr_hbm, tok_hbm, rp_scratch, tok_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+        cids_ref=cids_ref,
+    )
+    _project_and_write(
+        *_decode_delta_slots(rp_scratch, tok_scratch, base_ref), logits_ref,
+        out_lp_ref, out_next_ref, bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk, vocab=vocab, beam_tile=beam_tile,
+        fused_logsoftmax=fused_logsoftmax,
+    )
+
+
+def _vntk_compressed_topk_body(
+    nodes_ref,
+    base_ref,
+    logits_ref,
+    rowptr_hbm,
+    tok_hbm,
+    out_sc_ref,
+    out_tok_ref,
+    out_next_ref,
+    rp_scratch,
+    tok_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    width: int,
+    fused_logsoftmax: bool,
+):
+    _dma_front(
+        nodes_ref, rowptr_hbm, tok_hbm, rp_scratch, tok_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+    )
+    _project_and_select(
+        *_decode_delta_slots(rp_scratch, tok_scratch, base_ref), logits_ref,
+        out_sc_ref, out_tok_ref, out_next_ref, bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk, vocab=vocab, beam_tile=beam_tile, width=width,
+        fused_logsoftmax=fused_logsoftmax,
+    )
+
+
+def _vntk_stacked_compressed_topk_body(
+    nodes_ref,
+    cids_ref,
+    base_ref,
+    logits_ref,
+    rowptr_hbm,
+    tok_hbm,
+    out_sc_ref,
+    out_tok_ref,
+    out_next_ref,
+    rp_scratch,
+    tok_scratch,
+    sem_rp,
+    sem_edge,
+    *,
+    bmax_padded: int,
+    slot_chunk: int,
+    vocab: int,
+    beam_tile: int,
+    width: int,
+    fused_logsoftmax: bool,
+):
+    _dma_front(
+        nodes_ref, rowptr_hbm, tok_hbm, rp_scratch, tok_scratch,
+        sem_rp, sem_edge, beam_tile=beam_tile, bmax_padded=bmax_padded,
+        cids_ref=cids_ref,
+    )
+    _project_and_select(
+        *_decode_delta_slots(rp_scratch, tok_scratch, base_ref), logits_ref,
+        out_sc_ref, out_tok_ref, out_next_ref, bmax_padded=bmax_padded,
+        slot_chunk=slot_chunk, vocab=vocab, beam_tile=beam_tile, width=width,
+        fused_logsoftmax=fused_logsoftmax,
     )
 
 
@@ -634,6 +821,97 @@ def _vntk_topk_call(
     return out_sc[:nb], out_tok[:nb], out_next[:nb]
 
 
+def _vntk_compressed_call(
+    logits: jax.Array,  # (nb, V)
+    nodes: jax.Array,  # (nb,)
+    cids: jax.Array | None,  # (nb,) or None for the single-matrix path
+    base: jax.Array,  # (nb,) int32 per-beam next-state base for this step
+    row_pointers: jax.Array,  # (S+1,) or (K, S+1)
+    tok_delta: jax.Array,  # (E+pad,) or (K, E+pad) int16/int32
+    bmax: int,
+    vocab: int,
+    width: int | None,
+    *,
+    fused_logsoftmax: bool,
+    beam_tile: int = 8,
+    slot_chunk: int = 8,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+):
+    """Shared driver for the compressed-slab kernels (DESIGN.md §11).
+
+    ``width=None`` runs the vocab-projection body (two ``(nb, V)`` outputs);
+    an integer runs the candidate-compressed selection (three ``(nb, width)``
+    outputs).  The edge scratch is the slab's own dtype — int16 where the
+    vocab permits — which is the whole HBM-bytes win."""
+    nb = nodes.shape[0]
+    beam_tile, nb_pad = _beam_padding(nb, beam_tile)
+    logits = _pad_rows(logits, nb_pad)
+    nodes = _pad_rows(nodes, nb_pad)  # pad rows decode from SINK (node 0)
+    base = _pad_rows(base, nb_pad)
+    stacked = cids is not None
+    if stacked:
+        cids = _pad_rows(cids, nb_pad)
+    bmax_padded = _round_up(max(bmax, 1), slot_chunk)
+    if tok_delta.shape[-1] < bmax_padded:
+        raise ValueError("token slab smaller than one speculative burst")
+    if width is not None and not 1 <= width <= vocab:
+        raise ValueError(f"width must be in [1, {vocab}], got {width}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (nb_pad // beam_tile,)
+    topk = width is not None
+    bodies = {
+        (False, False): _vntk_compressed_body,
+        (True, False): _vntk_stacked_compressed_body,
+        (False, True): _vntk_compressed_topk_body,
+        (True, True): _vntk_stacked_compressed_topk_body,
+    }
+    static = dict(
+        bmax_padded=bmax_padded, slot_chunk=slot_chunk, vocab=vocab,
+        beam_tile=beam_tile, fused_logsoftmax=fused_logsoftmax,
+    )
+    if topk:
+        static["width"] = width
+    kern = functools.partial(bodies[(stacked, topk)], **static)
+    row_spec = pl.BlockSpec((beam_tile,), lambda i: (i,))
+    in_specs = [row_spec] + ([row_spec] if stacked else []) + [
+        row_spec,  # base
+        pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0)),
+        pl.BlockSpec(memory_space=pl.ANY),
+        pl.BlockSpec(memory_space=pl.ANY),
+    ]
+    if topk:
+        out_specs = [pl.BlockSpec((beam_tile, width), lambda i: (i, 0))] * 3
+        out_shape = [
+            jax.ShapeDtypeStruct((nb_pad, width), jnp.float32),
+            jax.ShapeDtypeStruct((nb_pad, width), jnp.int32),
+            jax.ShapeDtypeStruct((nb_pad, width), jnp.int32),
+        ]
+    else:
+        out_specs = [pl.BlockSpec((beam_tile, vocab), lambda i: (i, 0))] * 2
+        out_shape = [
+            jax.ShapeDtypeStruct((nb_pad, vocab), out_dtype),
+            jax.ShapeDtypeStruct((nb_pad, vocab), jnp.int32),
+        ]
+    outs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((beam_tile, 2), jnp.int32),
+            pltpu.VMEM((beam_tile, bmax_padded), tok_delta.dtype),
+            pltpu.SemaphoreType.DMA((beam_tile,)),  # per-beam rowptr sems
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(*((nodes, cids) if stacked else (nodes,)), base, logits,
+      row_pointers, tok_delta)
+    return tuple(o[:nb] for o in outs)
+
+
 def vntk_pallas(
     log_probs: jax.Array,
     nodes: jax.Array,
@@ -763,6 +1041,150 @@ def vntk_topk_pallas(
         None,
         row_pointers,
         edges,
+        bmax,
+        vocab,
+        width,
+        fused_logsoftmax=fused_logsoftmax,
+        **kw,
+    )
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nxt.reshape(shp)
+
+
+def vntk_compressed_pallas(
+    values: jax.Array,  # (..., V) log-probs, or raw logits when fused
+    nodes: jax.Array,
+    row_pointers: jax.Array,  # (S+1,)
+    tok_delta: jax.Array,  # (E+pad,) int16/int32
+    base,  # scalar or (...,) int32 level base for this step
+    bmax: int,
+    vocab: int,
+    *,
+    fused_logsoftmax: bool = False,
+    **kw,
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 2 over the compressed slab (DESIGN.md §11): the speculative burst
+    DMAs delta tokens (int16 where the vocab permits) and decompression is
+    fused behind the wave.  Bit-identical to :func:`vntk_pallas` /
+    :func:`vntk_fused_logsoftmax_pallas` on the same trie."""
+    batch_shape = nodes.shape
+    base_b = jnp.broadcast_to(
+        jnp.asarray(base, jnp.int32), batch_shape
+    ).reshape(-1)
+    lp, nxt = _vntk_compressed_call(
+        values.reshape(-1, vocab),
+        nodes.reshape(-1),
+        None,
+        base_b,
+        row_pointers,
+        tok_delta,
+        bmax,
+        vocab,
+        None,
+        fused_logsoftmax=fused_logsoftmax,
+        out_dtype=jnp.float32 if fused_logsoftmax else values.dtype,
+        **kw,
+    )
+    return lp.reshape(batch_shape + (vocab,)), nxt.reshape(batch_shape + (vocab,))
+
+
+def vntk_stacked_compressed_pallas(
+    values: jax.Array,
+    nodes: jax.Array,
+    constraint_ids: jax.Array,
+    row_pointers: jax.Array,  # (K, S+1)
+    tok_delta: jax.Array,  # (K, E+pad)
+    base_k: jax.Array,  # (K,) int32 per-member level base for this step
+    bmax: int,
+    vocab: int,
+    *,
+    fused_logsoftmax: bool = False,
+    **kw,
+) -> tuple[jax.Array, jax.Array]:
+    """Stacked-store compressed Alg. 2: the delta burst indexes one extra
+    leading constraint axis; each beam's base is gathered host-of-kernel."""
+    batch_shape = nodes.shape
+    cids = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    cids = cids.astype(jnp.int32)
+    lp, nxt = _vntk_compressed_call(
+        values.reshape(-1, vocab),
+        nodes.reshape(-1),
+        cids,
+        base_k.astype(jnp.int32)[cids],
+        row_pointers,
+        tok_delta,
+        bmax,
+        vocab,
+        None,
+        fused_logsoftmax=fused_logsoftmax,
+        out_dtype=jnp.float32 if fused_logsoftmax else values.dtype,
+        **kw,
+    )
+    return lp.reshape(batch_shape + (vocab,)), nxt.reshape(batch_shape + (vocab,))
+
+
+def vntk_compressed_topk_pallas(
+    values: jax.Array,
+    nodes: jax.Array,
+    row_pointers: jax.Array,
+    tok_delta: jax.Array,
+    base,
+    bmax: int,
+    vocab: int,
+    width: int,
+    *,
+    fused_logsoftmax: bool = False,
+    **kw,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Candidate-compressed selection over the compressed slab: §8's
+    ``(nb, C)`` outputs fed by §11's 2 B/slot DMA burst — the cheapest
+    decode step in the file.  Bit-identical to :func:`vntk_topk_pallas`."""
+    batch_shape = nodes.shape
+    base_b = jnp.broadcast_to(
+        jnp.asarray(base, jnp.int32), batch_shape
+    ).reshape(-1)
+    sc, tok, nxt = _vntk_compressed_call(
+        values.reshape(-1, vocab),
+        nodes.reshape(-1),
+        None,
+        base_b,
+        row_pointers,
+        tok_delta,
+        bmax,
+        vocab,
+        width,
+        fused_logsoftmax=fused_logsoftmax,
+        **kw,
+    )
+    shp = batch_shape + (width,)
+    return sc.reshape(shp), tok.reshape(shp), nxt.reshape(shp)
+
+
+def vntk_stacked_compressed_topk_pallas(
+    values: jax.Array,
+    nodes: jax.Array,
+    constraint_ids: jax.Array,
+    row_pointers: jax.Array,  # (K, S+1)
+    tok_delta: jax.Array,  # (K, E+pad)
+    base_k: jax.Array,  # (K,) int32
+    bmax: int,
+    vocab: int,
+    width: int,
+    *,
+    fused_logsoftmax: bool = False,
+    **kw,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stacked-store compressed candidate-compressed Alg. 2."""
+    batch_shape = nodes.shape
+    cids = jnp.broadcast_to(constraint_ids, batch_shape).reshape(-1)
+    cids = cids.astype(jnp.int32)
+    sc, tok, nxt = _vntk_compressed_call(
+        values.reshape(-1, vocab),
+        nodes.reshape(-1),
+        cids,
+        base_k.astype(jnp.int32)[cids],
+        row_pointers,
+        tok_delta,
         bmax,
         vocab,
         width,

@@ -10,9 +10,11 @@ bit-identical to single-device — asserted in
 argument with per-backend placements from its ``shardings(mesh)`` hook:
 replicated by default (paper §A.3), or CSR-row-sharded along ``model`` with
 ``rows="model"`` for tries that outgrow one device (DESIGN.md §6).
-Candidate-compressed levels (DESIGN.md §8) need nothing extra here: the
-per-beam top-C lists and the ``(B, M*C)`` reduce are dp-local, and
-``rows="model"`` opts out via ``RowShardedStatic.supports_topk = False``.
+Candidate-compressed levels (DESIGN.md §8) compose with both placements:
+under the default replicated rows the per-beam top-C lists and the
+``(B, M*C)`` reduce are dp-local, and under ``rows="model"`` the
+``RowShardedStatic`` wrapper runs the shard-local top-C + one-hop psum
+merge of ``vntk_row_sharded_topk`` (DESIGN.md §11), still bit-identical.
 
 ``SpmdServingEngine`` replaces the one-request-at-a-time admit loop of
 ``ServingEngine._serve_retrieval`` with continuous data-parallel batching:
@@ -111,9 +113,11 @@ class SpmdRetriever(GenerativeRetriever):
         specs = policy_pspecs(self.policy, self.mesh, rows=self.rows)
         dp = self._dp
 
+        ms = self.mesh.shape["model"] if self.rows == "model" else 1
+
         def _spmd_impl(params, history, policy, cids, active):
             if self.rows == "model":
-                policy = to_row_sharded(policy)
+                policy = to_row_sharded(policy, n_shards=ms)
             ids = cids if policy.requires_constraint_ids else None
             tokens, scores = self._retrieve_impl(params, history, policy, ids)
             # inactive (padding / free-slot) rows: parked at NEG_INF so no

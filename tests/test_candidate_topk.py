@@ -83,17 +83,24 @@ def test_supports_topk_per_level_and_families():
 
 def test_supports_topk_flag_is_the_opt_out():
     """The protocol's ``supports_topk`` flag must gate the candidate branch
-    even when a backend exposes a ``topk_at`` method — this is what keeps
-    ``RowShardedStatic.supports_topk = False`` (DESIGN.md §6) an opt-out a
-    delegating wrapper cannot accidentally bypass."""
+    even when a backend exposes a ``topk_at`` method.  Since the sharded
+    candidate-topk merge (DESIGN.md §11), ``RowShardedStatic`` *supports*
+    the branch — the wrapper's ``topk_at`` must track the inner backend
+    step-for-step, and ``with_topk(False)`` on the inner backend must still
+    opt the wrapped policy out (the flag, not the method, is the gate)."""
     from repro.distributed.constraint_sharding import RowShardedStatic
 
     tm, _, _ = _toy(dense_d=1)
-    inner = DecodePolicy.static(tm).backends[1]  # the sparse StaticBackend
+    policy = DecodePolicy.static(tm)
+    inner = policy.backends[1]  # the sparse StaticBackend
     assert inner.topk_at(2)
     wrapped = RowShardedStatic(inner=inner)
     p = DecodePolicy.per_level((wrapped,), (0,) * 4)
-    assert not any(p.supports_topk_at(s) for s in range(4))
+    assert [p.supports_topk_at(s) for s in range(4)] == \
+        [policy.supports_topk_at(s) for s in range(4)]
+    assert p.supports_topk_at(2)
+    # the opt-out still wins over the delegated topk_at method
+    assert not any(p.with_topk(False).supports_topk_at(s) for s in range(4))
 
 
 def test_step_topk_rejects_dense_band_and_missing_ids():

@@ -1,0 +1,207 @@
+"""Delta-compressed CSR edge slab (DESIGN.md §11).
+
+Load-bearing properties: (1) the slab is a pure re-encoding — every decode
+path fed from it (XLA and Pallas, mask and candidate-topk, single matrix
+and stacked store) is bit-identical to the uncompressed CSR; (2) the
+encoding is verified at construction (a non-canonical slab raises, never
+silently decodes garbage); (3) the envelope contract holds — leaf shapes
+are functions of the capacity envelope only, so hot-swaps keep the treedef;
+(4) the byte accounting delivers the promised ~50% slab cut.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constraints import ConstraintStore
+from repro.core import TransitionMatrix, beam_search
+from repro.core.compressed_slab import INT16_MAX_VOCAB, CompressedSlab
+from repro.decoding import DecodePolicy
+from conftest import make_sids
+
+V, L = 19, 5
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(3)
+    sids = np.unique(make_sids(rng, 140, V, L, clustered=True), axis=0)
+    table = jnp.asarray(rng.normal(size=(L, V, V)).astype(np.float32))
+    return sids, table
+
+
+def segment_decode(slab, tm):
+    """Reference decompression: per-row cumsum of the delta slab."""
+    rp = np.asarray(tm.row_pointers, dtype=np.int64)
+    d = np.asarray(slab.tok_delta, dtype=np.int64)[: tm.n_edges]
+    tok = np.empty_like(d)
+    for s in range(tm.n_states):
+        lo, hi = rp[s], rp[s + 1]
+        tok[lo:hi] = np.cumsum(d[lo:hi])
+    return tok
+
+
+# ---------------------------------------------------------------------------
+# encoding: round-trip, dtype selection, envelope, next-state bases
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dense_d", [0, 1, 2])
+def test_from_matrix_round_trips_tokens(corpus, dense_d):
+    sids, _ = corpus
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=dense_d)
+    slab = CompressedSlab.from_matrix(tm)
+    np.testing.assert_array_equal(
+        segment_decode(slab, tm), np.asarray(tm.edges[: tm.n_edges, 0]))
+    # envelope contract: delta slab rides the same padded edge axis
+    assert slab.tok_delta.shape == (tm.edges.shape[0],)
+    assert not slab.is_stacked
+
+
+def test_int16_vs_int32_dtype_selection(corpus):
+    sids, _ = corpus
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    assert CompressedSlab.from_matrix(tm).tok_delta.dtype == jnp.int16
+    big = np.unique(
+        np.random.default_rng(0).integers(
+            0, INT16_MAX_VOCAB + 9, size=(25, 3)).astype(np.int64), axis=0)
+    tm_big = TransitionMatrix.from_sids(big, INT16_MAX_VOCAB + 9, dense_d=0)
+    slab_big = CompressedSlab.from_matrix(tm_big)
+    assert slab_big.tok_delta.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        segment_decode(slab_big, tm_big),
+        np.asarray(tm_big.edges[: tm_big.n_edges, 0]))
+
+
+def test_base_for_step_recovers_next_states(corpus):
+    """``next = edge_idx + base[step]`` must equal the stored dst column
+    on every non-leaf sparse level — the whole reason dst can be dropped."""
+    from repro.core.trie import infer_level_blocks
+
+    sids, _ = corpus
+    d = 1
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=d)
+    slab = CompressedSlab.from_matrix(tm)
+    blocks = infer_level_blocks(
+        np.asarray(tm.row_pointers), np.asarray(tm.edges),
+        n_states=tm.n_states, n_edges=tm.n_edges, sid_length=L,
+        dense_d=d, vocab_size=V)
+    dst = np.asarray(tm.edges[: tm.n_edges, 1], dtype=np.int64)
+    for step in range(d, L - 1):  # leaf level's dst is unused by decode
+        lo, hi = int(blocks.edge_offsets[step]), int(
+            blocks.edge_offsets[step + 1])
+        base = int(slab.base_for_step(step))
+        np.testing.assert_array_equal(
+            dst[lo:hi], np.arange(lo, hi, dtype=np.int64) + base,
+            err_msg=f"step={step}")
+
+
+def test_from_store_stacked_and_hot_swap_treedef(corpus):
+    sids, _ = corpus
+    rng = np.random.default_rng(8)
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    decoy = np.unique(make_sids(rng, 60, V, L), axis=0)
+    store = ConstraintStore.from_matrices(
+        [TransitionMatrix.from_sids(decoy, V, dense_d=1), tm], headroom=0.3)
+    slab = CompressedSlab.from_store(store)
+    assert slab.is_stacked
+    assert slab.tok_delta.shape == (2, store.edges.shape[-2])
+    assert slab.level_base.shape == (2, L)
+    for k in range(2):
+        m = store.member(k)
+        sk = dataclasses.replace(
+            slab, tok_delta=slab.tok_delta[k], level_base=slab.level_base[k])
+        np.testing.assert_array_equal(
+            segment_decode(sk, m), np.asarray(m.edges[: m.n_edges, 0]))
+    # hot-swap: a member replacement inside the envelope keeps the treedef
+    fresh = np.unique(make_sids(rng, 55, V, L), axis=0)
+    swapped = store.with_member(
+        0, TransitionMatrix.from_sids(fresh, V, dense_d=1))
+    slab2 = CompressedSlab.from_store(swapped)
+    assert (jax.tree_util.tree_structure(slab)
+            == jax.tree_util.tree_structure(slab2))
+    assert all(a.shape == b.shape and a.dtype == b.dtype
+               for a, b in zip(jax.tree_util.tree_leaves(slab),
+                               jax.tree_util.tree_leaves(slab2)))
+
+
+def test_non_canonical_slab_raises(corpus):
+    sids, _ = corpus
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    # corrupt the next-state column: no longer consecutive per level block
+    edges = np.asarray(tm.edges).copy()
+    edges[: tm.n_edges, 1] = edges[: tm.n_edges, 1][::-1]
+    bad = dataclasses.replace(tm, edges=jnp.asarray(edges))
+    with pytest.raises(ValueError):
+        CompressedSlab.from_matrix(bad)
+
+
+def test_nbytes_halves_the_slab(corpus):
+    sids, _ = corpus
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    slab = CompressedSlab.from_matrix(tm)
+    uncompressed = tm.edges.size * tm.edges.dtype.itemsize
+    # int16 deltas + O(L) base table vs 8 B/edge: ~4x smaller
+    assert slab.nbytes() < 0.3 * uncompressed
+
+
+def test_build_dispatches_on_shape(corpus):
+    sids, _ = corpus
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    store = ConstraintStore.from_matrices([tm, tm])
+    assert not CompressedSlab.build(tm).is_stacked
+    assert CompressedSlab.build(store).is_stacked
+
+
+# ---------------------------------------------------------------------------
+# decode bit-identity: compressed policies == uncompressed, XLA and Pallas
+# ---------------------------------------------------------------------------
+def run_search(corpus, policy, stacked=False, batch=3, beams=6):
+    sids, table = corpus
+
+    def logits_fn(carry, last, step):
+        return table[step][last], carry
+
+    cids = jnp.ones((batch,), jnp.int32) if stacked else None
+    state, _ = beam_search(logits_fn, None, batch, beams, L, policy,
+                           constraint_ids=cids)
+    return np.asarray(state.tokens), np.asarray(state.scores)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("topk", [False, True])
+def test_compressed_policy_bit_identical(corpus, impl, topk):
+    sids, _ = corpus
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    base = DecodePolicy.static(tm, impl=impl, topk=topk)
+    comp = DecodePolicy.static(tm, impl=impl, topk=topk, compressed=True)
+    want_t, want_s = run_search(corpus, base)
+    got_t, got_s = run_search(corpus, comp)
+    np.testing.assert_array_equal(got_t, want_t)
+    np.testing.assert_array_equal(got_s, want_s)
+
+
+@pytest.mark.parametrize("topk", [False, True])
+def test_compressed_stacked_bit_identical(corpus, topk):
+    sids, _ = corpus
+    rng = np.random.default_rng(21)
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    decoy = np.unique(make_sids(rng, 70, V, L), axis=0)
+    store = ConstraintStore.from_matrices(
+        [TransitionMatrix.from_sids(decoy, V, dense_d=1), tm], headroom=0.2)
+    base = DecodePolicy.stacked(store, topk=topk)
+    comp = DecodePolicy.stacked(store, topk=topk, compressed=True)
+    want_t, want_s = run_search(corpus, base, stacked=True)
+    got_t, got_s = run_search(corpus, comp, stacked=True)
+    np.testing.assert_array_equal(got_t, want_t)
+    np.testing.assert_array_equal(got_s, want_s)
+
+
+def test_compressed_opts_out_of_level_free(corpus):
+    """The per-LEVEL next-state base cannot serve mixed-depth batches: a
+    compressed all-sparse policy must refuse the level-free path rather
+    than decode wrong next states."""
+    sids, _ = corpus
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=0)
+    assert DecodePolicy.static(tm).supports_level_free
+    assert not DecodePolicy.static(tm, compressed=True).supports_level_free

@@ -76,7 +76,12 @@ def exact_policies(case, tm=None) -> dict:
         "static": DecodePolicy.static(tm),
         "static_pallas": DecodePolicy.static(tm, impl="pallas"),
         "static_fused": DecodePolicy.static(tm, fused=True),
+        # delta-compressed edge slab (DESIGN.md §11): same masks, bit for bit
+        "static_compressed": DecodePolicy.static(tm, compressed=True),
+        "static_pallas_compressed": DecodePolicy.static(
+            tm, impl="pallas", compressed=True),
         "stacked": DecodePolicy.stacked(store),  # rows select member 1 == tm
+        "stacked_compressed": DecodePolicy.stacked(store, compressed=True),
         "ppv_exact": DecodePolicy.ppv(sids, V, exact=True),
         "ppv_topk_full": DecodePolicy.ppv(sids, V, exact=False, top_k=V),
         # 2^24 bits vs <=~1.5k probed prefixes: collision-free at fuzz scale
@@ -265,6 +270,16 @@ def topk_policy_pairs(case):
                          False),
         "stacked_k3": (DecodePolicy.stacked(store),
                        DecodePolicy.stacked(store, topk=False), True),
+        # compressed slab feeding the candidate path (DESIGN.md §11): the
+        # cumsum-decoded burst must reproduce the dense trace bit for bit
+        "static_compressed": (DecodePolicy.static(tm, compressed=True),
+                              DecodePolicy.static(tm, topk=False), False),
+        "static_pallas_compressed": (
+            DecodePolicy.static(tm, impl="pallas", compressed=True),
+            DecodePolicy.static(tm, impl="pallas", topk=False), False),
+        "stacked_k3_compressed": (
+            DecodePolicy.stacked(store, compressed=True),
+            DecodePolicy.stacked(store, topk=False), True),
     }
 
 
@@ -302,7 +317,8 @@ def test_fuzz_candidate_path_bit_identical_to_dense(seed, tie_heavy):
             tt, dt, err_msg=f"seed={seed} {name}: tokens diverged")
         np.testing.assert_array_equal(
             tn, dn, err_msg=f"seed={seed} {name}: trie states diverged")
-        if name in ("static", "stacked_k3"):
+        if name in ("static", "stacked_k3",
+                    "static_compressed", "stacked_k3_compressed"):
             # shared XLA log-softmax: scores must be bit-identical
             np.testing.assert_array_equal(
                 ts, ds, err_msg=f"seed={seed} {name}: scores diverged")
@@ -419,6 +435,81 @@ def test_fuzz_spmd_candidate_bit_identical_to_dense(seed):
         np.asarray(tokens), np.asarray(want_t), err_msg=f"seed={seed}")
     np.testing.assert_array_equal(
         np.asarray(scores), np.asarray(want_s), err_msg=f"seed={seed}")
+
+
+@pytest.mark.parametrize("seed", FUZZ_SEEDS[:3])
+@pytest.mark.parametrize("compressed", [False, True])
+def test_fuzz_spmd_model_rows_sharded_topk_bit_identical(seed, compressed):
+    """rows="model" now runs the candidate-compressed path (shard-local
+    top-C + one-hop psum merge, DESIGN.md §11): the row-sharded policy must
+    report ``supports_topk`` and be bit-identical to the single-device
+    DENSE search — same contract as the dp-only candidate test above."""
+    from repro.distributed.constraint_sharding import to_row_sharded
+
+    case = make_case(seed)
+    n = len(jax.devices())
+    mesh = make_subset_mesh(1, n)  # every device on the model axis
+    table = case["table"]
+    B = 2
+
+    def logits_fn(carry, last, step):
+        return table[step][last], carry
+
+    tm = TransitionMatrix.from_sids(
+        case["sids"], case["V"], dense_d=case["dense_d"])
+    policy = DecodePolicy.static(tm, compressed=compressed)
+    # the acceptance bar: sharding the rows no longer forfeits the
+    # candidate-compressed path
+    sharded = to_row_sharded(policy, n_shards=mesh.shape["model"])
+    for s in range(case["L"]):
+        assert sharded.supports_topk_at(s) == policy.supports_topk_at(s)
+
+    @jax.jit
+    def single_dense(pol):
+        state, _ = beam_search(logits_fn, None, B, 5, case["L"], pol)
+        return state.tokens, state.scores
+
+    want_t, want_s = single_dense(DecodePolicy.static(tm, topk=False))
+    tokens, scores = spmd_beam_search(
+        mesh, logits_fn, B, 5, case["L"], policy, rows="model")
+    np.testing.assert_array_equal(
+        np.asarray(tokens), np.asarray(want_t), err_msg=f"seed={seed}")
+    np.testing.assert_array_equal(
+        np.asarray(scores), np.asarray(want_s), err_msg=f"seed={seed}")
+
+
+@pytest.mark.parametrize("seed", FUZZ_SEEDS[:3])
+@pytest.mark.parametrize("n_shards", [3, 5, 7])
+def test_fuzz_pad_rows_nondividing_with_compressed_slab(seed, n_shards):
+    """Satellite: ``pad_policy_rows`` at shard counts that do NOT divide the
+    edge count, composed with the compressed slab.  Pad rows are zeros past
+    every CSR window and pad deltas decompress to the same masked garbage
+    the speculative over-read produces — so the padded policy's per-step
+    beam trace must equal the unpadded one's, bit for bit."""
+    from repro.decoding.backends import StaticBackend
+    from repro.distributed.constraint_sharding import pad_policy_rows
+
+    case = make_case(seed)
+    tm = TransitionMatrix.from_sids(
+        case["sids"], case["V"], dense_d=case["dense_d"])
+    if tm.edges.shape[0] % n_shards == 0:
+        n_shards += 1  # force a real pad: the inert-pad claim is the test
+    policy = DecodePolicy.static(tm, compressed=True)
+    padded = pad_policy_rows(policy, n_shards)
+    grew = False
+    for b in padded.backends:
+        if isinstance(b, StaticBackend) and b.levels != "dense":
+            assert b.tm.edges.shape[0] % n_shards == 0
+            grew = grew or b.tm.edges.shape[0] > tm.edges.shape[0]
+            if b.slab is not None:
+                # slab padded in lock-step with the CSR rows
+                assert b.slab.tok_delta.shape[-1] == b.tm.edges.shape[0]
+    assert grew
+    tt, ts, tn = run_traced_beam(case, policy, stacked=False)
+    pt, ps, pn = run_traced_beam(case, padded, stacked=False)
+    np.testing.assert_array_equal(tt, pt, err_msg=f"seed={seed}")
+    np.testing.assert_array_equal(ts, ps, err_msg=f"seed={seed}")
+    np.testing.assert_array_equal(tn, pn, err_msg=f"seed={seed}")
 
 
 # ---------------------------------------------------------------------------

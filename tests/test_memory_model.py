@@ -3,7 +3,12 @@ import numpy as np
 import pytest
 
 from repro.core import TransitionMatrix
-from repro.core.memory_model import capacity_rule_of_thumb, measure, u_max
+from repro.core.memory_model import (
+    capacity_rule_of_thumb,
+    decode_step_traffic,
+    measure,
+    u_max,
+)
 from conftest import make_sids
 
 
@@ -49,3 +54,121 @@ def test_dense_d_tradeoff():
     dense_part = (0.125 + 4) * 2048 ** 2
     removed_sparse = 12 * (min(2048, 10**6) + min(2048 ** 2, 10**6))
     assert b2 - b0 == pytest.approx(dense_part - removed_sparse, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# corrected capacity rule (DESIGN.md §11 bugfix): no linear extrapolation
+# ---------------------------------------------------------------------------
+def test_capacity_rule_evaluates_u_max_directly():
+    """The dense ``(1/8+K2)V^d`` term is catalog-size independent: the rule
+    must equal ``u_max`` at the requested size, not a scaled ``u_max(1M)``
+    (which overcounted the dense term 10x at 10M SIDs and buried the
+    per-item cost at 10k)."""
+    for n in (10**4, 10**6, 10**7, 10**8):
+        assert capacity_rule_of_thumb(n) == float(u_max(2048, n, 8, dense_d=2))
+    dense = (0.125 + 4) * 2048 ** 2
+    # the old ``u_max(1M) * n/1M`` extrapolation at 10M: dense term 10x
+    wrong = capacity_rule_of_thumb(10**6) * 10
+    right = capacity_rule_of_thumb(10**7)
+    assert wrong - right == pytest.approx(9 * dense, rel=1e-6)
+
+
+@pytest.mark.parametrize("n", [10_000, 1_000_000])
+def test_measured_usage_within_capacity_rule(n):
+    """Satellite regression: a realistically clustered (RQ-VAE SIDs share
+    prefixes) catalog built at the paper's V=2048, L=8, d=2 setting must
+    fit the planning bound — actual <= u_max, no slack factor."""
+    rng = np.random.default_rng(n)
+    sids = np.unique(make_sids(rng, n, 2048, 8, clustered=True), axis=0)
+    tm = TransitionMatrix.from_sids(sids, 2048, dense_d=2)
+    m = measure(tm)
+    assert m["total_bytes"] <= capacity_rule_of_thumb(tm.n_constraints)
+    assert m["total_bytes"] <= m["u_max_bytes"]
+
+
+def test_measure_handles_dense_d0_none_tables():
+    """Satellite regression: ``measure`` used to crash on ``dense_d=0``
+    tries whose ``l0_*``/``l1_*`` tables are None (the continuous engine's
+    default registry builds exactly those)."""
+    from repro.core.trie import build_flat_trie
+
+    sids = np.unique(
+        np.random.default_rng(2).integers(0, 11, size=(30, 4)), axis=0)
+    ft = build_flat_trie(sids, 11, dense_d=0)
+    assert ft.l0_mask_packed is None and ft.l1_mask_packed is None
+    m = measure(ft)
+    assert m["dense_bytes"] == 0
+    assert m["total_bytes"] == m["sparse_bytes"] > 0
+
+
+def test_measure_with_compressed_slab(rng):
+    from repro.core.compressed_slab import CompressedSlab
+
+    sids = make_sids(rng, 3000, 64, 6, clustered=True)
+    tm = TransitionMatrix.from_sids(sids, 64, dense_d=1)
+    slab = CompressedSlab.from_matrix(tm)
+    m = measure(tm, slab=slab)
+    assert m["compressed_bytes"] < m["sparse_bytes"]
+    assert m["compression_ratio"] > 1.0
+    # the tentpole bar: >= 30% slab-byte cut (int16 deltas + dropped dst)
+    assert m["compressed_bytes"] <= 0.7 * m["sparse_bytes"]
+    assert m["compressed_total_bytes"] == m["dense_bytes"] + m["compressed_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# lane unification (DESIGN.md §8 bugfix): one constant, kernels and model
+# ---------------------------------------------------------------------------
+def test_decode_step_traffic_lane_matches_kernels():
+    from repro.core.vntk import LANE_PALLAS, LANE_XLA, candidate_width, topk_lane
+
+    assert topk_lane("pallas") == LANE_PALLAS == 128
+    assert topk_lane("xla") == LANE_XLA == 8
+    for impl in ("xla", "pallas"):
+        t = decode_step_traffic(2048, batch=4, beams=10, impl=impl)
+        assert t["lane"] == topk_lane(impl)
+        assert t["width"] == candidate_width(10, 2048, lane=topk_lane(impl))
+    # candidate traffic is V-independent; dense scales linearly (fig3)
+    a = decode_step_traffic(2048, batch=4, beams=10)
+    b = decode_step_traffic(4096, batch=4, beams=10)
+    assert b["candidate_total_bytes"] == a["candidate_total_bytes"]
+    assert b["dense_total_bytes"] == 2 * a["dense_total_bytes"]
+    assert b["compression_ratio"] > a["compression_ratio"]
+
+
+# ---------------------------------------------------------------------------
+# compressed + tiered planning (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+def test_u_max_compressed_halves_sparse_term():
+    from repro.core.memory_model import k1_compressed, u_max_compressed
+
+    assert k1_compressed(2048) == 6  # 4 rowptr + 2 int16 delta
+    assert k1_compressed(100_000) == 8  # int32 deltas past 32768 vocab
+    full = u_max(2048, 10**6, 8, dense_d=2)
+    comp = u_max_compressed(2048, 10**6, 8, dense_d=2)
+    dense = (0.125 + 4) * 2048 ** 2
+    assert (comp - dense) / (full - dense) == pytest.approx(0.5, rel=1e-6)
+
+
+def test_plan_tiers_finite_100m_and_budget_selection():
+    from repro.core.memory_model import plan_tiers
+
+    # a 100M-SID catalog: no budget => everything hot, finite bytes
+    full = plan_tiers(2048, 10**8, 8, dense_d=2, compressed=True)
+    assert full["hot_levels"] == 8 and full["host_bytes"] == 0
+    assert 0 < full["total_bytes"] < 10**13
+    # a 2 GB budget: deepest fitting boundary, accounting consistent
+    plan = plan_tiers(2048, 10**8, 8, dense_d=2, compressed=True,
+                      hbm_budget=2 * 2**30)
+    assert 2 <= plan["hot_levels"] < 8
+    assert plan["hbm_bytes"] <= 2 * 2**30
+    over = plan["level_bytes"][plan["hot_levels"] + 1]
+    assert plan["hbm_bytes"] + over > 2 * 2**30  # one level deeper busts it
+    assert plan["host_bytes"] > 0 and plan["prefetch_bytes_per_step"] > 0
+    hot_sparse = sum(v for k, v in plan["level_bytes"].items()
+                     if k <= plan["hot_levels"])
+    assert plan["total_bytes"] == (plan["dense_bytes"] + hot_sparse
+                                   + plan["host_bytes"])
+    # compression shrinks every sparse level by k1 ratio
+    raw = plan_tiers(2048, 10**8, 8, dense_d=2, compressed=False,
+                     hbm_budget=2 * 2**30)
+    assert raw["level_bytes"][8] == 2 * plan["level_bytes"][8]

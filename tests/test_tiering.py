@@ -1,0 +1,164 @@
+"""HBM/host tiering (DESIGN.md §11).
+
+Load-bearing properties: (1) tiered decoding — hot levels on device, cold
+levels host-gathered and prefetched — is bit-identical to the untiered
+:func:`beam_search` at EVERY split point, with and without the compressed
+slab and the candidate-topk path; (2) the budget-driven split picks the
+deepest boundary that fits and the byte accounting is exact; (3) the host
+gather reproduces the oracle's ``mode="fill"`` speculative window.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constraints import ConstraintStore
+from repro.constraints.tiering import (
+    TieredTrie,
+    TriePrefetcher,
+    tiered_beam_search,
+    vntk_pregathered,
+)
+from repro.core import TransitionMatrix, beam_search
+from repro.decoding import DecodePolicy
+from conftest import make_sids
+
+V, L = 23, 6
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(17)
+    sids = np.unique(make_sids(rng, 200, V, L, clustered=True), axis=0)
+    tm = TransitionMatrix.from_sids(sids, V, dense_d=1)
+    table = jnp.asarray(rng.normal(size=(L, V, V)).astype(np.float32))
+    return sids, tm, table
+
+
+def table_logits_fn(table):
+    def fn(carry, last, step):
+        return table[step][last], carry
+    return fn
+
+
+def run_untiered(tm, table, policy=None, batch=3, beams=5):
+    pol = DecodePolicy.static(tm) if policy is None else policy
+    state, _ = beam_search(table_logits_fn(table), None, batch, beams, L, pol)
+    return np.asarray(state.tokens), np.asarray(state.scores)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity across every split point x compressed x topk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("compressed", [False, True])
+@pytest.mark.parametrize("topk", [False, True])
+@pytest.mark.parametrize("hot_steps", [1, 3, L])
+def test_tiered_search_bit_identical(corpus, compressed, topk, hot_steps):
+    _, tm, table = corpus
+    want_t, want_s = run_untiered(
+        tm, table, DecodePolicy.static(tm, topk=topk, compressed=compressed))
+    tiered = TieredTrie.from_matrix(tm, hot_steps=hot_steps)
+    assert tiered.hot_steps == max(hot_steps, tm.dense_d)
+    state, _ = tiered_beam_search(
+        table_logits_fn(table), None, 3, 5, L, tiered,
+        policy=tiered.hot_policy(topk=topk, compressed=compressed))
+    np.testing.assert_array_equal(np.asarray(state.tokens), want_t)
+    np.testing.assert_array_equal(np.asarray(state.scores), want_s)
+
+
+def test_prefetcher_reuse_across_searches(corpus):
+    """A long-lived prefetcher (serving reuses one across requests) must
+    not leak state between searches."""
+    _, tm, table = corpus
+    want_t, want_s = run_untiered(tm, table)
+    tiered = TieredTrie.from_matrix(tm, hot_steps=2)
+    with TriePrefetcher(tiered) as pf:
+        for _ in range(2):
+            state, _ = tiered_beam_search(
+                table_logits_fn(table), None, 3, 5, L, tiered,
+                prefetcher=pf)
+            np.testing.assert_array_equal(np.asarray(state.tokens), want_t)
+            np.testing.assert_array_equal(np.asarray(state.scores), want_s)
+
+
+# ---------------------------------------------------------------------------
+# split selection + byte accounting
+# ---------------------------------------------------------------------------
+def test_budget_driven_split_and_tier_bytes(corpus):
+    _, tm, _ = corpus
+    edges_nb = int(np.asarray(tm.edges).nbytes)
+    fixed = tm.nbytes() - edges_nb
+    # no budget / no hot_steps: fully resident
+    full = TieredTrie.from_matrix(tm)
+    assert full.hot_steps == L and full.edges_cold.shape[0] == 0
+    assert full.tier_bytes()["host_bytes"] == 0
+    # a budget below even the fixed cost clamps to the dense band
+    tiny = TieredTrie.from_matrix(tm, hbm_budget=fixed)
+    assert tiny.hot_steps == tm.dense_d
+    # mid budget: the chosen boundary fits, one level deeper does not
+    mid = TieredTrie.from_matrix(tm, hbm_budget=fixed + edges_nb // 2)
+    tb = mid.tier_bytes()
+    assert tm.dense_d <= mid.hot_steps < L
+    assert tb["hbm_bytes"] <= fixed + edges_nb // 2
+    deeper = int(mid.blocks.edge_offsets[mid.hot_steps + 1]) * 8
+    assert fixed + deeper > fixed + edges_nb // 2
+    # hot + cold cover exactly the real edges
+    assert tb["cold_base"] * 8 + tb["host_bytes"] == tm.n_edges * 8
+
+
+def test_gather_cold_matches_oracle_window(corpus):
+    """The host gather must equal the zero-filled speculative window the
+    device oracle reads — including rows whose window straddles the
+    hot/cold boundary or runs past the slab end."""
+    _, tm, _ = corpus
+    tiered = TieredTrie.from_matrix(tm, hot_steps=2)
+    step = 3
+    bmax = max(tm.bmax_for_step(step), 1)
+    rng = np.random.default_rng(5)
+    lo, hi = int(tiered.blocks.state_offsets[step]), int(
+        tiered.blocks.state_offsets[step + 1])
+    nodes = rng.integers(lo, hi, size=(9,))
+    g, lens = tiered.gather_cold(nodes, step)
+    rp = np.asarray(tm.row_pointers, dtype=np.int64)
+    edges = np.asarray(tm.edges, dtype=np.int32)
+    for i, n in enumerate(nodes):
+        assert lens[i] == rp[n + 1] - rp[n]
+        for j in range(bmax):
+            e = rp[n] + j
+            want = (edges[e] if tiered.cold_base <= e < tm.n_edges
+                    else np.zeros(2, np.int32))
+            np.testing.assert_array_equal(g[i, j], want, err_msg=f"{i},{j}")
+    with pytest.raises(ValueError, match="hot"):
+        tiered.gather_cold(nodes, 0)
+
+
+def test_vntk_pregathered_matches_reference(corpus):
+    from repro.core.vntk import vntk_xla
+
+    _, tm, _ = corpus
+    tiered = TieredTrie.from_matrix(tm, hot_steps=2)
+    step = 4
+    bmax = max(tm.bmax_for_step(step), 1)
+    rng = np.random.default_rng(6)
+    lo, hi = int(tiered.blocks.state_offsets[step]), int(
+        tiered.blocks.state_offsets[step + 1])
+    nodes = jnp.asarray(rng.integers(lo, hi, size=(7,)), jnp.int32)
+    lp = jnp.asarray(rng.normal(size=(7, V)).astype(np.float32))
+    g, lens = tiered.gather_cold(np.asarray(nodes), step)
+    got_lp, got_nx = vntk_pregathered(lp, jnp.asarray(g), jnp.asarray(lens), V)
+    want_lp, want_nx = vntk_xla(lp, nodes, tm, bmax)
+    np.testing.assert_array_equal(np.asarray(got_lp), np.asarray(want_lp))
+    np.testing.assert_array_equal(np.asarray(got_nx), np.asarray(want_nx))
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+def test_tiering_rejects_stacked_and_pallas(corpus):
+    _, tm, _ = corpus
+    store = ConstraintStore.from_matrices([tm, tm])
+    with pytest.raises(NotImplementedError, match="single TransitionMatrix"):
+        TieredTrie.from_matrix(store)
+    tiered = TieredTrie.from_matrix(tm, hot_steps=2)
+    with pytest.raises(ValueError, match="pallas"):
+        tiered.hot_policy(impl="pallas")
