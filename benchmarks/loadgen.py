@@ -53,7 +53,7 @@ from repro.decoding import DecodePolicy
 from repro.launch.mesh import make_subset_mesh
 from repro.models import transformer
 from repro.observability import MetricsRegistry, annotate
-from repro.pipelines import gr_model_config
+from repro.scenarios import gr_model_config
 from repro.serving.continuous import ContinuousServingEngine
 from repro.serving.engine import RequestQueue, ServingEngine
 from repro.serving.generative_retrieval import GenerativeRetriever

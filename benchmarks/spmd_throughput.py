@@ -40,7 +40,7 @@ from repro.core import TransitionMatrix  # noqa: E402
 from repro.decoding import DecodePolicy  # noqa: E402
 from repro.launch.mesh import make_subset_mesh  # noqa: E402
 from repro.models import transformer  # noqa: E402
-from repro.pipelines import gr_model_config  # noqa: E402
+from repro.scenarios import gr_model_config  # noqa: E402
 from repro.serving.engine import RequestQueue, ServingEngine  # noqa: E402
 from repro.serving.generative_retrieval import (  # noqa: E402
     GenerativeRetriever,

@@ -1,34 +1,60 @@
 """End-to-end driver (paper §6): cold-start generative retrieval.
 
-Trains the full stack on CPU in a few minutes:
-  synthetic Amazon-like corpus -> RQ-VAE Semantic IDs -> generative-retrieval
-  transformer (several hundred steps) -> Recall@1 with
-  {unconstrained, constrained-random, STATIC} decoding.
+Launches the ``cold_start_amazon`` scenario through the ScenarioRegistry —
+synthetic Amazon-like corpus -> RQ-VAE Semantic IDs -> generative-retrieval
+transformer -> STATIC serving on the cold-only ConstraintRegistry slot,
+reporting Recall@1 and hit-rate@M for {unconstrained, constrained-random,
+STATIC}.  Quickstart::
 
     PYTHONPATH=src python examples/cold_start_amazon.py [--quick]
+
+    # equivalent, via the unified launcher (any config field overridable):
+    PYTHONPATH=src python -m repro.launch.run_scenario \\
+        --scenario cold_start_amazon --smoke --set data.cold_frac=0.05
+
+or from Python::
+
+    from repro.scenarios import get_default_registry
+    run = get_default_registry().resolve("cold_start_amazon", smoke=True)
+    result = run.run(log=print)["result"]
 """
 import argparse
 
-from repro.pipelines import run_cold_start_experiment
+from repro.scenarios import get_default_registry
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-size corpus + short training")
     ap.add_argument("--cold-frac", type=float, default=0.02)
+    ap.add_argument("--trie-aware", type=float, default=0.0, metavar="W",
+                    help="weight of the trie-aware admissible-mass "
+                         "auxiliary loss (0 = off)")
     args = ap.parse_args()
 
-    res = run_cold_start_experiment(
-        cold_frac=args.cold_frac,
-        train_steps=150 if args.quick else 500,
-        log=print,
+    run = get_default_registry().resolve(
+        "cold_start_amazon",
+        smoke=args.quick,
+        overrides={
+            "data.cold_frac": args.cold_frac,
+            "train.trie_aware_weight": args.trie_aware,
+        },
     )
+    res = run.run(log=print)["result"]
+    m = res["beam_size"]
     print("\n=== Table 3 (reproduced on synthetic Amazon-like data) ===")
     print(f"cold-start fraction : {res['cold_frac']*100:.0f}% "
           f"({res['n_cold']} items, {res['n_test']} test sequences)")
-    print(f"Unconstrained        Recall@1: {res['recall@1_unconstrained']*100:6.2f}%")
-    print(f"Constrained Random   Recall@1: {res['recall@1_constrained_random']*100:6.2f}%")
-    print(f"STATIC (ours)        Recall@1: {res['recall@1_static']*100:6.2f}%")
+    print(f"Unconstrained        Recall@1: "
+          f"{res['recall@1_unconstrained']*100:6.2f}%   "
+          f"hit@{m}: {res['hit@M_unconstrained']*100:6.2f}%")
+    print(f"Constrained Random   Recall@1: "
+          f"{res['recall@1_constrained_random']*100:6.2f}%")
+    print(f"STATIC (ours)        Recall@1: "
+          f"{res['recall@1_static']*100:6.2f}%   "
+          f"hit@{m}: {res['hit@M_static']*100:6.2f}%")
+    print(f"gates: {res['gates']}")
 
 
 if __name__ == "__main__":

@@ -23,7 +23,7 @@ from repro.constraints import (
 from repro.core.vntk import NEG_INF
 from repro.decoding import DecodePolicy
 from repro.models import transformer
-from repro.pipelines import gr_model_config
+from repro.scenarios import gr_model_config
 from repro.serving.engine import RequestQueue, ServingEngine
 from repro.serving.generative_retrieval import GenerativeRetriever
 

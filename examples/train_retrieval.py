@@ -2,9 +2,18 @@
 
 Demonstrates the full training substrate: sharded deterministic loader,
 microbatch accumulation, int8 error-feedback gradient compression, atomic
-async checkpointing, and exact resume after a simulated crash.
+async checkpointing, and exact resume after a simulated crash.  Quickstart::
 
     PYTHONPATH=src python examples/train_retrieval.py
+
+The tokenizer/model plumbing here comes from the scenario stage layer
+(``repro.scenarios``): ``train_rqvae`` + ``assign_dedup_tokens`` build the
+Semantic IDs and ``gr_model_config`` sizes the retrieval transformer — the
+same builders the ``cold_start_amazon`` scenario composes.  For the full
+declarative pipeline (constraint index + serving + eval) use::
+
+    PYTHONPATH=src python -m repro.launch.run_scenario \\
+        --scenario cold_start_amazon --smoke
 """
 import os
 import shutil
@@ -15,7 +24,7 @@ import jax
 from repro.data.loader import ShardedBatcher
 from repro.data.synthetic import make_item_corpus, make_user_sequences
 from repro.models import transformer
-from repro.pipelines import gr_model_config, train_rqvae
+from repro.scenarios import gr_model_config, train_rqvae
 from repro.configs.base import RQVAEConfig
 from repro.models import rqvae
 from repro.training.optimizer import adamw

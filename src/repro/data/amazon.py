@@ -28,9 +28,26 @@ __all__ = ["ColdStartData", "make_cold_start_dataset"]
 class ColdStartData:
     item_feats: np.ndarray  # (N, F)
     item_age: np.ndarray  # (N,) smaller = older
+    item_cluster: np.ndarray  # (N,) int cluster id (catalog "category")
     cold_items: np.ndarray  # (n_cold,) item ids
     train_seqs: np.ndarray  # (n_train, T) no cold items anywhere
     test_seqs: np.ndarray  # (n_test, T) target (last) is cold
+
+    @property
+    def n_items(self) -> int:
+        return self.item_feats.shape[0]
+
+    @property
+    def age_days(self) -> np.ndarray:
+        """Age rank recast as days-since-publication (newest item = 0).
+
+        ``item_age`` is a recency rank (larger = newer); the constraint
+        layer's :func:`~repro.constraints.freshness_window` wants "days
+        old", so the newest item maps to 0 and the oldest to ``N - 1``.
+        With ``n_cold`` cold items, ``freshness_window(n_cold - 0.5)``
+        selects exactly the cold set.
+        """
+        return (self.n_items - 1 - self.item_age).astype(np.float64)
 
 
 def make_cold_start_dataset(
@@ -58,6 +75,7 @@ def make_cold_start_dataset(
     return ColdStartData(
         item_feats=feats,
         item_age=age,
+        item_cluster=cid,
         cold_items=np.sort(cold_items),
         train_seqs=train_seqs,
         test_seqs=test_seqs,

@@ -24,6 +24,15 @@ continuous   Step-boundary ``ContinuousServingEngine`` (DESIGN.md §10).
 
 Per-request results are bit-identical across all three engines (fuzz-
 asserted in tests/test_continuous.py and tests/test_spmd_serving.py).
+
+The old demo modes (``--num-constraint-sets`` mixed-tenant batches and the
+``--refresh-interval`` async-churn loop) moved to the scenario registry —
+they are the ``multi_constraint`` and ``refresh_churn`` scenarios::
+
+    PYTHONPATH=src python -m repro.launch.run_scenario \
+        --scenario multi_constraint --smoke
+    PYTHONPATH=src python -m repro.launch.run_scenario \
+        --scenario refresh_churn --smoke --set serve.refresh_cycles=4
 """
 from __future__ import annotations
 
@@ -43,7 +52,7 @@ from repro.observability import (
     StepTimer,
     start_http_server,
 )
-from repro.pipelines import gr_model_config
+from repro.scenarios import gr_model_config
 from repro.serving.generative_retrieval import GenerativeRetriever
 
 logger = logging.getLogger("repro.launch.serve")
@@ -66,21 +75,6 @@ def main():
                     help="disable candidate-compressed decoding and use the "
                          "vocab-aligned dense advance at every level "
                          "(DESIGN.md §8; bit-identical, for A/B timing)")
-    ap.add_argument("--num-constraint-sets", type=int, default=0, metavar="K",
-                    help="also build K synthetic business-constraint sets via "
-                         "the ConstraintRegistry and report the stacked "
-                         "ConstraintStore footprint + a mixed-constraint "
-                         "retrieval batch")
-    ap.add_argument("--refresh-interval", type=float, default=0.0,
-                    metavar="SECS",
-                    help="with --num-constraint-sets: run an AsyncRefresher "
-                         "that churns ~1%% of the catalog every SECS seconds "
-                         "on a background thread (delta-aware trie rebuilds, "
-                         "DESIGN.md §7) while serving keeps retrieving; "
-                         "reports versions observed and asserts the swaps "
-                         "stayed zero-recompile")
-    ap.add_argument("--refresh-cycles", type=int, default=3,
-                    help="churn cycles to run under --refresh-interval")
     ap.add_argument("--engine", choices=["batch", "spmd", "continuous"],
                     default="batch",
                     help="serving engine (see the module docstring's "
@@ -203,100 +197,6 @@ def main():
         stats.dispatch_median * 1e3, compliant,
     )
     logger.info("top-1 SIDs: %s", beams[:, 0, :].tolist())
-
-    if args.num_constraint_sets > 0 and tm is not None:
-        from repro.constraints import (
-            ConstraintRegistry, freshness_window, synthetic_catalog,
-        )
-
-        K = args.num_constraint_sets
-        catalog = synthetic_catalog(
-            rng, args.constraints, args.vocab, args.sid_length
-        )
-        reg = ConstraintRegistry(args.vocab, headroom=0.5, metrics=metrics)
-        for k in range(K):
-            # staggered freshness windows: slot k serves items newer than
-            # (k+1)/K of the catalog age span
-            reg.register(f"fresh_{k}", freshness_window(90.0 * (k + 1) / K))
-        t0 = time.time()
-        store = reg.build(catalog)
-        logger.info(
-            "constraint store: K=%d sets, %d state envelope (%.2fs build, "
-            "registry v%d)", K, store.n_states, time.time() - t0, reg.version)
-        logger.info(
-            "  stacked store %.2f MB vs single matrix %.2f MB (%.1fx for "
-            "%d tenants)", store.nbytes() / 1e6, tm.nbytes() / 1e6,
-            store.nbytes() / max(tm.nbytes(), 1), K)
-        mc_policy = DecodePolicy.stacked(store, impl=args.impl,
-                                         fused=args.fused,
-                                         topk=not args.no_topk)
-        r_mc = GenerativeRetriever(params, cfg, mc_policy, args.sid_length,
-                                   args.vocab, beam_size=args.beam)
-        cids = np.arange(args.batch, dtype=np.int32) % K
-        beams_mc, scores_mc = r_mc.retrieve(hist, constraint_ids=cids)
-        valid_per_set = [
-            {tuple(x) for x in catalog.sids[
-                catalog.age_days <= 90.0 * (k + 1) / K]}
-            for k in range(K)
-        ]
-        ok = all(
-            tuple(beams_mc[b, m]) in valid_per_set[cids[b]]
-            for b in range(args.batch) for m in range(args.beam)
-            if scores_mc[b, m] > NEG_INF / 2
-        )
-        logger.info("  mixed-constraint batch (cids %s): per-request "
-                    "compliance %s", cids.tolist(), ok)
-
-        if args.refresh_interval > 0:
-            from repro.constraints import AsyncRefresher, CatalogDelta
-
-            compiles = []
-            jax.monitoring.register_event_duration_secs_listener(
-                lambda name, *a, **kw: compiles.append(name)
-                if "backend_compile" in name else None
-            )
-            current = catalog
-            cold_swaps = 0
-            with AsyncRefresher(reg) as refresher:
-                for cycle in range(args.refresh_cycles):
-                    churn = max(1, current.sids.shape[0] // 100)
-                    rm = current.sids[
-                        rng.choice(current.sids.shape[0], churn,
-                                   replace=False)
-                    ]
-                    added = synthetic_catalog(
-                        rng, churn, args.vocab, args.sid_length
-                    )
-                    fut = refresher.apply_delta_async(
-                        CatalogDelta(added=added, removed_sids=rm)
-                    )
-                    current = current.apply_delta(
-                        CatalogDelta(added=added, removed_sids=rm)
-                    )
-                    # serving keeps going while the rebuild runs off-thread
-                    beams_mc, _ = r_mc.retrieve(hist, constraint_ids=cids)
-                    v = fut.result(timeout=120)
-                    store, _ = reg.current()
-                    cold = r_mc.set_constraints(store)  # engine batch boundary
-                    cold_swaps += int(cold)
-                    beams_mc, _ = r_mc.retrieve(hist, constraint_ids=cids)
-                    logger.info(
-                        "  refresh cycle %d: +/-%d items -> registry v%s "
-                        "(cold=%s), top-1 %s", cycle, churn, v, cold,
-                        beams_mc[0, 0].tolist())
-                    time.sleep(args.refresh_interval)
-            # a cold (regrown-envelope) swap retraces exactly once; hot
-            # swaps must compile NOTHING — enforce it, don't just print it
-            if len(compiles) != cold_swaps:
-                raise SystemExit(
-                    f"refresh demo: {len(compiles)} recompiles for "
-                    f"{cold_swaps} cold swap(s) — hot swaps must stay "
-                    "zero-recompile"
-                )
-            logger.info(
-                "  async refresh: %d cycles, %d cold swap(s), %d recompiles "
-                "(hot swaps stayed zero-recompile)", args.refresh_cycles,
-                cold_swaps, len(compiles))
 
     if args.metrics_json:
         metrics.write_snapshot(args.metrics_json)

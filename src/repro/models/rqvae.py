@@ -11,11 +11,18 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import RQVAEConfig
 from repro.models.layers import mlp, mlp_init
 
-__all__ = ["init_params", "rqvae_loss", "encode_to_sids", "decode_from_sids"]
+__all__ = [
+    "init_params",
+    "rqvae_loss",
+    "encode_to_sids",
+    "decode_from_sids",
+    "assign_dedup_tokens",
+]
 
 
 def init_params(cfg: RQVAEConfig, key: jax.Array):
@@ -79,3 +86,28 @@ def decode_from_sids(params, sids: jax.Array, cfg: RQVAEConfig) -> jax.Array:
     for lvl in range(cfg.n_levels):
         q = q + params["codebooks"][lvl][sids[:, lvl]]
     return mlp(params["decoder"], q)
+
+
+def assign_dedup_tokens(sids: np.ndarray, codebook_size: int) -> np.ndarray:
+    """(N, L') RQ-level codes -> (N, L'+1) with the TIGER dedup token.
+
+    Items that collide on all L' quantizer levels get distinct final tokens
+    (their 0-based rank within the collision group, mod ``codebook_size``),
+    so every item has a unique Semantic ID as long as no group exceeds the
+    codebook (``tests/test_rqvae_data.py`` pins that bound).  Host-side
+    helper — runs once per tokenization, not inside jit.
+    """
+    sids = np.asarray(sids)
+    n = sids.shape[0]
+    order = np.lexsort(tuple(sids[:, c] for c in
+                             range(sids.shape[1] - 1, -1, -1)))
+    s = sids[order]
+    new_group = np.ones(n, dtype=bool)
+    if n > 1:
+        new_group[1:] = (s[1:] != s[:-1]).any(axis=1)
+    group_start = np.maximum.accumulate(
+        np.where(new_group, np.arange(n), 0))
+    rank = np.empty(n, dtype=np.int64)
+    rank[order] = np.arange(n) - group_start
+    return np.concatenate(
+        [sids, (rank % codebook_size)[:, None].astype(sids.dtype)], axis=1)

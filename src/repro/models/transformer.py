@@ -38,8 +38,9 @@ from repro.models.layers import (
 from repro.models.moe import moe_ffn, moe_init
 
 __all__ = [
-    "init_params", "param_specs", "forward", "lm_loss", "prefill",
-    "decode_step", "paged_decode_step", "init_cache",
+    "init_params", "param_specs", "forward", "lm_loss",
+    "lm_loss_trie_aware", "prefill", "decode_step", "paged_decode_step",
+    "init_cache",
 ]
 
 
@@ -289,6 +290,44 @@ def lm_loss(params, tokens: jax.Array, cfg: TransformerConfig,
     tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls, vs),
                           unroll=n if cfg.inner_unroll else 1)
     return tot / (B * (S - 1)) + aux
+
+
+def lm_loss_trie_aware(params, tokens: jax.Array, cfg: TransformerConfig,
+                       adm_mask: jax.Array, weight: float):
+    """Next-token CE + the trie-aware admissible-mass auxiliary loss.
+
+    ``adm_mask`` is (B, S, V) bool: the constrained decoder's admissible
+    token set at the position of the token AT each index (the per-prefix
+    sets from :mod:`repro.scenarios.trie_signal`, gathered per item).  The
+    auxiliary term is the probability mass the model puts OUTSIDE the
+    admissible set, in log space::
+
+        logsumexp(logits) - logsumexp(logits[admissible])
+
+    i.e. -log P(admissible) — zero when the model concentrates on tokens
+    the trie will accept, so training pushes mass toward decodable SIDs
+    (Trie-Aware Transformers, arxiv 2602.21677).  Targets drawn from the
+    trie are always admissible, so the CE target never sits outside its
+    own mask.  Dense (B, S, V) logits — this loss serves the small GR
+    retrieval model (V = a few hundred), not the chunked-CE giants.
+    """
+    x, _, aux = forward(params, tokens, cfg)
+    labels = jnp.roll(tokens, -1, axis=1)
+    # align masks with labels: position p scores the token at p+1
+    mask = jnp.roll(adm_mask, -1, axis=1)
+    B, S, D = x.shape
+    valid = (jnp.arange(S) < S - 1).astype(jnp.float32)
+    w = _unemb(params, cfg)
+    logits = (x @ w).astype(jnp.float32)  # (B, S, V)
+    lse_full = jax.nn.logsumexp(logits, axis=-1)
+    # -1e30 (not -inf): an all-False row would otherwise yield nan grads
+    lse_adm = jax.nn.logsumexp(
+        jnp.where(mask, logits, jnp.float32(-1e30)), axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    denom = B * (S - 1)
+    ce = jnp.sum((lse_full - ll) * valid) / denom
+    trie_aux = jnp.sum((lse_full - lse_adm) * valid) / denom
+    return ce + aux + weight * trie_aux
 
 
 # --------------------------------------------------------------------------

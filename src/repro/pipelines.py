@@ -1,162 +1,62 @@
-"""End-to-end pipelines composing the full stack.
+"""Compatibility shims over the scenario pipeline (DESIGN.md §12).
 
-``run_cold_start_experiment`` is the paper's §6 protocol on synthetic
-Amazon-like data: RQ-VAE tokenization (L=4, |V|=256) -> generative-retrieval
-training on no-cold-start sequences -> Recall@1 on cold-start targets for
-{unconstrained, constrained-random, STATIC}.  Used by
-``benchmarks/table3_coldstart.py`` and ``examples/cold_start_amazon.py``.
+The end-to-end cold-start experiment now lives in
+:mod:`repro.scenarios` — declarative :class:`~repro.scenarios
+.ScenarioConfig`s resolved by the :class:`~repro.scenarios
+.ScenarioRegistry` into composed ``Data -> Tokenizer -> Index -> Train ->
+Serve -> Eval`` stages, serving through the production
+``ConstraintRegistry`` + ``DecodePolicy`` + engine stack (no hand-rolled
+masking).  This module keeps the historical entry points alive:
+
+  * :func:`run_cold_start_experiment` — the paper's §6 protocol, returning
+    the same result keys as before (plus the new hit@M metrics), now a thin
+    wrapper over the ``cold_start_amazon`` scenario.
+  * :func:`gr_model_config` / :func:`train_rqvae` — re-exported from
+    :mod:`repro.scenarios.stages`, their new home.
+
+Prefer ``launch/run_scenario.py`` (or ``get_default_registry()`` directly)
+for new code.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import RQVAEConfig, TransformerConfig
-from repro.core import TransitionMatrix
-from repro.core.vntk import NEG_INF
-from repro.data.amazon import make_cold_start_dataset
-from repro.data.loader import ShardedBatcher
-from repro.models import rqvae, transformer
-from repro.serving.generative_retrieval import GenerativeRetriever
-from repro.training.optimizer import adamw
-from repro.training.trainer import Trainer, TrainerConfig
+from repro.scenarios.stages import gr_model_config, train_rqvae
 
 __all__ = ["run_cold_start_experiment", "train_rqvae", "gr_model_config"]
-
-
-def gr_model_config(vocab: int = 256, small: bool = True) -> TransformerConfig:
-    return TransformerConfig(
-        name="gr-coldstart",
-        n_layers=4,
-        d_model=128,
-        n_heads=4,
-        n_kv_heads=4,
-        d_ff=256,
-        vocab_size=vocab,
-        head_dim=32,
-        tie_embeddings=True,
-        dtype="float32",
-        attn_chunk_q=64,
-        attn_chunk_kv=64,
-    )
-
-
-def train_rqvae(feats: np.ndarray, cfg: RQVAEConfig, steps: int = 400,
-                seed: int = 0, log=lambda *a: None):
-    params = rqvae.init_params(cfg, jax.random.key(seed))
-    opt = adamw(lr=3e-3, weight_decay=0.0)
-    state = opt.init(params)
-    rng = np.random.default_rng(seed)
-
-    @jax.jit
-    def step(params, state, batch, i):
-        loss, g = jax.value_and_grad(
-            lambda p: rqvae.rqvae_loss(p, batch, cfg)
-        )(params)
-        params, state = opt.update(g, state, params, i)
-        return params, state, loss
-
-    for i in range(steps):
-        idx = rng.integers(0, feats.shape[0], 256)
-        params, state, loss = step(
-            params, state, jnp.asarray(feats[idx]), jnp.asarray(i)
-        )
-        if i % 100 == 0:
-            log(f"rqvae step {i}: loss {float(loss):.4f}")
-    return params
 
 
 def run_cold_start_experiment(
     cold_frac: float = 0.02,
     seed: int = 0,
-    n_items: int = 2_000,
-    train_steps: int = 500,
-    beam_size: int = 20,
+    n_items: int | None = None,
+    train_steps: int | None = None,
+    beam_size: int | None = None,
     log=lambda *a: None,
+    smoke: bool = False,
+    trie_aware_weight: float = 0.0,
 ) -> dict:
-    data = make_cold_start_dataset(seed=seed, n_items=n_items,
-                                   cold_frac=cold_frac)
-    # L=4 total: 3 RQ-VAE levels + 1 deduplication token (TIGER's collision
-    # fix — items sharing an RQ prefix get distinct final tokens, so every
-    # item has a unique Semantic ID).
-    rq_cfg = RQVAEConfig(feat_dim=data.item_feats.shape[1], n_levels=3,
-                         codebook_size=256)
-    rq_params = train_rqvae(data.item_feats, rq_cfg, log=log)
-    sids3 = np.asarray(
-        rqvae.encode_to_sids(rq_params, jnp.asarray(data.item_feats), rq_cfg)
-    )  # (N, 3)
-    order = np.lexsort(tuple(sids3[:, c] for c in range(2, -1, -1)))
-    rank = np.zeros(n_items, np.int64)
-    prev = None
-    r = 0
-    for i in order:
-        cur = tuple(sids3[i])
-        r = r + 1 if cur == prev else 0
-        rank[i] = r
-        prev = cur
-    sids = np.concatenate(
-        [sids3, (rank % rq_cfg.codebook_size)[:, None]], axis=1
-    )  # (N, 4)
-    L, V = 4, rq_cfg.codebook_size
-    log(f"unique SIDs: {np.unique(sids, axis=0).shape[0]}/{n_items}")
+    """Run the ``cold_start_amazon`` scenario; returns its result dict.
 
-    # --- tokenize sequences: item -> its L SID tokens, next-item LM loss ---
-    cfg = gr_model_config(V)
-    params = transformer.init_params(cfg, jax.random.key(seed + 1))
+    Keys match the historical surface (``recall@1_unconstrained``,
+    ``recall@1_constrained_random``, ``recall@1_static``, ``cold_frac``,
+    ``n_cold``, ``n_test``) plus ``hit@M_static`` / ``hit@M_unconstrained``
+    and the ``gates`` block from the scenario's EvalStage.  ``None`` sizes
+    defer to the scenario config (the full-size defaults, or the smoke
+    shrink under ``smoke=True``).
+    """
+    from repro.scenarios import get_default_registry
 
-    def to_tokens(seqs):
-        return sids[seqs].reshape(seqs.shape[0], -1).astype(np.int32)
-
-    train_tokens = to_tokens(data.train_seqs)
-
-    def loss_fn(p, batch):
-        return transformer.lm_loss(p, batch["tokens"], cfg)
-
-    trainer = Trainer(
-        loss_fn, adamw(lr=1e-3, weight_decay=0.0), params,
-        TrainerConfig(n_steps=train_steps, log_every=100),
-    )
-    batches = ShardedBatcher({"tokens": train_tokens}, global_batch=64,
-                             seed=seed)
-    trainer.fit(batches, log=log)
-
-    # --- evaluation on cold-start targets (paper Table 3 protocol) ---
-    cold_sids = sids[data.cold_items]
-    tm = TransitionMatrix.from_sids(cold_sids, V, dense_d=2)
-    test = data.test_seqs
-    if test.shape[0] > 256:
-        test = test[:256]
-    hist_tokens = to_tokens(test[:, :-1])
-    target_sids = sids[test[:, -1]]
-
-    def recall_at_1(retriever) -> float:
-        beams, scores = retriever.retrieve(hist_tokens)
-        top = beams[:, 0, :]
-        alive = scores[:, 0] > NEG_INF / 2
-        hit = (top == target_sids).all(axis=1) & alive
-        return float(hit.mean())
-
-    gr_static = GenerativeRetriever(
-        trainer.params, cfg, tm, sid_length=L, sid_vocab=V, beam_size=beam_size
-    )
-    gr_uncon = GenerativeRetriever(
-        trainer.params, cfg, None, sid_length=L, sid_vocab=V, beam_size=beam_size
-    )
-    r_static = recall_at_1(gr_static)
-    r_uncon = recall_at_1(gr_uncon)
-    # constrained random guessing: uniform over the cold-start corpus
-    rng = np.random.default_rng(seed + 7)
-    guesses = cold_sids[rng.integers(0, cold_sids.shape[0], test.shape[0])]
-    r_random = float((guesses == target_sids).all(axis=1).mean())
-
-    return {
-        "cold_frac": cold_frac,
-        "n_cold": int(data.cold_items.shape[0]),
-        "n_test": int(test.shape[0]),
-        "recall@1_unconstrained": r_uncon,
-        "recall@1_constrained_random": r_random,
-        "recall@1_static": r_static,
+    overrides = {
+        "data.cold_frac": cold_frac,
+        "train.trie_aware_weight": trie_aware_weight,
     }
+    if n_items is not None:
+        overrides["data.n_items"] = n_items
+    if train_steps is not None:
+        overrides["train.steps"] = train_steps
+    if beam_size is not None:
+        overrides["serve.beam"] = beam_size
+    run = get_default_registry().resolve(
+        "cold_start_amazon", smoke=smoke, overrides=overrides, seed=seed,
+    )
+    ctx = run.run(log=log)
+    return ctx["result"]

@@ -1,0 +1,61 @@
+"""Scenario registry: one declarative launch surface (DESIGN.md §12).
+
+A scenario is a frozen :class:`ScenarioConfig` resolved by the
+:class:`ScenarioRegistry` into a composed, resumable pipeline of stages
+(``Data -> Tokenizer -> Index -> Train -> Serve -> Eval``).  Quickstart::
+
+    from repro.scenarios import get_default_registry
+
+    run = get_default_registry().resolve("cold_start_amazon", smoke=True)
+    ctx = run.run(log=print)
+    print(ctx["result"])          # metrics + gates
+
+or from the CLI::
+
+    PYTHONPATH=src python -m repro.launch.run_scenario \\
+        --scenario cold_start_amazon --smoke --json BENCH_coldstart.json
+"""
+from repro.scenarios import trie_signal
+from repro.scenarios.config import (
+    DataConfig,
+    EvalConfig,
+    IndexConfig,
+    ScenarioConfig,
+    ServeConfig,
+    SlotSpec,
+    TokenizerConfig,
+    TrainConfig,
+    apply_overrides,
+    config_to_dict,
+    parse_override,
+)
+from repro.scenarios.registry import (
+    ScenarioRegistry,
+    ScenarioRun,
+    ScenarioSpec,
+    get_default_registry,
+)
+from repro.scenarios.stages import (
+    DataStage,
+    EvalStage,
+    IndexStage,
+    ServeStage,
+    Stage,
+    TokenizerStage,
+    TrainStage,
+    default_stages,
+    gr_model_config,
+    run_pipeline,
+    train_rqvae,
+)
+
+__all__ = [
+    "ScenarioConfig", "DataConfig", "TokenizerConfig", "IndexConfig",
+    "TrainConfig", "ServeConfig", "EvalConfig", "SlotSpec",
+    "apply_overrides", "parse_override", "config_to_dict",
+    "ScenarioRegistry", "ScenarioRun", "ScenarioSpec",
+    "get_default_registry",
+    "Stage", "DataStage", "TokenizerStage", "IndexStage", "TrainStage",
+    "ServeStage", "EvalStage", "default_stages", "run_pipeline",
+    "gr_model_config", "train_rqvae", "trie_signal",
+]

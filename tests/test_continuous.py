@@ -21,7 +21,7 @@ from repro.constraints import (
 from repro.core import TransitionMatrix
 from repro.decoding import DecodePolicy
 from repro.models import transformer
-from repro.pipelines import gr_model_config
+from repro.scenarios import gr_model_config
 from repro.serving.continuous import (
     ContinuousServingEngine,
     PagedKVAllocator,
