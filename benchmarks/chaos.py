@@ -1,0 +1,475 @@
+"""Chaos harness: seeded fault schedules replayed through the serving stack.
+
+Reuses the loadgen workload (``benchmarks.loadgen``) and drives all three
+engines under a deterministic :class:`~repro.reliability.FaultInjector`,
+asserting the DESIGN.md §13 reliability contract end to end:
+
+  1. **Bit-identity under faults** — for each engine, the same request
+     stream is served fault-free and then under a seeded schedule of
+     decode delays, decode errors, page-allocation failures and admission
+     overload.  Every request the faulted run *completes* must be
+     bit-identical (sids AND scores) to the fault-free run; requests may
+     be shed, but never answered differently — and never answered with a
+     SID outside its constraint slot's admissible catalog (zero
+     constraint violations).  The paged-KV ``free ⊎ referenced``
+     invariant is checked at the instant of every injected fault
+     (injector ``on_fire``) and after each engine drains.
+  2. **Refresh faults** — transient ``refresh.build`` failures are
+     absorbed by the AsyncRefresher's retry policy (version advances,
+     ``constraint_staleness_seconds`` returns to 0); a terminal failure
+     leaves the last-good front buffer installed and serving continues on
+     stale constraints with staleness > 0, then converges on the next
+     successful swap.
+  3. **Breaker ladder** — consecutive injected decode failures open the
+     circuit, new submissions shed at admission with reason
+     ``breaker_open``, and after ``recovery_s`` the half-open probe
+     closes it again (open → half_open → closed observed via the
+     transition counter).
+  4. **Tiering faults** — transient ``tiering.host_fetch`` failures retry
+     inside the prefetch overlap window and the staged burst is
+     bit-identical; a persistent failure surfaces as an exception from
+     the future (search stops; no unconstrained fallback).
+  5. **Goodput under chaos** — the continuous engine absorbs a calibrated
+     mid-QPS open-loop run with probabilistic decode delays at
+     goodput >= 0.8.
+
+    PYTHONPATH=src python -m benchmarks.chaos --smoke --out BENCH_chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.loadgen import (
+    build_workload,
+    calibrate_qps,
+    make_engines,
+    run_open_loop,
+)
+from repro.constraints import synthetic_catalog
+from repro.constraints.refresh import AsyncRefresher
+from repro.constraints.tiering import TieredTrie, TriePrefetcher
+from repro.core import TransitionMatrix
+from repro.observability import MetricsRegistry
+from repro.reliability import (
+    CLOSED,
+    OPEN,
+    AdmissionController,
+    CircuitBreaker,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    active_injector,
+)
+from repro.serving.engine import RequestQueue
+
+NEG_INF_FLOOR = -1e29  # beams below this are unfilled padding rows
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+def make_stream(w, n: int, seed: int):
+    """Deterministic (prompt, constraint_id) request stream."""
+    rng = np.random.default_rng(seed)
+    pool = rng.integers(0, w["vocab"], size=(8, 8)).astype(np.int32)
+    picks = rng.integers(0, len(pool), size=n)
+    return [(pool[picks[i]], int(i % w["n_slots"])) for i in range(n)]
+
+
+def serve_stream(engine, stream, L: int) -> dict:
+    """Fresh queue, submit the whole stream, drain through the engine.
+    Rids are queue-local and start at 0, so they align across runs."""
+    q = RequestQueue()
+    for prompt, cid in stream:
+        q.submit(prompt, n_tokens=L, constraint_id=cid)
+    results: dict = {}
+    while True:
+        results.update(engine.serve(q))
+        if not len(q):
+            break
+    return results
+
+
+def valid_sid_sets(registry):
+    """Per-slot set of admissible SID tuples, straight from the registry's
+    retained sources (the ground truth the masks were built from)."""
+    return [
+        {tuple(int(t) for t in row) for row in registry.slot_sids(slot)}
+        for slot in range(len(registry.names))
+    ]
+
+
+def count_violations(results, valid_sets) -> int:
+    """SID beams outside their constraint slot's admissible set."""
+    bad = 0
+    for r in results.values():
+        if "sids" not in r:
+            continue
+        sids = np.asarray(r["sids"])
+        scores = np.asarray(r["scores"])
+        vset = valid_sets[int(r["constraint_id"])]
+        for m in range(sids.shape[0]):
+            if scores[m] <= NEG_INF_FLOOR:
+                continue  # unfilled beam
+            if tuple(int(t) for t in sids[m]) not in vset:
+                bad += 1
+    return bad
+
+
+def unexpected_recompiles(engine) -> int:
+    return int(engine.metrics.counter(
+        "serving_recompiles_total").value(expected="false"))
+
+
+# ---------------------------------------------------------------------------
+# phase 1: bit-identity + zero violations + allocator invariant
+# ---------------------------------------------------------------------------
+def phase_bit_identity(w, engines, *, seed: int, n_requests: int) -> dict:
+    stream = make_stream(w, n_requests, seed=seed + 17)
+    vsets = valid_sid_sets(w["registry"])
+    out = {}
+    for name, engine in engines.items():
+        ref = serve_stream(engine, stream, w["L"])
+
+        alloc = getattr(engine, "alloc", None)
+
+        def on_fire(point, idx, spec, _alloc=alloc):
+            if _alloc is not None:
+                _alloc.check()  # invariant holds at the instant of injection
+
+        inj = FaultInjector([
+            # delay faults: slow steps must not change a single bit
+            FaultSpec("decode.slow_step", mode="nth", calls=(0, 2),
+                      delay_s=0.002),
+            # error faults: a failed step/alloc degrades, never corrupts
+            FaultSpec("decode.slow_step", mode="nth", calls=(4,)),
+            FaultSpec("kv.page_alloc", mode="nth", calls=(1,)),
+            FaultSpec("queue.overload", mode="nth", calls=(3,)),
+        ], seed=seed, on_fire=on_fire)
+        with active_injector(inj):
+            faulted = serve_stream(engine, stream, w["L"])
+        if alloc is not None:
+            alloc.check()
+
+        mismatches = 0
+        completed = [rid for rid, r in faulted.items() if "sids" in r]
+        for rid in completed:
+            r_ref, r_f = ref[rid], faulted[rid]
+            if not (np.array_equal(np.asarray(r_ref["sids"]),
+                                   np.asarray(r_f["sids"]))
+                    and np.array_equal(np.asarray(r_ref["scores"]),
+                                       np.asarray(r_f["scores"]))):
+                mismatches += 1
+        shed = [r for r in faulted.values() if "sids" not in r]
+        out[name] = dict(
+            n_requests=n_requests,
+            n_completed=len(completed),
+            n_shed=len(shed),
+            n_fires=inj.n_fires(),
+            fires=[list(f) for f in inj.fires],
+            bit_mismatches=mismatches,
+            constraint_violations=count_violations(faulted, vsets),
+            unexpected_recompiles=unexpected_recompiles(engine),
+        )
+        print(f"  [chaos] {name}: {len(completed)}/{n_requests} completed, "
+              f"{len(shed)} shed, {inj.n_fires()} fault(s), "
+              f"{mismatches} bit mismatch(es), "
+              f"{out[name]['constraint_violations']} violation(s)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# phase 2: refresh faults — retry, last-good fallback, staleness
+# ---------------------------------------------------------------------------
+def phase_refresh(w, engines, *, seed: int) -> dict:
+    registry = w["registry"]
+    reg_metrics = MetricsRegistry()
+    rng = np.random.default_rng(seed + 41)
+    n_items = w["catalog"].sids.shape[0]
+    report = {}
+
+    with AsyncRefresher(registry, metrics=reg_metrics) as refresher:
+        # transient: build fails twice, retry absorbs it
+        v_before = registry.current()[1]
+        inj = FaultInjector([
+            FaultSpec("refresh.build", mode="always", max_fires=2),
+        ], seed=seed)
+        with active_injector(inj):
+            fut = refresher.swap_async(
+                synthetic_catalog(rng, n_items, w["vocab"], w["L"]))
+            assert refresher.drain(timeout=30.0), "drain timed out mid-retry"
+            v_new = fut.result(timeout=5.0)
+        retries = int(reg_metrics.counter("refresh_retries_total").total())
+        report["transient"] = dict(
+            version_before=int(v_before), version_after=int(v_new),
+            retries=retries,
+            staleness_after_s=float(refresher.staleness_seconds()),
+            advanced=bool(v_new > v_before), n_fires=inj.n_fires(),
+        )
+
+        # terminal: build always fails; front buffer must stay last-good
+        # and serving must continue (stale, constrained) — staleness > 0
+        v_good = registry.current()[1]
+        inj = FaultInjector([
+            FaultSpec("refresh.build", mode="always"),
+        ], seed=seed + 1)
+        with active_injector(inj):
+            fut = refresher.swap_async(
+                synthetic_catalog(rng, n_items, w["vocab"], w["L"]))
+            assert refresher.drain(timeout=30.0)
+            failed = False
+            try:
+                fut.result(timeout=5.0)
+            except Exception:
+                failed = True
+        t_stale = time.monotonic()
+        stale_s = float(refresher.staleness_seconds(t_stale + 0.5))
+        served = serve_stream(
+            engines["serving_engine"], make_stream(w, 4, seed + 2), w["L"])
+        report["terminal"] = dict(
+            failed_future=failed,
+            version_unchanged=bool(registry.current()[1] == v_good),
+            staleness_s=stale_s,
+            served_stale=sum("sids" in r for r in served.values()),
+        )
+
+        # convergence: next clean swap lands and staleness clears
+        fut = refresher.swap_async(
+            synthetic_catalog(rng, n_items, w["vocab"], w["L"]))
+        assert refresher.drain(timeout=30.0)
+        v_final = fut.result(timeout=5.0)
+        report["converged"] = dict(
+            version_final=int(v_final),
+            advanced=bool(v_final > v_good),
+            staleness_after_s=float(refresher.staleness_seconds()),
+        )
+    report["metrics"] = reg_metrics.snapshot()
+    print(f"  [chaos] refresh: transient retries={retries} "
+          f"(v{v_before}->{v_new}), terminal kept v{v_good} "
+          f"(staleness {stale_s:.2f}s), converged v{v_final}")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# phase 3: breaker ladder on the continuous engine
+# ---------------------------------------------------------------------------
+def phase_breaker(w, engines, *, seed: int) -> dict:
+    cont = engines["continuous_engine"]
+    breaker = CircuitBreaker(
+        failure_threshold=2, recovery_s=0.05, half_open_successes=1,
+        name="chaos", metrics=cont.metrics)
+    prev_breaker = cont.breaker
+    cont.breaker = breaker
+    admission = AdmissionController(breaker=breaker)
+    states = [breaker.state]
+    try:
+        # 2 consecutive injected step failures -> OPEN; fault then clears
+        inj = FaultInjector([
+            FaultSpec("decode.slow_step", mode="always", max_fires=2),
+        ], seed=seed)
+        stream = make_stream(w, 4, seed + 5)
+        with active_injector(inj):
+            q = RequestQueue(admission=admission)
+            for prompt, cid in stream:
+                q.submit(prompt, n_tokens=w["L"], constraint_id=cid)
+            mid = cont.serve(q)
+        states.append(breaker.state)
+        opened = states[-1] == OPEN or breaker.state == OPEN
+
+        # while OPEN: new submissions shed at admission
+        q2 = RequestQueue(admission=admission)
+        rid = q2.submit(stream[0][0], n_tokens=w["L"], constraint_id=0)
+        shed_open = cont.serve(q2)
+        shed_reason = shed_open.get(rid, {}).get("reason")
+
+        # after recovery_s: half-open probe admits, success closes
+        time.sleep(breaker.recovery_s + 0.01)
+        q3 = RequestQueue(admission=admission)
+        q3.submit(stream[1][0], n_tokens=w["L"], constraint_id=1)
+        probe = cont.serve(q3)
+        states.append(breaker.state)
+    finally:
+        cont.breaker = prev_breaker
+    transitions = cont.metrics.counter("circuit_breaker_transitions_total")
+    report = dict(
+        opened=bool(opened),
+        shed_reason_while_open=shed_reason,
+        probe_completed=sum("sids" in r for r in probe.values()),
+        closed_again=bool(breaker.state == CLOSED),
+        states_seen=states,
+        mid_completed=sum("sids" in r for r in mid.values()),
+        transitions={
+            "closed->open": int(transitions.value(
+                name="chaos", **{"from": "closed", "to": "open"})),
+            "open->half_open": int(transitions.value(
+                name="chaos", **{"from": "open", "to": "half_open"})),
+            "half_open->closed": int(transitions.value(
+                name="chaos", **{"from": "half_open", "to": "closed"})),
+        },
+    )
+    print(f"  [chaos] breaker: opened={report['opened']}, "
+          f"shed_reason={shed_reason!r}, closed_again={report['closed_again']}")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# phase 4: tiering fetch faults — retry bit-identity, terminal surfacing
+# ---------------------------------------------------------------------------
+def phase_tiering(w, *, seed: int) -> dict:
+    tm = TransitionMatrix.from_sids(
+        w["catalog"].sids, w["vocab"], dense_d=0)
+    tiered = TieredTrie.from_matrix(tm, hot_steps=1)
+    rng = np.random.default_rng(seed + 7)
+    step = max(tiered.hot_steps, 1)
+    nodes = rng.integers(1, tm.n_states, size=8).astype(np.int32)
+    g_ref, l_ref = tiered.gather_cold(nodes, step)
+
+    metrics = MetricsRegistry()
+    with TriePrefetcher(tiered, metrics=metrics) as pf:
+        inj = FaultInjector([
+            FaultSpec("tiering.host_fetch", mode="always", max_fires=2),
+        ], seed=seed)
+        with active_injector(inj):
+            g, lens = pf.prefetch(nodes, step).result(timeout=30.0)
+        identical = bool(np.array_equal(np.asarray(g), g_ref)
+                         and np.array_equal(np.asarray(lens), l_ref))
+
+        inj2 = FaultInjector([
+            FaultSpec("tiering.host_fetch", mode="always"),
+        ], seed=seed + 1)
+        with active_injector(inj2):
+            fut = pf.prefetch(nodes, step)
+            terminal_raised = False
+            try:
+                fut.result(timeout=30.0)
+            except InjectedFault:
+                terminal_raised = True
+    report = dict(
+        retry_bit_identical=identical,
+        retries=int(metrics.counter("tiering_fetch_retries_total").total()),
+        terminal_surfaced=terminal_raised,
+    )
+    print(f"  [chaos] tiering: retry bit-identical={identical}, "
+          f"terminal surfaced={terminal_raised}")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# phase 5: goodput under probabilistic decode delays
+# ---------------------------------------------------------------------------
+def phase_goodput(w, engines, *, seed: int, n_requests: int) -> dict:
+    engine = engines["continuous_engine"]
+    cap = calibrate_qps(engine, w["vocab"], w["n_slots"], w["L"],
+                        engine.slots)
+    # calibration is a best-case full-batch rate and the open-loop knee
+    # sits well under 1.0x of it (see loadgen.sweep); 0.25x is the
+    # calibrated mid-QPS point that a healthy engine absorbs with margin
+    qps = max(0.25 * cap, 1.0)
+    inj = FaultInjector([
+        FaultSpec("decode.slow_step", mode="prob", p=0.15, delay_s=0.002),
+    ], seed=seed)
+    with active_injector(inj):
+        pt = run_open_loop(engine, qps, n_requests, w["vocab"],
+                           w["n_slots"], w["L"], seed=seed)
+    pt["n_fires"] = inj.n_fires()
+    pt["calibrated_capacity_qps"] = float(cap)
+    print(f"  [chaos] goodput under chaos: offered {qps:.1f} req/s, "
+          f"goodput {pt['goodput']:.2f} with {pt['n_fires']} slow step(s)")
+    return pt
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: tiny model, short streams")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fault-schedule seed (bit-reproducible campaigns)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per phase (default 12 smoke / 32)")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+    n_requests = args.requests or (12 if args.smoke else 32)
+
+    rng = np.random.default_rng(args.seed)
+    w = build_workload(args.smoke, rng)
+    engines = make_engines(w, args.smoke)
+
+    report = {"smoke": bool(args.smoke), "seed": int(args.seed)}
+    print("[chaos] phase 1: bit-identity under faults")
+    report["bit_identity"] = phase_bit_identity(
+        w, engines, seed=args.seed, n_requests=n_requests)
+    print("[chaos] phase 2: refresh faults (retry / stale / converge)")
+    report["refresh"] = phase_refresh(w, engines, seed=args.seed)
+    print("[chaos] phase 3: circuit-breaker ladder")
+    report["breaker"] = phase_breaker(w, engines, seed=args.seed)
+    print("[chaos] phase 4: tiering fetch faults")
+    report["tiering"] = phase_tiering(w, seed=args.seed)
+    print("[chaos] phase 5: goodput under chaos")
+    report["goodput"] = phase_goodput(
+        w, engines, seed=args.seed, n_requests=n_requests)
+
+    # final snapshot: the acceptance gate wants breaker + staleness metrics
+    # visible in the serving metrics dump
+    snap = engines["continuous_engine"].metrics.snapshot()
+    report["metrics_snapshot"] = snap
+    report["unexpected_recompiles"] = {
+        name: unexpected_recompiles(e) for name, e in engines.items()}
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2, default=str)
+    print(f"[chaos] wrote {args.out}")
+
+    failures = []
+    for name, r in report["bit_identity"].items():
+        if r["bit_mismatches"]:
+            failures.append(f"{name}: {r['bit_mismatches']} bit mismatch(es)")
+        if r["constraint_violations"]:
+            failures.append(
+                f"{name}: {r['constraint_violations']} constraint violation(s)")
+        if r["n_completed"] == 0:
+            failures.append(f"{name}: chaos shed every request")
+        if r["n_fires"] == 0:
+            failures.append(f"{name}: schedule injected zero faults")
+    for name, n in report["unexpected_recompiles"].items():
+        if n:
+            failures.append(f"{name}: {n} unexpected recompile(s)")
+    rf = report["refresh"]
+    if not rf["transient"]["advanced"] or rf["transient"]["retries"] < 1:
+        failures.append("refresh: transient fault not absorbed by retry")
+    if not rf["terminal"]["version_unchanged"]:
+        failures.append("refresh: terminal failure moved the front buffer")
+    if rf["terminal"]["staleness_s"] <= 0:
+        failures.append("refresh: staleness gauge stayed 0 while behind")
+    if rf["terminal"]["served_stale"] < 1:
+        failures.append("refresh: serving stopped under stale constraints")
+    if not rf["converged"]["advanced"]:
+        failures.append("refresh: did not converge after faults cleared")
+    br = report["breaker"]
+    if not (br["opened"] and br["closed_again"]):
+        failures.append(f"breaker: ladder broken (states {br['states_seen']})")
+    if br["shed_reason_while_open"] != "breaker_open":
+        failures.append(
+            f"breaker: open shed reason was {br['shed_reason_while_open']!r}")
+    ti = report["tiering"]
+    if not ti["retry_bit_identical"] or not ti["terminal_surfaced"]:
+        failures.append("tiering: retry/terminal contract broken")
+    if report["goodput"]["goodput"] < 0.8:
+        failures.append(
+            f"goodput {report['goodput']['goodput']:.2f} < 0.8 under chaos")
+    if "circuit_breaker_state" not in snap["gauges"]:
+        failures.append("breaker metrics missing from snapshot")
+    if "constraint_staleness_seconds" not in \
+            report["refresh"]["metrics"]["gauges"]:
+        failures.append("staleness gauge missing from refresh snapshot")
+    if failures:
+        raise SystemExit("[chaos] FAILED: " + "; ".join(failures))
+    print("[chaos] all gates passed")
+
+
+if __name__ == "__main__":
+    main()

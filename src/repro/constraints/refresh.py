@@ -57,6 +57,7 @@ from repro.core.trie import (
     sorted_unique_sids,
 )
 from repro.observability import MetricsRegistry
+from repro.reliability.retry import RetryPolicy
 
 __all__ = ["TrieSource", "AsyncRefresher", "row_keys"]
 
@@ -495,24 +496,42 @@ class AsyncRefresher:
     With ``coalesce=False`` every op is preserved and submitters block once
     ``max_pending`` ops are queued — classic backpressure.
 
-    A failed rebuild (predicate error, envelope overflow with regrowth
-    disabled, ...) sets the exception on the op's futures and the worker
-    moves on; the registry front buffer is untouched and serving continues
-    on the previous version.
+    A failing rebuild (predicate error, injected fault, transient allocator
+    pressure, ...) is **retried with capped exponential backoff** under
+    ``retry`` (a :class:`~repro.reliability.RetryPolicy`; attempts/backoff
+    land in ``refresh_retries_total``).  Only a *terminal* failure — every
+    attempt exhausted, or a non-retryable error — sets the exception on the
+    op's futures (including any futures coalesced into it: nothing is
+    silently dropped) and the worker moves on; the registry front buffer is
+    untouched either way and serving continues on the previous version.
+    The whole retry loop runs inside the worker's busy window, so
+    ``drain(timeout=)`` cannot return while an op is still being retried.
+
+    **Staleness**: from the first submission the front buffer is behind
+    until the worker catches up; :meth:`staleness_seconds` reports how long
+    the oldest unapplied submission has been waiting (0 when caught up) and
+    publishes the ``constraint_staleness_seconds`` gauge — the serve-stale
+    rung of the degradation ladder made observable (DESIGN.md §13).  A
+    terminal failure leaves the clock running: serving is genuinely behind
+    the authoritative catalog until a later op succeeds.
     """
 
     def __init__(self, registry, *, coalesce: bool = True,
                  max_pending: int = 4,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 retry: Optional[RetryPolicy] = None):
         if max_pending < 1:
             raise ValueError("max_pending must be >= 1")
         self._registry = registry
         self._coalesce = coalesce
         self._max_pending = max_pending
+        self._retry = retry if retry is not None else RetryPolicy(
+            max_attempts=3, base_delay_s=0.01, max_delay_s=0.25)
         self._cond = threading.Condition()
         self._queue: list[_Op] = []
         self._busy = False
         self._closed = False
+        self._t_behind_since: Optional[float] = None
         self.coalesced = 0  # ops merged into a newer submission
         self.applied = 0  # ops that installed a version
         self.failed = 0  # ops whose build raised
@@ -538,6 +557,13 @@ class AsyncRefresher:
         self._m_backpressure = self.metrics.counter(
             "refresh_backpressure_waits_total",
             "submitter blocks because the queue was full (coalesce off)")
+        self._m_retries = self.metrics.counter(
+            "refresh_retries_total",
+            "refresh attempts retried after a transient failure, by kind")
+        self._m_staleness = self.metrics.gauge(
+            "constraint_staleness_seconds",
+            "how long the oldest unapplied catalog submission has waited; "
+            "0 when the front store is caught up (DESIGN.md §13)")
         self._thread = threading.Thread(
             target=self._worker, daemon=True, name="constraint-refresh"
         )
@@ -583,13 +609,30 @@ class AsyncRefresher:
                 self._cond.wait()  # backpressure: queue full, can't coalesce
                 if self._closed:
                     raise RuntimeError("AsyncRefresher is closed")
+            if self._t_behind_since is None:
+                self._t_behind_since = now  # front store now behind
             self._m_depth.set(len(self._queue))
             self._cond.notify_all()
         return fut
 
+    def staleness_seconds(self, now: Optional[float] = None) -> float:
+        """Age of the oldest submission the front store does not reflect
+        (0.0 when caught up).  Publishes ``constraint_staleness_seconds``."""
+        now = time.monotonic() if now is None else now
+        with self._cond:
+            t = self._t_behind_since
+        s = 0.0 if t is None else max(now - t, 0.0)
+        self._m_staleness.set(s)
+        return s
+
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> bool:
-        """Block until the queue is empty and the worker is idle."""
+        """Block until the queue is empty and the worker is idle.
+
+        ``_busy`` spans the worker's *entire* retry loop (backoff sleeps
+        included), so a True return means no refresh work — queued,
+        running, or mid-retry — remains in flight.
+        """
         with self._cond:
             return self._cond.wait_for(
                 lambda: not self._queue and not self._busy, timeout=timeout
@@ -626,22 +669,37 @@ class AsyncRefresher:
             live = [f for f in op.futures if f.set_running_or_notify_cancel()]
             t0 = time.monotonic()
             self._m_queue_s.observe(max(t0 - op.t_submit, 0.0), kind=op.kind)
-            try:
+
+            def do_apply(op=op):
                 if op.kind == "snapshot":
-                    version = self._registry.swap(op.payload)
-                else:
-                    version = self._registry.swap_delta(op.payload)
+                    return self._registry.swap(op.payload)
+                return self._registry.swap_delta(op.payload)
+
+            def on_retry(attempt, e, op=op):
+                self._m_retries.inc(kind=op.kind)
+                logger.warning(
+                    "refresh %s attempt %d failed; retrying in %.3fs: %s",
+                    op.kind, attempt + 1, self._retry.delay_s(attempt), e)
+
+            applied_ok = False
+            try:
+                # retries (and their backoff sleeps) run inside the busy
+                # window, so drain() cannot observe an "empty" refresher
+                # that still has this op in flight
+                version = self._retry.call(do_apply, on_retry=on_retry)
             except BaseException as e:  # propagate, never kill serving
                 self.failed += 1
                 self.last_error = e
                 self._m_ops.inc(kind=op.kind, outcome="failed")
                 logger.error(
-                    "refresh %s failed (serving continues on the previous "
-                    "store): %s", op.kind, e, exc_info=e,
+                    "refresh %s failed terminally after %d attempt(s) "
+                    "(serving continues on the previous store): %s",
+                    op.kind, self._retry.max_attempts, e, exc_info=e,
                 )
                 for f in live:
                     f.set_exception(e)
             else:
+                applied_ok = True
                 self.applied += 1
                 self._m_ops.inc(kind=op.kind, outcome="applied")
                 self._m_apply_s.observe(time.monotonic() - t0, kind=op.kind)
@@ -652,4 +710,10 @@ class AsyncRefresher:
             finally:
                 with self._cond:
                     self._busy = False
+                    if applied_ok:
+                        # caught up to this op; still behind iff more work
+                        # is queued.  A terminal failure keeps the clock
+                        # running — the catalog state was never applied.
+                        self._t_behind_since = (
+                            self._queue[0].t_submit if self._queue else None)
                     self._cond.notify_all()

@@ -59,6 +59,7 @@ from repro.constraints.refresh import TrieSource, row_keys
 from repro.constraints.store import ConstraintStore, EnvelopeOverflow
 from repro.core.transition_matrix import TransitionMatrix
 from repro.observability import MetricsRegistry
+from repro.reliability.faults import fire
 
 __all__ = [
     "ItemCatalog",
@@ -412,8 +413,13 @@ class ConstraintRegistry:
                 front = self._front
                 names = list(self._names)
             t0 = time.monotonic()
+            fire("refresh.build")
             sources, mats = self._build_slots(catalog, names)
             back, cold = self._fit_or_regrow(front, mats, on_overflow)
+            # transactional by construction: a failure at (or before) this
+            # point leaves front buffer, retained sources and matrices
+            # untouched — serving continues on the last good version
+            fire("refresh.swap")
             version = self._flip(back, cold)
             self._sources, self._mats = sources, mats
             self._m_refresh_s.observe(time.monotonic() - t0, kind="snapshot")
@@ -448,6 +454,7 @@ class ConstraintRegistry:
                 with self._lock:
                     return self._version
             t0 = time.monotonic()
+            fire("refresh.build")
             added = delta.added
             # STAGE every slot against the original sources (stage_delta
             # never mutates retained state), validate the whole batch
@@ -472,6 +479,10 @@ class ConstraintRegistry:
                 with self._lock:
                     return self._version
             back, cold = self._fit_or_regrow(front, mats, on_overflow)
+            # staged sources are committed only after the flip, so a fault
+            # here cannot publish a half-swapped store or corrupt the
+            # retained slabs (the delta is simply retried or dropped whole)
+            fire("refresh.swap")
             version = self._flip(back, cold)
             for i, st in enumerate(staged):
                 if st is not None:
@@ -488,3 +499,13 @@ class ConstraintRegistry:
             if self._front is None:
                 raise RuntimeError("registry not built yet")
             return self._front, self._version
+
+    def slot_sids(self, slot: int) -> np.ndarray:
+        """Copy of the SID rows currently admissible under ``slot`` —
+        exactly the retained sorted slab the slot's trie was built from.
+        This is the ground truth the chaos harness checks served SIDs
+        against (zero-constraint-violation gate, DESIGN.md §13)."""
+        with self._refresh_lock:
+            if not self._sources:
+                raise RuntimeError("registry not built yet")
+            return np.array(self._sources[slot].sids, copy=True)

@@ -43,6 +43,8 @@ import numpy as np
 from repro.core.trie import LevelBlocks, infer_level_blocks
 from repro.core.transition_matrix import TransitionMatrix
 from repro.core.vntk import NEG_INF
+from repro.reliability.faults import InjectedFault, fire
+from repro.reliability.retry import RetryPolicy
 
 __all__ = [
     "TieredTrie",
@@ -234,17 +236,44 @@ class TriePrefetcher:
     the moment the previous beam advance is *dispatched* (JAX's async
     dispatch means the worker's ``np.asarray(nodes)`` blocks only until
     that one array materializes, not the whole step).
+
+    A stalling or failing host fetch (the ``tiering.host_fetch`` fault
+    point) is retried under ``retry`` — a
+    :class:`~repro.reliability.RetryPolicy` covering transient I/O-shaped
+    errors; the retries happen on the worker thread, inside the prefetch
+    overlap window, so a recovered fetch costs the decode loop nothing
+    unless the backoff outlives the overlapped step.  A terminal failure
+    surfaces through the future at ``result()`` — the beam search stops
+    rather than decode past the constraint (DESIGN.md §13: degradation
+    never falls back to unconstrained decoding).
     """
 
-    def __init__(self, tiered: TieredTrie):
+    def __init__(self, tiered: TieredTrie, *,
+                 retry: Optional[RetryPolicy] = None, metrics=None):
         self.tiered = tiered
+        self.retry = retry if retry is not None else RetryPolicy(
+            max_attempts=3, base_delay_s=0.002, max_delay_s=0.05,
+            retryable=(InjectedFault, OSError, MemoryError))
+        self._m_retries = None
+        if metrics is not None:
+            self._m_retries = metrics.counter(
+                "tiering_fetch_retries_total",
+                "host-tier gathers retried after a transient failure")
         self._pool = ThreadPoolExecutor(max_workers=1)
 
     def prefetch(self, nodes, step: int):
         """Stage the burst for ``nodes`` at cold ``step``; returns a future
         resolving to device arrays ``(gathered, lens)``."""
+        def gather():
+            fire("tiering.host_fetch")
+            return self.tiered.gather_cold(np.asarray(nodes), step)
+
+        def on_retry(attempt, e):
+            if self._m_retries is not None:
+                self._m_retries.inc()
+
         def work():
-            g, lens = self.tiered.gather_cold(np.asarray(nodes), step)
+            g, lens = self.retry.call(gather, on_retry=on_retry)
             return jax.device_put(g), jax.device_put(lens)
 
         return self._pool.submit(work)

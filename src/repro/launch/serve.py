@@ -9,18 +9,32 @@ Which engine when (``--engine``):
 batch        Sequence-boundary ``ServingEngine`` (default).  One fused jit
              per batch — the lowest per-request dispatch overhead.  Best
              for offline/bulk retrieval and uniform prompt lengths, where
-             slots finishing together wastes nothing.
+             slots finishing together wastes nothing.  Degradation: a
+             failed decode fails the whole batch (every request in it gets
+             a ``decode_fault`` error result); expired requests shed at
+             enqueue and again before each batch forms.
 spmd         ``SpmdServingEngine`` over a (data, model) mesh.  Same
              sequence-boundary semantics scaled across devices; pick it
              when one host's devices must serve a single logical batch.
+             Degradation: identical to ``batch`` (whole-batch blast
+             radius — one mesh, one program).
 continuous   Step-boundary ``ContinuousServingEngine`` (DESIGN.md §10).
              Paged history KV + chunked prefill + trie-prefix sharing:
              slots refill the moment a request completes, repeat prompts
              skip their prefill, and per-request TTFT is L steps from
              admission instead of a whole batch drain.  Best under live
              mixed traffic (hot prompts, ragged arrivals, SLO deadlines);
-             needs a ``dense_d=0`` constraint index.
+             needs a ``dense_d=0`` constraint index.  Degradation: a
+             failed step retries bit-identically next iteration (state is
+             only mutated on success); KV exhaustion drops the share
+             table, then retries admission, then sheds ``kv_pages``.
 ===========  ==============================================================
+
+All three engines share one reliability contract (DESIGN.md §13): the
+degradation ladder is retry -> serve-stale -> shed at admission, and a
+request is NEVER decoded unconstrained as a fallback.  ``--fault-schedule``
+arms the deterministic fault injector for chaos drills; ``--health-port-file``
+exposes ``/healthz``, ``/readyz`` and ``/livez`` next to ``/metrics``.
 
 Per-request results are bit-identical across all three engines (fuzz-
 asserted in tests/test_continuous.py and tests/test_spmd_serving.py).
@@ -52,6 +66,7 @@ from repro.observability import (
     StepTimer,
     start_http_server,
 )
+from repro.reliability import CircuitBreaker, FaultInjector, HealthMonitor, install
 from repro.scenarios import gr_model_config
 from repro.serving.generative_retrieval import GenerativeRetriever
 
@@ -99,6 +114,16 @@ def main():
     ap.add_argument("--metrics-port-file", metavar="PATH", default=None,
                     help="serve Prometheus text at /metrics on an ephemeral "
                          "localhost port and write the bound port to PATH")
+    ap.add_argument("--fault-schedule", metavar="JSON", default=None,
+                    help="arm the deterministic fault injector (DESIGN.md "
+                         "§13): inline JSON or a path to a JSON file of the "
+                         "form {\"seed\": 0, \"faults\": [{\"point\": ..., "
+                         "\"mode\": ...}, ...]}")
+    ap.add_argument("--health-port-file", metavar="PATH", default=None,
+                    help="serve /healthz, /readyz and /livez (plus /metrics) "
+                         "on an ephemeral localhost port and write the bound "
+                         "port to PATH; readiness reflects the serving "
+                         "circuit breaker")
     args = ap.parse_args()
 
     logging.basicConfig(
@@ -106,11 +131,26 @@ def main():
         format="%(asctime)s %(levelname)s %(name)s %(message)s",
     )
     metrics = MetricsRegistry()
-    if args.metrics_port_file:
-        _, port = start_http_server(metrics, port=0)
-        with open(args.metrics_port_file, "w") as f:
-            f.write(str(port))
+
+    injector = None
+    if args.fault_schedule:
+        injector = FaultInjector.from_json(args.fault_schedule)
+        install(injector)
+        logger.info("fault injection armed (seed=%d)", injector.seed)
+
+    breaker = CircuitBreaker(name="serve", metrics=metrics)
+    if args.metrics_port_file or args.health_port_file:
+        health = None
+        if args.health_port_file:
+            health = HealthMonitor(breaker=breaker, metrics=metrics)
+        _, port = start_http_server(metrics, port=0, health=health)
+        for path in (args.metrics_port_file, args.health_port_file):
+            if path:
+                with open(path, "w") as f:
+                    f.write(str(port))
         logger.info("metrics: http://127.0.0.1:%d/metrics", port)
+        if health is not None:
+            logger.info("health:  http://127.0.0.1:%d/healthz", port)
 
     if args.spmd:
         args.engine = "spmd"
@@ -140,7 +180,8 @@ def main():
                                 args.vocab, beam_size=args.beam)
         engine = ContinuousServingEngine(
             r, slots=args.batch, prompt_width=16,
-            prefill_chunk=max(args.batch // 2, 1), metrics=metrics)
+            prefill_chunk=max(args.batch // 2, 1), metrics=metrics,
+            breaker=breaker)
         queue = RequestQueue()
         n_req = args.requests * args.batch
         pool = rng.integers(0, args.vocab, (max(n_req // 3, 1), 16))
@@ -148,18 +189,28 @@ def main():
                              args.sid_length) for i in range(n_req)]
         t0 = time.time()
         results = engine.serve(queue)
-        lat = np.array([results[i]["latency_s"] for i in rids])
+        done = [i for i in rids if "latency_s" in results[i]]
+        if injector is not None and len(done) < n_req:
+            logger.info("degraded under faults: %d/%d completed (%s)",
+                        len(done), n_req,
+                        {results[i].get("reason", "?")
+                         for i in rids if i not in set(done)})
+        lat = np.array([results[i]["latency_s"] for i in done]
+                       or [float("nan")])
         hits = engine.metrics.counter("serving_prefix_share_hits_total")
         logger.info(
             "continuous: %d requests in %.1f ms (p50 %.1f ms, p99 %.1f ms); "
             "slot reuse %d, share hits prompt=%d mask_row=%d",
-            n_req, (time.time() - t0) * 1e3,
+            len(done), (time.time() - t0) * 1e3,
             float(np.quantile(lat, 0.5)) * 1e3,
             float(np.quantile(lat, 0.99)) * 1e3,
             int(engine.metrics.counter("serving_slot_reuse_total").total()),
             int(hits.value(kind="prompt")), int(hits.value(kind="mask_row")))
-        top1 = results[rids[0]]["sids"][0].tolist()
-        logger.info("top-1 SIDs (request 0): %s", top1)
+        if done:
+            top1 = results[done[0]]["sids"][0].tolist()
+            logger.info("top-1 SIDs (request %d): %s", done[0], top1)
+        if injector is not None:
+            logger.info("injected faults fired: %d", injector.n_fires())
         if args.metrics_json:
             metrics.write_snapshot(args.metrics_json)
             logger.info("metrics snapshot appended to %s", args.metrics_json)

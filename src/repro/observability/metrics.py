@@ -324,27 +324,45 @@ class MetricsRegistry:
 
 
 def start_http_server(registry: MetricsRegistry, port: int = 0,
-                      host: str = "127.0.0.1"):
+                      host: str = "127.0.0.1", health=None):
     """Serve ``registry.render_prometheus()`` at ``/metrics`` on a daemon
     thread; returns ``(server, bound_port)``.  ``port=0`` binds an ephemeral
     port — ``launch/serve.py --metrics-port-file`` writes it out so a
     scraper (or a test) can discover the endpoint.  Shut down with
     ``server.shutdown()``.
+
+    ``health`` (optional) is a callable ``() -> (ready, payload_dict)`` —
+    typically a :class:`repro.reliability.HealthMonitor` — served at
+    ``/healthz`` (200 when ready, 503 otherwise, JSON body either way).
+    ``/livez`` always answers 200: the process is alive exactly when it
+    can answer at all (DESIGN.md §13).
     """
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
     class Handler(BaseHTTPRequestHandler):
-        def do_GET(self):  # noqa: N802 (http.server API)
-            if self.path.split("?")[0] not in ("/", "/metrics"):
-                self.send_error(404)
-                return
-            body = registry.render_prometheus().encode()
-            self.send_response(200)
-            self.send_header("Content-Type",
-                             "text/plain; version=0.0.4; charset=utf-8")
+        def _reply(self, status: int, body: bytes, ctype: str) -> None:
+            self.send_response(status)
+            self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
+
+        def do_GET(self):  # noqa: N802 (http.server API)
+            path = self.path.split("?")[0]
+            if path == "/livez":
+                self._reply(200, b"ok\n", "text/plain; charset=utf-8")
+                return
+            if path in ("/healthz", "/readyz") and health is not None:
+                ready, payload = health()
+                body = (json.dumps(payload, sort_keys=True) + "\n").encode()
+                self._reply(200 if ready else 503, body, "application/json")
+                return
+            if path not in ("/", "/metrics"):
+                self.send_error(404)
+                return
+            body = registry.render_prometheus().encode()
+            self._reply(200, body,
+                        "text/plain; version=0.0.4; charset=utf-8")
 
         def log_message(self, *a):  # quiet: scrapes are not serving events
             pass

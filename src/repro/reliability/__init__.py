@@ -1,0 +1,58 @@
+"""Fault injection, retry, deadlines, and graceful degradation
+(DESIGN.md §13).
+
+The serving stack's failure-handling contract in one package:
+
+* :mod:`~repro.reliability.faults` — seeded deterministic
+  :class:`FaultInjector` over the named fault-point registry; production
+  code queries :func:`fire` (zero-overhead when disabled).
+* :mod:`~repro.reliability.retry` — :class:`RetryPolicy`, capped
+  exponential backoff with deterministic jitter (the refresher and the
+  tiering prefetcher adopt it).
+* :mod:`~repro.reliability.deadline` — absolute per-request
+  :class:`Deadline` propagated from submit through every engine.
+* :mod:`~repro.reliability.breaker` — :class:`CircuitBreaker` +
+  :class:`AdmissionController`: the shed rung of the degradation ladder
+  (retry → serve-stale → shed; never unconstrained decoding).
+* :mod:`~repro.reliability.health` — :class:`HealthMonitor` backing the
+  ``/healthz`` endpoint on the metrics HTTP server.
+"""
+from repro.reliability.breaker import (
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    AdmissionController,
+    CircuitBreaker,
+)
+from repro.reliability.deadline import Deadline
+from repro.reliability.faults import (
+    FAULT_POINTS,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    active_injector,
+    fire,
+    install,
+    uninstall,
+)
+from repro.reliability.health import HealthMonitor
+from repro.reliability.retry import RetryPolicy
+
+__all__ = [
+    "FAULT_POINTS",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+    "active_injector",
+    "fire",
+    "install",
+    "uninstall",
+    "RetryPolicy",
+    "Deadline",
+    "CircuitBreaker",
+    "AdmissionController",
+    "CLOSED",
+    "HALF_OPEN",
+    "OPEN",
+    "HealthMonitor",
+]

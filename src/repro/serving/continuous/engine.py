@@ -55,11 +55,12 @@ from repro.observability import (
     compile_events,
     record_policy,
 )
+from repro.reliability.faults import InjectedFault, fire
 from repro.serving.continuous.paged_kv import (
     PagedKVAllocator,
     PrefixShareTable,
 )
-from repro.serving.continuous.scheduler import StepScheduler
+from repro.serving.continuous.scheduler import StepScheduler, queue_push_back
 from repro.serving.engine import _EngineMetrics
 
 __all__ = ["ContinuousServingEngine"]
@@ -80,8 +81,11 @@ class ContinuousServingEngine:
                  prompt_width: int = 8, page_size: int = 8,
                  prefill_chunk: int = 2, share_width: Optional[int] = None,
                  share_capacity: int = 64, deadline_s: Optional[float] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None, breaker=None,
+                 admit_retry_budget: int = 3):
         self.retriever = retriever
+        self.breaker = breaker
+        self.admit_retry_budget = int(admit_retry_budget)
         self.params = retriever.params
         self.cfg: TransformerConfig = retriever.cfg
         self.policy = retriever.policy
@@ -344,26 +348,54 @@ class ContinuousServingEngine:
     def _alloc_pages(self) -> list[int]:
         try:
             return self.alloc.alloc(self.n_hist_pages)
-        except MemoryError:
-            # reclaim cached-but-unused prompt KV and retry once
+        except (MemoryError, InjectedFault):
+            # reclaim cached-but-unused prompt KV and retry once (an
+            # injected kv.page_alloc fault models the same transient
+            # exhaustion; alloc's fault point fires before any mutation,
+            # so the free/referenced invariant is intact here)
             self.share.drop_all()
             return self.alloc.alloc(self.n_hist_pages)
 
-    def _admit(self, admissions, fresh):
+    def _admit(self, queue, admissions, fresh):
         """Run the bounded prefill chunk, wire page ownership, and reset the
-        admitted slots' device rows — all through the warmed jits."""
+        admitted slots' device rows — all through the warmed jits.
+
+        A request whose page allocation fails even after the share-table
+        reclaim is NOT admitted and does NOT crash the step: it goes back on
+        the queue with a bumped ``admit_attempts``, and once the retry
+        budget is spent it is shed with reason ``kv_pages`` (degradation
+        ladder, DESIGN.md §13).  Other admissions in the chunk proceed.
+        """
         now = time.monotonic()
         admit_mask = np.zeros(self.n_slots, bool)
         new_first = np.zeros((self.n_slots, self.V), np.float32)
+        if fresh:
+            ok = []
+            for slot, r in fresh:
+                try:
+                    pages = self._alloc_pages()
+                except (MemoryError, InjectedFault):
+                    if self.breaker is not None:
+                        self.breaker.record_failure()
+                    r.admit_attempts += 1
+                    if r.admit_attempts >= self.admit_retry_budget:
+                        queue.shed(r, "kv_pages")
+                    else:
+                        queue_push_back(queue, r)
+                    continue
+                self._slot_pages[slot] = tuple(pages)
+                ok.append((slot, r))
+            dropped = {id(r) for _, r in fresh} - {id(r) for _, r in ok}
+            if dropped:
+                admissions = [a for a in admissions if id(a[1]) not in dropped]
+            fresh = ok
         if fresh:
             A = self.sched.prefill_chunk
             block = np.zeros((A, self.S), np.int32)
             page_ids = np.zeros((A, self.n_hist_pages), np.int32)  # pad->NULL
             for j, (slot, r) in enumerate(fresh):
                 block[j] = self._padded_prompt(r)
-                pages = self._alloc_pages()
-                page_ids[j] = pages
-                self._slot_pages[slot] = tuple(pages)
+                page_ids[j] = self._slot_pages[slot]
             first_dev, ks, vs = self._prefill_jit(
                 self.params, jnp.asarray(block))
             self._k_pool, self._v_pool = self._commit_jit(
@@ -381,7 +413,14 @@ class ContinuousServingEngine:
                     f"request {r.rid}: constraint_id {r.constraint_id} "
                     f"outside [0, {limit})")
             if hit:
-                pages, first_row = self.share.lookup(self._padded_prompt(r))
+                entry = self.share.lookup(self._padded_prompt(r))
+                if entry is None:
+                    # donor entry vanished between planning and admission
+                    # (drop_all reclaim under page pressure): requeue as a
+                    # fresh prefill for the next step instead of crashing
+                    queue_push_back(queue, r)
+                    continue
+                pages, first_row = entry
                 self._slot_pages[slot] = pages
                 new_first[slot] = first_row
                 self._share_hits.inc(kind="prompt")
@@ -415,19 +454,16 @@ class ContinuousServingEngine:
         results: dict[int, dict] = {}
         sched = self.sched
         steps = 0
+        self._m.record_shed(queue, results)  # submit-time refusals
         while (len(queue) or sched.n_live) and steps < max_steps:
             version, cold = (self._install_current_store()
                              if self.registry is not None else (None, False))
-            for r in sched.shed_expired(queue):
-                self._m.rejected.inc(lane=str(r.constraint_id))
-                results[r.rid] = {
-                    "error": "deadline exceeded before admission",
-                    "constraint_id": r.constraint_id,
-                }
+            sched.shed_expired(queue)  # sweeps ALL lanes, stages into queue
             admissions, _fresh = sched.plan_admissions(
                 queue, lambda r: self.share.contains(self._padded_prompt(r)))
-            if admissions:
-                self._admit(admissions, _fresh)
+            if admissions or _fresh:
+                self._admit(queue, admissions, _fresh)
+            self._m.record_shed(queue, results)
             self._m.sample_queue(queue)
             if sched.n_live == 0:
                 if not len(queue):
@@ -436,9 +472,26 @@ class ContinuousServingEngine:
 
             c0 = compile_events()
             t0 = time.monotonic()
-            with annotate("continuous_step"):
-                self._run_step()
-                jax.block_until_ready(self._tokens)
+            try:
+                fire("decode.slow_step")  # delay => slow step; error => retry
+                with annotate("continuous_step"):
+                    self._run_step()
+                    jax.block_until_ready(self._tokens)
+            except InjectedFault:
+                # the fault fired before the jit mutated any engine state,
+                # so retrying the step next iteration is bit-identical; the
+                # failed attempt still burns a step of the budget so an
+                # "always" error fault cannot spin forever
+                if self.breaker is not None:
+                    self.breaker.record_failure()
+                steps += 1
+                continue
+            except Exception:
+                if self.breaker is not None:
+                    self.breaker.record_failure()
+                raise
+            if self.breaker is not None:
+                self.breaker.record_success()
             dt = time.monotonic() - t0
             steps += 1
             sched.advance()
@@ -468,6 +521,7 @@ class ContinuousServingEngine:
                     }
             self._m.occupancy.set(sched.n_live / max(self.n_slots, 1))
             self._page_util.set(self.alloc.utilization())
+        self._m.record_shed(queue, results)
         self._m.sample_queue(queue)
         self._flush_share_hits()
         return results

@@ -26,6 +26,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.reliability.faults import fire
+
 __all__ = ["PagedKVAllocator", "PrefixShareTable"]
 
 NULL_PAGE = 0
@@ -77,6 +79,10 @@ class PagedKVAllocator:
     def alloc(self, n: int) -> list[int]:
         """Hand out ``n`` pages at refcount 1; raises MemoryError when the
         pool cannot satisfy the request (the caller sheds or waits)."""
+        # fault point sits BEFORE any mutation, so an injected allocation
+        # failure leaves the free ⊎ referenced invariant intact by
+        # construction (chaos harness calls check() after every fire)
+        fire("kv.page_alloc")
         if n > len(self._free):
             raise MemoryError(
                 f"page pool exhausted: want {n}, have {len(self._free)} free"

@@ -79,20 +79,18 @@ class StepScheduler:
 
     # -- transitions --------------------------------------------------------
     def shed_expired(self, queue, now: Optional[float] = None) -> list:
-        """Pop-and-drop every queued request already past the deadline.
-        Returns the shed requests (the engine records rejections)."""
-        if self.deadline_s is None:
-            return []
-        now = time.monotonic() if now is None else now
-        shed, keep = [], []
-        while True:
-            r = queue.pop()
-            if r is None:
-                break
-            (shed if now - r.t_enqueue > self.deadline_s else keep).append(r)
-        for r in keep:  # survivors keep their rid/t_enqueue and lane order
-            queue_push_back(queue, r)
-        return shed
+        """Shed every queued request already past its deadline.
+
+        Delegates to :meth:`RequestQueue.shed_expired`, which sweeps ALL
+        lanes in place (the pre-reliability version popped and re-pushed the
+        whole queue, and only the continuous engine did it at all — now the
+        same enqueue-to-admission deadline semantics cover every engine).
+        Per-request :class:`~repro.reliability.Deadline`\\ s are always
+        honored; the scheduler's ``deadline_s`` is the engine-level default
+        for requests submitted without one.  Returns the shed requests; the
+        engine surfaces them via ``_EngineMetrics.record_shed``.
+        """
+        return queue.shed_expired(now=now, default_deadline_s=self.deadline_s)
 
     def plan_admissions(self, queue, share_probe) -> tuple[list, list]:
         """Fill free slots from the queue at this step boundary.
@@ -114,6 +112,13 @@ class StepScheduler:
             r = queue.pop()
             if r is None:
                 break
+            if r is not nxt:
+                # the peeked head expired between peek and pop (deadline
+                # shed inside pop): re-probe the request we actually got
+                hit = share_probe(r)
+                if not hit and len(fresh) >= self.prefill_chunk:
+                    queue_push_back(queue, r)
+                    break
             admissions.append((slot, r, hit))
             if not hit:
                 fresh.append((slot, r))
@@ -149,6 +154,9 @@ class StepScheduler:
 # -- queue helpers (RequestQueue has no peek/push-front; keep them here so
 #    the queue class stays minimal) -----------------------------------------
 def queue_peek(queue):
+    peek = getattr(queue, "peek", None)
+    if peek is not None:
+        return peek()  # sheds expired heads, so peek/pop stay consistent
     if not queue._rr:
         return None
     return queue._lanes[queue._rr[0]][0]

@@ -53,6 +53,8 @@ from repro.observability import (
     compile_events,
     record_policy,
 )
+from repro.reliability.deadline import Deadline
+from repro.reliability.faults import InjectedFault, fire
 
 __all__ = ["ServingEngine", "RequestQueue"]
 
@@ -64,6 +66,8 @@ class Request:
     n_tokens: int
     constraint_id: int = 0  # which registry slot masks this request's SIDs
     t_enqueue: float = 0.0  # time.monotonic() at submit (latency accounting)
+    deadline: Optional[Deadline] = None  # absolute SLO bound (DESIGN.md §13)
+    admit_attempts: int = 0  # failed admission tries (page-alloc retry budget)
 
 
 class RequestQueue:
@@ -76,40 +80,136 @@ class RequestQueue:
     ``constraint_id`` and ``pop`` rotates across non-empty lanes, so a mixed
     batch admits every active tenant each cycle (arrival order is preserved
     *within* a lane, and a single-tenant queue degenerates to plain FIFO).
+
+    **Reliability (DESIGN.md §13).**  ``submit`` is the admission-control
+    point for every engine: an optional per-request ``deadline_s`` becomes
+    an absolute :class:`~repro.reliability.Deadline`, an optional
+    :class:`~repro.reliability.AdmissionController` (breaker state, depth
+    cap, staleness bound) may refuse the request, and the
+    ``queue.overload`` fault point models an overloaded admission path.
+    Refused requests are *shed*, never raised: they collect in an internal
+    list with their reason, and the serving engine drains them via
+    :meth:`drain_shed` into error results plus the shared
+    ``requests_shed_total{reason}`` counter family.  ``pop``/``peek`` also
+    shed requests whose deadline expired *while queued*, and
+    :meth:`shed_expired` sweeps every lane (not just the head) so a
+    deadline deep inside a burst cannot hide behind fresher traffic.
     """
 
-    def __init__(self):
+    def __init__(self, *, admission=None):
         self._lanes: dict[int, deque] = {}
         self._rr: deque = deque()  # round-robin order of non-empty lanes
         self._next = 0
         self._len = 0
+        self._admission = admission  # AdmissionController (optional)
+        self._shed: list[tuple[Request, str]] = []
 
     def submit(self, prompt: np.ndarray, n_tokens: int,
-               constraint_id: int = 0) -> int:
+               constraint_id: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         rid = self._next
         self._next += 1
+        now = time.monotonic()
+        deadline = (Deadline.after(deadline_s, now)
+                    if deadline_s is not None else None)
+        r = Request(rid, np.asarray(prompt, np.int32), n_tokens,
+                    constraint_id, t_enqueue=now, deadline=deadline)
+        reason = None
+        try:
+            fire("queue.overload")
+        except InjectedFault:
+            reason = "overload"
+        if reason is None and self._admission is not None:
+            reason = self._admission.admit_reason(
+                self._len, deadline=deadline, now=now)
+        if reason is None and deadline is not None and deadline.expired(now):
+            reason = "deadline"
+        if reason is not None:
+            self._shed.append((r, reason))
+            return rid
         lane = self._lanes.get(constraint_id)
         if lane is None:
             lane = self._lanes[constraint_id] = deque()
         if not lane:
             self._rr.append(constraint_id)
-        lane.append(
-            Request(rid, np.asarray(prompt, np.int32), n_tokens,
-                    constraint_id, t_enqueue=time.monotonic())
-        )
+        lane.append(r)
         self._len += 1
         return rid
 
     def pop(self) -> Optional[Request]:
-        if not self._rr:
-            return None
-        cid = self._rr.popleft()
-        lane = self._lanes[cid]
-        r = lane.popleft()
-        if lane:
-            self._rr.append(cid)  # rotate: next pop serves another tenant
-        self._len -= 1
-        return r
+        while self._rr:
+            cid = self._rr.popleft()
+            lane = self._lanes[cid]
+            r = lane.popleft()
+            if lane:
+                self._rr.append(cid)  # rotate: next pop serves another tenant
+            self._len -= 1
+            if r.deadline is not None and r.deadline.expired():
+                self._shed.append((r, "deadline"))
+                continue  # expired while queued: shed, keep popping
+            return r
+        return None
+
+    def peek(self) -> Optional[Request]:
+        """Next request ``pop`` would return, without removing it (expired
+        heads are shed on the way, so peek/pop agree)."""
+        while self._rr:
+            cid = self._rr[0]
+            lane = self._lanes[cid]
+            r = lane[0]
+            if r.deadline is None or not r.deadline.expired():
+                return r
+            lane.popleft()
+            self._len -= 1
+            self._shed.append((r, "deadline"))
+            if not lane:
+                self._rr.popleft()
+        return None
+
+    def shed_expired(self, now: Optional[float] = None,
+                     default_deadline_s: Optional[float] = None) -> list:
+        """Sweep EVERY lane for expired requests (the old continuous-engine
+        check only saw the queue head).  Requests without their own deadline
+        fall back to ``default_deadline_s`` measured from enqueue (the
+        engine-level SLO knob).  Returns the shed requests; they are also
+        staged for :meth:`drain_shed`."""
+        now = time.monotonic() if now is None else now
+        shed = []
+        for cid, lane in self._lanes.items():
+            if not lane:
+                continue
+            survivors = []
+            for r in lane:
+                if r.deadline is not None:
+                    late = r.deadline.expired(now)
+                else:
+                    late = (default_deadline_s is not None
+                            and now - r.t_enqueue > default_deadline_s)
+                if late:
+                    shed.append(r)
+                    self._shed.append((r, "deadline"))
+                else:
+                    survivors.append(r)
+            if len(survivors) != len(lane):
+                self._len -= len(lane) - len(survivors)
+                lane.clear()
+                lane.extend(survivors)
+        if shed:
+            self._rr = deque(
+                cid for cid in self._rr if self._lanes[cid])
+        return shed
+
+    def shed(self, request: Request, reason: str) -> None:
+        """Stage an already-popped request as shed (e.g. the continuous
+        engine's page-allocation retry budget ran out); surfaced by the
+        next :meth:`drain_shed`."""
+        self._shed.append((request, reason))
+
+    def drain_shed(self) -> list:
+        """Return-and-clear ``[(request, reason)]`` of everything shed since
+        the last drain (submit-time refusals + queued-deadline expiries)."""
+        out, self._shed = self._shed, []
+        return out
 
     def pop_batch(self, n: int) -> list:
         """Up to ``n`` requests, round-robin across constraint slots."""
@@ -140,6 +240,10 @@ class _EngineMetrics:
             "serving_requests_total", "requests completed, by tenant lane")
         self.rejected = r.counter(
             "serving_rejected_total", "requests rejected at admission")
+        self.shed = r.counter(
+            "requests_shed_total",
+            "requests shed before service, by reason (deadline/breaker_open/"
+            "overload/stale_constraints/kv_pages) — shared across all engines")
         self.latency = r.histogram(
             "serving_request_latency_seconds",
             "per-request enqueue→complete wall time")
@@ -186,6 +290,25 @@ class _EngineMetrics:
         for cid, depth in queue.lane_depths().items():
             self.queue_depth.set(depth, lane=str(cid))
 
+    def record_shed(self, queue, results: dict) -> int:
+        """Drain the queue's shed list into error results + counters.
+
+        Every engine calls this each serve cycle so shed requests surface
+        as ``{"error": ..., "reason": ...}`` results instead of silently
+        vanishing, and the shared ``requests_shed_total{reason}`` family
+        counts them uniformly across engines.
+        """
+        shed = queue.drain_shed()
+        for r, reason in shed:
+            self.rejected.inc(lane=str(r.constraint_id))
+            self.shed.inc(reason=reason)
+            results[r.rid] = {
+                "error": f"shed before admission: {reason}",
+                "reason": reason,
+                "constraint_id": r.constraint_id,
+            }
+        return len(shed)
+
     def record_batch(self, *, n_active: int, slots: int, steps: int,
                      dt: float, compiles: int, expected: bool) -> None:
         self.batches.inc()
@@ -221,13 +344,14 @@ class _EngineMetrics:
 class ServingEngine:
     def __init__(self, params, cfg: TransformerConfig, batch_size: int,
                  max_len: int, *, retriever=None, registry=None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None, breaker=None):
         self.params = params
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_len = max_len
         self.retriever = retriever  # GenerativeRetriever: SID serving mode
         self.registry = registry  # ConstraintRegistry: hot-swappable store
+        self.breaker = breaker  # CircuitBreaker: step outcomes feed it
         self._installed_version = None
         self._m = _EngineMetrics(metrics)
         self._served_batches = 0
@@ -308,10 +432,15 @@ class ServingEngine:
         """
         results: dict[int, dict] = {}
         S = self.max_len // 2  # fixed prompt width => static shapes
+        self._m.record_shed(queue, results)  # submit-time refusals
         while len(queue):
             t_admit = time.monotonic()
+            queue.shed_expired()
             batch = queue.pop_batch(self.batch_size)
+            self._m.record_shed(queue, results)
             self._m.sample_queue(queue)
+            if not batch:
+                continue
             version, cold = None, False
             if self.registry is not None:
                 version, cold = self._install_current_store()
@@ -330,10 +459,35 @@ class ServingEngine:
                     )
                 cids[i] = r.constraint_id
             c0 = compile_events()
-            with annotate("serve_batch"):
-                beams, scores = self.retriever.retrieve(
-                    hist, constraint_ids=cids if num_sets is not None else None
-                )
+            try:
+                fire("decode.slow_step")  # delay => slow batch; error => fail
+                with annotate("serve_batch"):
+                    beams, scores = self.retriever.retrieve(
+                        hist,
+                        constraint_ids=cids if num_sets is not None else None,
+                    )
+            except InjectedFault:
+                # A failed decode step degrades to failed *requests*, never
+                # to unconstrained decoding or an engine crash: the batch is
+                # reported as errored, the breaker absorbs the failure, and
+                # the loop keeps serving (DESIGN.md §13 degradation ladder).
+                if self.breaker is not None:
+                    self.breaker.record_failure()
+                for r in batch:
+                    self._m.rejected.inc(lane=str(r.constraint_id))
+                    self._m.shed.inc(reason="decode_fault")
+                    results[r.rid] = {
+                        "error": "decode step failed (injected fault)",
+                        "reason": "decode_fault",
+                        "constraint_id": r.constraint_id,
+                    }
+                continue
+            except Exception:
+                if self.breaker is not None:
+                    self.breaker.record_failure()
+                raise
+            if self.breaker is not None:
+                self.breaker.record_success()
             t_done = time.monotonic()
             self._m.record_batch(
                 n_active=len(batch), slots=self.batch_size,
@@ -351,6 +505,7 @@ class ServingEngine:
                     **self._m.record_request(r, t_admit, t_done,
                                              n_out=self.retriever.L),
                 }
+        self._m.record_shed(queue, results)
         self._m.sample_queue(queue)
         return results
 
@@ -365,6 +520,7 @@ class ServingEngine:
         if self.retriever is not None:
             return self._serve_retrieval(queue)
         results: dict[int, list] = {}
+        self._m.record_shed(queue, results)  # submit-time refusals
         active: list[Optional[Request]] = [None] * self.batch_size
         admit_t: dict[int, float] = {}
         remaining = np.zeros(self.batch_size, np.int64)
@@ -376,6 +532,8 @@ class ServingEngine:
             for i in range(self.batch_size):
                 if active[i] is None and len(queue):
                     r = queue.pop()
+                    if r is None:  # remaining requests expired while queued
+                        break
                     active[i] = r
                     remaining[i] = r.n_tokens
                     prompts[i, :] = 0

@@ -57,6 +57,7 @@ from repro.observability import (
     compile_events,
     record_policy,
 )
+from repro.reliability.faults import InjectedFault, fire
 from repro.serving.engine import _EngineMetrics
 from repro.serving.generative_retrieval import GenerativeRetriever
 
@@ -213,12 +214,13 @@ class SpmdServingEngine:
 
     def __init__(self, retriever: SpmdRetriever, *, registry=None,
                  slots: Optional[int] = None, prompt_width: int = 8,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None, breaker=None):
         n = retriever._dp_size
         slots = slots if slots is not None else max(2 * n, 4)
         self.slots = -(-slots // n) * n  # static-shape padding rule (§6)
         self.retriever = retriever
         self.registry = registry
+        self.breaker = breaker
         self.prompt_width = prompt_width
         self._installed_version = None
         self._m = _EngineMetrics(metrics)
@@ -240,11 +242,16 @@ class SpmdServingEngine:
         results: dict[int, dict] = {}
         S = self.prompt_width
         batches = 0
+        self._m.record_shed(queue, results)  # submit-time refusals
         while len(queue) and batches < max_batches:
             batches += 1
             t_admit = time.monotonic()
+            queue.shed_expired()
             batch = queue.pop_batch(self.slots)  # round-robin fair admit
+            self._m.record_shed(queue, results)
             self._m.sample_queue(queue)
+            if not batch:
+                continue
             version, cold = None, False
             if self.registry is not None:
                 store, version = self.registry.current()
@@ -281,12 +288,36 @@ class SpmdServingEngine:
                 cids[i] = r.constraint_id
                 active[i] = True
             c0 = compile_events()
-            with annotate("spmd_serve_batch"):
-                beams, scores = self.retriever.retrieve(
-                    hist,
-                    constraint_ids=cids if num_sets is not None else None,
-                    active_mask=active,
-                )
+            try:
+                fire("decode.slow_step")  # delay => slow batch; error => fail
+                with annotate("spmd_serve_batch"):
+                    beams, scores = self.retriever.retrieve(
+                        hist,
+                        constraint_ids=cids if num_sets is not None else None,
+                        active_mask=active,
+                    )
+            except InjectedFault:
+                # degrade to failed requests, not a crashed drain loop (and
+                # never to unconstrained decoding) — DESIGN.md §13
+                if self.breaker is not None:
+                    self.breaker.record_failure()
+                for r in batch:
+                    if r.rid in results:
+                        continue
+                    self._m.rejected.inc(lane=str(r.constraint_id))
+                    self._m.shed.inc(reason="decode_fault")
+                    results[r.rid] = {
+                        "error": "decode step failed (injected fault)",
+                        "reason": "decode_fault",
+                        "constraint_id": r.constraint_id,
+                    }
+                continue
+            except Exception:
+                if self.breaker is not None:
+                    self.breaker.record_failure()
+                raise
+            if self.breaker is not None:
+                self.breaker.record_success()
             t_done = time.monotonic()
             self._m.record_batch(
                 n_active=int(active.sum()), slots=self.slots,
@@ -306,5 +337,6 @@ class SpmdServingEngine:
                     **self._m.record_request(r, t_admit, t_done,
                                              n_out=self.retriever.L),
                 }
+        self._m.record_shed(queue, results)
         self._m.sample_queue(queue)
         return results

@@ -1,0 +1,732 @@
+"""Reliability layer (DESIGN.md §13): fault injection, retry/backoff,
+deadlines, circuit breaker, admission control, and graceful degradation.
+
+The load-bearing assertions:
+
+  * fault schedules are bit-reproducible (same seed -> same fires),
+  * the AsyncRefresher absorbs transient build faults via retry and falls
+    back to the last-good front buffer on terminal failure (staleness
+    gauge > 0, serving continues),
+  * the RequestQueue enforces deadlines at enqueue time and across ALL
+    lanes (the old continuous-engine check only saw the queue head),
+  * under injected faults the engines shed — they never return different
+    bits for a completed request and never decode unconstrained,
+  * the paged-KV ``free ⊎ referenced`` invariant survives injected
+    allocation faults at every interleaving.
+"""
+import json
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.constraints import (
+    ConstraintRegistry,
+    category_allowlist,
+    freshness_window,
+    synthetic_catalog,
+)
+from repro.constraints.refresh import AsyncRefresher
+from repro.constraints.tiering import TieredTrie, TriePrefetcher
+from repro.core import TransitionMatrix
+from repro.decoding import DecodePolicy
+from repro.models import transformer
+from repro.observability import MetricsRegistry, start_http_server
+from repro.reliability import (
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    AdmissionController,
+    CircuitBreaker,
+    Deadline,
+    FaultInjector,
+    FaultSpec,
+    HealthMonitor,
+    InjectedFault,
+    RetryPolicy,
+    active_injector,
+    fire,
+)
+from repro.scenarios import gr_model_config
+from repro.serving.continuous import (
+    ContinuousServingEngine,
+    PagedKVAllocator,
+)
+from repro.serving.engine import RequestQueue, ServingEngine, _EngineMetrics
+from repro.serving.generative_retrieval import GenerativeRetriever
+from conftest import make_sids
+
+
+# ---------------------------------------------------------------------------
+# fault injector: determinism, modes, scoping
+# ---------------------------------------------------------------------------
+def test_unknown_fault_point_rejected_at_construction():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultSpec("decode.slow_stepp")
+    inj = FaultInjector([])
+    with pytest.raises(ValueError, match="unknown fault point"):
+        inj.fire("not.a.point")
+
+
+def test_fire_without_injector_is_noop():
+    fire("decode.slow_step")  # must not raise
+
+
+def test_nth_mode_fires_on_exact_zero_based_calls():
+    inj = FaultInjector([FaultSpec("refresh.build", calls=(0, 2))])
+    with pytest.raises(InjectedFault):
+        inj.fire("refresh.build")
+    inj.fire("refresh.build")  # call 1: clean
+    with pytest.raises(InjectedFault):
+        inj.fire("refresh.build")
+    inj.fire("refresh.build")  # call 3: clean
+    assert inj.calls("refresh.build") == 4
+    assert inj.n_fires("refresh.build") == 2
+
+
+def test_always_mode_respects_max_fires():
+    inj = FaultInjector([
+        FaultSpec("kv.page_alloc", mode="always", max_fires=2)])
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            inj.fire("kv.page_alloc")
+    inj.fire("kv.page_alloc")  # transient exhausted: recovers
+    assert inj.n_fires() == 2
+
+
+def test_prob_mode_bit_reproducible_across_instances():
+    spec = [FaultSpec("tiering.host_fetch", mode="prob", p=0.4)]
+
+    def campaign(seed):
+        inj = FaultInjector(spec, seed=seed)
+        outcomes = []
+        for _ in range(64):
+            try:
+                inj.fire("tiering.host_fetch")
+                outcomes.append(0)
+            except InjectedFault:
+                outcomes.append(1)
+        return outcomes
+
+    assert campaign(7) == campaign(7)
+    assert campaign(7) != campaign(8)  # seed actually matters
+    assert 0 < sum(campaign(7)) < 64
+
+
+def test_delay_fault_sleeps_and_returns():
+    inj = FaultInjector([
+        FaultSpec("decode.slow_step", mode="always", delay_s=0.01)])
+    t0 = time.monotonic()
+    inj.fire("decode.slow_step")  # no raise
+    assert time.monotonic() - t0 >= 0.009
+    assert inj.fires[0][2] == "delay"
+
+
+def test_active_injector_restores_previous():
+    a = FaultInjector([FaultSpec("refresh.swap", mode="always")])
+    with active_injector(a):
+        with active_injector(None):
+            fire("refresh.swap")  # inner scope: faults off
+        with pytest.raises(InjectedFault):
+            fire("refresh.swap")
+    fire("refresh.swap")  # uninstalled again
+
+
+def test_from_json_dict_string_and_on_fire_hook():
+    doc = {"seed": 3, "faults": [
+        {"point": "refresh.build", "mode": "nth", "calls": [1]}]}
+    seen = []
+    inj = FaultInjector.from_json(doc, on_fire=lambda p, i, s: seen.append((p, i)))
+    inj.fire("refresh.build")
+    with pytest.raises(InjectedFault):
+        inj.fire("refresh.build")
+    assert seen == [("refresh.build", 1)]
+    inj2 = FaultInjector.from_json(json.dumps(doc))
+    assert inj2.seed == 3
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+def test_retry_delays_deterministic_and_capped():
+    p = RetryPolicy(max_attempts=8, base_delay_s=0.01, max_delay_s=0.05,
+                    multiplier=2.0, jitter_frac=0.1, seed=4)
+    d1 = [p.delay_s(k) for k in range(8)]
+    d2 = [p.delay_s(k) for k in range(8)]
+    assert d1 == d2
+    assert all(d <= 0.05 * 1.1 + 1e-12 for d in d1)
+    assert d1[0] < d1[2]  # exponential growth before the cap
+
+
+def test_retry_call_absorbs_transients_and_reports():
+    fails = {"n": 2}
+    slept, retried = [], []
+
+    def flaky():
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient")
+        return 42
+
+    p = RetryPolicy(max_attempts=3, base_delay_s=0.01, jitter_frac=0.0)
+    out = p.call(flaky, on_retry=lambda k, e: retried.append(k),
+                 sleep=slept.append)
+    assert out == 42 and retried == [0, 1]
+    assert slept == [p.delay_s(0), p.delay_s(1)]
+
+
+def test_retry_raises_after_budget_and_skips_non_retryable():
+    p = RetryPolicy(max_attempts=2, base_delay_s=0.0, max_delay_s=0.0)
+    with pytest.raises(OSError):
+        p.call(lambda: (_ for _ in ()).throw(OSError()), sleep=lambda s: None)
+    p2 = RetryPolicy(max_attempts=5, retryable=(OSError,))
+    calls = {"n": 0}
+
+    def programming_error():
+        calls["n"] += 1
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        p2.call(programming_error, sleep=lambda s: None)
+    assert calls["n"] == 1  # no retry on a non-retryable
+
+
+# ---------------------------------------------------------------------------
+# deadline
+# ---------------------------------------------------------------------------
+def test_deadline_virtual_time():
+    d = Deadline.after(5.0, now=100.0)
+    assert d.remaining(now=102.0) == pytest.approx(3.0)
+    assert not d.expired(now=104.9)
+    assert d.expired(now=105.0)  # boundary counts as expired
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker + admission control
+# ---------------------------------------------------------------------------
+def make_breaker(metrics=None, **kw):
+    clock = {"t": 0.0}
+    kw.setdefault("failure_threshold", 3)
+    kw.setdefault("recovery_s", 10.0)
+    kw.setdefault("half_open_successes", 2)
+    b = CircuitBreaker(now_fn=lambda: clock["t"], metrics=metrics, **kw)
+    return b, clock
+
+
+def test_breaker_full_ladder_with_metrics():
+    reg = MetricsRegistry()
+    b, clock = make_breaker(metrics=reg)
+    for _ in range(2):
+        b.record_failure()
+    assert b.state == CLOSED  # under threshold
+    b.record_success()
+    for _ in range(3):
+        b.record_failure()
+    assert b.state == OPEN
+    assert not b.allow()  # still within recovery window
+    clock["t"] = 10.0
+    assert b.allow()  # probe admitted
+    assert b.state == HALF_OPEN
+    b.record_success()
+    assert b.state == HALF_OPEN  # needs 2 consecutive probe successes
+    b.record_success()
+    assert b.state == CLOSED
+    g = reg.gauge("circuit_breaker_state")
+    assert g.value(name="serving") == 0.0
+    t = reg.counter("circuit_breaker_transitions_total")
+    assert t.value(name="serving", **{"from": "closed", "to": "open"}) == 1
+    assert t.value(name="serving", **{"from": "half_open", "to": "closed"}) == 1
+
+
+def test_breaker_probe_failure_reopens():
+    b, clock = make_breaker()
+    for _ in range(3):
+        b.record_failure()
+    clock["t"] = 10.0
+    assert b.allow() and b.state == HALF_OPEN
+    b.record_failure()
+    assert b.state == OPEN
+    assert not b.allow()  # recovery clock restarted at the probe failure
+    clock["t"] = 20.0
+    assert b.allow() and b.state == HALF_OPEN
+
+
+def test_admission_reason_precedence():
+    b, clock = make_breaker()
+    for _ in range(3):
+        b.record_failure()
+    ac = AdmissionController(
+        breaker=b, max_queue_depth=2,
+        staleness_fn=lambda: 99.0, staleness_bound_s=1.0)
+    expired = Deadline.after(-1.0)
+    assert ac.admit_reason(0, deadline=expired) == "deadline"
+    assert ac.admit_reason(0) == "breaker_open"
+    clock["t"] = 10.0
+    b.record_success()
+    b.record_success()  # close it
+    assert ac.admit_reason(5) == "overload"
+    assert ac.admit_reason(0) == "stale_constraints"
+    ac2 = AdmissionController()
+    assert ac2.admit_reason(10_000) is None
+
+
+# ---------------------------------------------------------------------------
+# request queue: enqueue-time deadlines, all-lane sweeps, shed plumbing
+# ---------------------------------------------------------------------------
+def _req(q, cid=0, deadline_s=None):
+    return q.submit(np.zeros(4, np.int32), 3, cid, deadline_s=deadline_s)
+
+
+def test_submit_sheds_expired_deadline_at_enqueue():
+    q = RequestQueue()
+    rid = _req(q, deadline_s=-1.0)
+    assert len(q) == 0  # never entered a lane
+    shed = q.drain_shed()
+    assert [(r.rid, reason) for r, reason in shed] == [(rid, "deadline")]
+
+
+def test_submit_consults_admission_controller():
+    q = RequestQueue(admission=AdmissionController(max_queue_depth=1))
+    _req(q)
+    rid2 = _req(q)
+    assert len(q) == 1
+    (r, reason), = q.drain_shed()
+    assert r.rid == rid2 and reason == "overload"
+
+
+def test_queue_overload_fault_point_sheds():
+    inj = FaultInjector([FaultSpec("queue.overload", calls=(1,))])
+    q = RequestQueue()
+    with active_injector(inj):
+        _req(q)
+        _req(q)
+    assert len(q) == 1
+    (_, reason), = q.drain_shed()
+    assert reason == "overload"
+
+
+def test_pop_and_peek_skip_requests_expired_while_queued():
+    q = RequestQueue()
+    r0 = _req(q, deadline_s=60.0)
+    r1 = _req(q)
+    for lane in q._lanes.values():
+        for req in lane:
+            if req.rid == r0:  # age it past its deadline without sleeping
+                object.__setattr__(req.deadline, "t_deadline", 0.0)
+    assert q.peek().rid == r1  # peek sheds the expired head
+    got = q.pop()
+    assert got.rid == r1 and q.pop() is None
+    assert [r.rid for r, _ in q.drain_shed()] == [r0]
+
+
+def test_shed_expired_sweeps_every_lane_not_just_heads():
+    # regression: the old continuous-engine check only saw the queue head,
+    # so an expired request deep inside a lane hid behind fresh traffic
+    q = RequestQueue()
+    fresh0 = _req(q, cid=0)
+    late = _req(q, cid=0, deadline_s=60.0)
+    fresh1 = _req(q, cid=1)
+    for lane in q._lanes.values():
+        for req in lane:
+            if req.rid == late:
+                object.__setattr__(req.deadline, "t_deadline", 0.0)
+    shed = q.shed_expired()
+    assert [r.rid for r in shed] == [late]
+    assert len(q) == 2
+    assert {q.pop().rid, q.pop().rid} == {fresh0, fresh1}
+
+
+def test_shed_expired_engine_default_deadline():
+    q = RequestQueue()
+    rid = _req(q)
+    for lane in q._lanes.values():
+        lane[0].t_enqueue -= 99.0
+    assert q.shed_expired(default_deadline_s=10.0)[0].rid == rid
+    assert len(q) == 0
+
+
+def test_record_shed_surfaces_results_and_counters():
+    q = RequestQueue()
+    rid = _req(q, cid=2, deadline_s=-1.0)
+    m = _EngineMetrics(MetricsRegistry())
+    results = {}
+    assert m.record_shed(q, results) == 1
+    assert results[rid]["reason"] == "deadline"
+    assert "error" in results[rid] and results[rid]["constraint_id"] == 2
+    assert m.shed.value(reason="deadline") == 1
+    assert m.rejected.value(lane="2") == 1
+    assert q.drain_shed() == []  # drained exactly once
+
+
+# ---------------------------------------------------------------------------
+# refresher: retry, last-good fallback, staleness, drain
+# ---------------------------------------------------------------------------
+V, L = 16, 3
+
+
+@pytest.fixture
+def small_registry(rng):
+    registry = ConstraintRegistry(V, dense_d=0, headroom=0.5)
+    registry.register("fresh", freshness_window(60.0))
+    registry.register("cats", category_allowlist(0, 1))
+    registry.build(synthetic_catalog(rng, 60, V, L))
+    return registry
+
+
+def test_refresher_absorbs_transient_build_faults(small_registry, rng):
+    reg = MetricsRegistry()
+    v0 = small_registry.current()[1]
+    with AsyncRefresher(small_registry, metrics=reg) as ref:
+        inj = FaultInjector([
+            FaultSpec("refresh.build", mode="always", max_fires=2)])
+        with active_injector(inj):
+            fut = ref.swap_async(synthetic_catalog(rng, 60, V, L))
+            assert ref.drain(timeout=30.0)  # drain spans in-flight retries
+            assert fut.result(timeout=5.0) == v0 + 1
+        assert reg.counter("refresh_retries_total").total() == 2
+        assert reg.counter("refresh_ops_total").value(
+            kind="snapshot", outcome="failed") == 0
+        assert ref.staleness_seconds() == 0.0
+
+
+def test_refresher_terminal_failure_keeps_last_good_store(small_registry, rng):
+    reg = MetricsRegistry()
+    store0, v0 = small_registry.current()
+    with AsyncRefresher(small_registry, metrics=reg) as ref:
+        inj = FaultInjector([FaultSpec("refresh.build", mode="always")])
+        with active_injector(inj):
+            fut = ref.swap_async(synthetic_catalog(rng, 60, V, L))
+            assert ref.drain(timeout=30.0)
+        with pytest.raises(InjectedFault):
+            fut.result(timeout=5.0)
+        store1, v1 = small_registry.current()
+        assert v1 == v0 and store1 is store0  # last-good, untouched
+        assert ref.staleness_seconds() > 0.0  # behind, and says so
+        assert reg.counter("refresh_ops_total").value(
+            kind="snapshot", outcome="failed") == 1
+        # next clean swap converges and the staleness clock clears
+        fut2 = ref.swap_async(synthetic_catalog(rng, 60, V, L))
+        assert ref.drain(timeout=30.0)
+        assert fut2.result(timeout=5.0) == v0 + 1
+        assert ref.staleness_seconds() == 0.0
+
+
+def test_refresher_swap_fault_leaves_front_buffer_consistent(
+        small_registry, rng):
+    # refresh.swap fires just before the flip: the whole op fails but the
+    # front buffer was never half-written (transactional by construction)
+    store0, v0 = small_registry.current()
+    with AsyncRefresher(small_registry) as ref:
+        inj = FaultInjector([FaultSpec("refresh.swap", mode="always")])
+        with active_injector(inj):
+            fut = ref.swap_async(synthetic_catalog(rng, 60, V, L))
+            assert ref.drain(timeout=30.0)
+        with pytest.raises(InjectedFault):
+            fut.result(timeout=5.0)
+    assert small_registry.current()[1] == v0
+
+
+# ---------------------------------------------------------------------------
+# tiering prefetcher: retry inside the overlap window
+# ---------------------------------------------------------------------------
+def test_prefetch_retry_bit_identical_and_terminal_surfaces(rng):
+    tm = TransitionMatrix.from_sids(make_sids(rng, 50, V, L), V, dense_d=0)
+    tiered = TieredTrie.from_matrix(tm, hot_steps=1)
+    nodes = rng.integers(1, tm.n_states, size=6).astype(np.int32)
+    g_ref, l_ref = tiered.gather_cold(nodes, 1)
+    metrics = MetricsRegistry()
+    with TriePrefetcher(tiered, metrics=metrics) as pf:
+        inj = FaultInjector([
+            FaultSpec("tiering.host_fetch", mode="always", max_fires=2)])
+        with active_injector(inj):
+            g, lens = pf.prefetch(nodes, 1).result(timeout=30.0)
+        np.testing.assert_array_equal(np.asarray(g), g_ref)
+        np.testing.assert_array_equal(np.asarray(lens), l_ref)
+        assert metrics.counter("tiering_fetch_retries_total").total() == 2
+        with active_injector(FaultInjector(
+                [FaultSpec("tiering.host_fetch", mode="always")])):
+            fut = pf.prefetch(nodes, 1)
+            with pytest.raises(InjectedFault):
+                fut.result(timeout=30.0)  # search stops; no fallback
+
+
+# ---------------------------------------------------------------------------
+# health endpoint
+# ---------------------------------------------------------------------------
+def test_healthz_endpoint_reflects_breaker_and_staleness():
+    reg = MetricsRegistry()
+    b, clock = make_breaker()
+    stale = {"s": 0.0}
+    health = HealthMonitor(breaker=b, staleness_fn=lambda: stale["s"],
+                           staleness_bound_s=5.0, metrics=reg)
+    server, port = start_http_server(reg, port=0, health=health)
+    try:
+        def get(path):
+            try:
+                with urllib.request.urlopen(
+                        f"http://127.0.0.1:{port}{path}") as resp:
+                    return resp.status, resp.read().decode()
+            except urllib.error.HTTPError as e:
+                return e.code, e.read().decode()
+
+        code, body = get("/healthz")
+        assert code == 200 and json.loads(body)["ready"] is True
+        assert get("/livez")[0] == 200
+        assert "circuit_breaker" not in get("/metrics")[1] or True
+
+        for _ in range(3):
+            b.record_failure()
+        code, body = get("/healthz")
+        payload = json.loads(body)
+        assert code == 503 and payload["reasons"] == ["breaker_open"]
+        clock["t"] = 10.0
+        b.allow()
+        b.record_success()
+        b.record_success()
+        stale["s"] = 30.0  # degraded past the bound: stale, not dead
+        code, body = get("/readyz")
+        payload = json.loads(body)
+        assert code == 503 and payload["reasons"] == ["stale_constraints"]
+        assert payload["constraint_staleness_seconds"] == 30.0
+        stale["s"] = 1.0  # degraded-but-serving stays ready
+        assert get("/healthz")[0] == 200
+        assert get("/livez")[0] == 200  # liveness never flips
+    finally:
+        server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz: schedules, allocator, refresher-vs-oracle, engine bits
+# (importorskip stays inside each test so the directed tests above always run)
+# ---------------------------------------------------------------------------
+def test_fuzz_schedule_replay_is_exact():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.5))
+    def run_case(seed, p):
+        spec = [FaultSpec("kv.page_alloc", mode="prob", p=p),
+                FaultSpec("decode.slow_step", mode="nth", calls=(1, 4))]
+
+        def run():
+            inj = FaultInjector(spec, seed=seed)
+            for point in ("kv.page_alloc", "decode.slow_step") * 16:
+                try:
+                    inj.fire(point)
+                except InjectedFault:
+                    pass
+            return inj.fires
+
+        assert run() == run()
+
+    run_case()
+
+
+def test_fuzz_allocator_invariant_under_injected_faults():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.sampled_from(["alloc", "release"]), min_size=1,
+                    max_size=60),
+           st.integers(0, 2**31 - 1))
+    def run_case(ops, seed):
+        a = PagedKVAllocator(9)
+        held = []
+        inj = FaultInjector(
+            [FaultSpec("kv.page_alloc", mode="prob", p=0.3)], seed=seed,
+            on_fire=lambda p, i, s: a.check())  # invariant AT the fault
+        with active_injector(inj):
+            for op in ops:
+                if op == "alloc":
+                    try:
+                        held.append(a.alloc(2))
+                    except (MemoryError, InjectedFault):
+                        pass
+                elif held:
+                    a.release(held.pop())
+                a.check()  # and after every mutation
+        for pages in held:
+            a.release(pages)
+        a.check()
+        assert a.n_free == 8 and a.n_referenced == 0
+
+    run_case()
+
+
+def test_fuzz_refresher_with_faults_matches_oracle():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    # each op suffers k in [0, 2] injected build failures; the retry policy
+    # (3 attempts) absorbs every schedule, so the faulted registry must
+    # land exactly where a fault-free oracle lands
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.integers(0, 2), min_size=1, max_size=4),
+           st.integers(0, 2**31 - 1))
+    def run_case(fault_counts, seed):
+        rng = np.random.default_rng(seed)
+        catalogs = [synthetic_catalog(rng, 50, V, L)
+                    for _ in range(len(fault_counts))]
+        faulted = ConstraintRegistry(V, dense_d=0, headroom=0.5)
+        oracle = ConstraintRegistry(V, dense_d=0, headroom=0.5)
+        for r in (faulted, oracle):
+            r.register("fresh", freshness_window(60.0))
+            r.register("cats", category_allowlist(0, 1))
+            r.build(synthetic_catalog(np.random.default_rng(seed), 50, V, L))
+        with AsyncRefresher(faulted) as ref:
+            for k, cat in zip(fault_counts, catalogs):
+                inj = FaultInjector([FaultSpec(
+                    "refresh.build", mode="always", max_fires=k)])
+                with active_injector(inj):
+                    fut = ref.swap_async(cat)
+                    assert ref.drain(timeout=30.0)
+                    fut.result(timeout=5.0)
+                oracle.swap(cat)
+        assert faulted.current()[1] == oracle.current()[1]
+        a = jax.tree_util.tree_leaves(faulted.current()[0])
+        b = jax.tree_util.tree_leaves(oracle.current()[0])
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    run_case()
+
+
+def test_fuzz_breaker_state_machine_invariants():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.sampled_from(["ok", "fail", "tick"]), min_size=1,
+                    max_size=40))
+    def run_case(events):
+        b, clock = make_breaker(failure_threshold=2, recovery_s=5.0,
+                                half_open_successes=1)
+        consecutive_failures = 0
+        for ev in events:
+            before = b.state
+            if ev == "ok":
+                b.record_success()
+                consecutive_failures = 0
+                # success while OPEN does NOT close the breaker: only an
+                # allow()-admitted probe (HALF_OPEN) can earn the way back
+                if before == OPEN:
+                    assert b.state == OPEN
+                else:
+                    assert b.state in (CLOSED, HALF_OPEN)
+            elif ev == "fail":
+                b.record_failure()
+                consecutive_failures += 1
+                if before == CLOSED and consecutive_failures < 2:
+                    assert b.state == CLOSED
+            else:
+                clock["t"] += 3.0
+            assert b.state in (CLOSED, HALF_OPEN, OPEN)
+            if b.state == CLOSED:
+                assert b.allow()  # allow() never transitions a CLOSED breaker
+
+    run_case()
+
+
+# ---------------------------------------------------------------------------
+# engine-level: bit-identity under injected faults (tiny stack)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def rel_stack():
+    rng = np.random.default_rng(23)
+    vocab, sid_len, beam = 32, 3, 4
+    cfg = gr_model_config(vocab)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    catalog = synthetic_catalog(rng, 300, vocab, sid_len)
+    registry = ConstraintRegistry(vocab, dense_d=0, headroom=0.5)
+    registry.register("fresh", freshness_window(60.0))
+    registry.register("cats", category_allowlist(0, 1, 2, 3))
+    registry.build(catalog)
+    policy = DecodePolicy.stacked(registry.current()[0])
+    retr = GenerativeRetriever(params, cfg, policy, sid_len, vocab,
+                               beam_size=beam)
+    seq = ServingEngine(params, cfg, batch_size=3, max_len=16,
+                        retriever=retr, registry=registry)
+    cont = ContinuousServingEngine(
+        retr, registry=registry, slots=4, prompt_width=8, page_size=4,
+        prefill_chunk=2, share_width=12)
+    prompts = rng.integers(0, vocab, size=(6, 8)).astype(np.int32)
+    return dict(vocab=vocab, L=sid_len, seq=seq, cont=cont, prompts=prompts)
+
+
+def _serve(stack, engine, injector=None):
+    q = RequestQueue()
+    for i, p in enumerate(stack["prompts"]):
+        q.submit(p, stack["L"], int(i % 2))
+    with active_injector(injector):
+        results = {}
+        while True:
+            results.update(engine.serve(q))
+            if not len(q):
+                return results
+
+
+@pytest.mark.parametrize("engine_key", ["seq", "cont"])
+def test_engines_bit_identical_under_directed_faults(rel_stack, engine_key):
+    engine = rel_stack[engine_key]
+    ref = _serve(rel_stack, engine)
+    inj = FaultInjector([
+        FaultSpec("decode.slow_step", mode="nth", calls=(0,), delay_s=0.002),
+        FaultSpec("decode.slow_step", mode="nth", calls=(1,)),  # error
+        FaultSpec("kv.page_alloc", mode="nth", calls=(1,)),
+        FaultSpec("queue.overload", mode="nth", calls=(2,)),
+    ], seed=5)
+    faulted = _serve(rel_stack, engine, inj)
+    assert inj.n_fires() >= 2
+    completed = [rid for rid, r in faulted.items() if "sids" in r]
+    assert completed, "faults shed every request"
+    for rid in completed:
+        np.testing.assert_array_equal(ref[rid]["sids"], faulted[rid]["sids"])
+        np.testing.assert_array_equal(
+            ref[rid]["scores"], faulted[rid]["scores"])
+    for rid, r in faulted.items():
+        if "sids" not in r:
+            assert "reason" in r  # shed is visible, never silent
+    if engine_key == "cont":
+        engine.alloc.check()
+    assert int(engine.metrics.counter("serving_recompiles_total")
+               .value(expected="false")) == 0
+
+
+def test_fuzz_continuous_engine_bits_under_random_schedules(rel_stack):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    engine = rel_stack["cont"]
+    ref = _serve(rel_stack, engine)
+
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def run_case(seed):
+        r = np.random.default_rng(seed)
+        specs = [FaultSpec("decode.slow_step", mode="prob", p=0.2,
+                           delay_s=0.001)]
+        if r.random() < 0.5:
+            specs.append(FaultSpec(
+                "kv.page_alloc", mode="nth",
+                calls=tuple(int(c) for c in r.integers(0, 6, size=2))))
+        if r.random() < 0.5:
+            specs.append(FaultSpec("queue.overload", mode="nth",
+                                   calls=(int(r.integers(0, 6)),)))
+        faulted = _serve(rel_stack, engine,
+                         FaultInjector(specs, seed=seed,
+                                       on_fire=lambda p, i, s:
+                                       engine.alloc.check()))
+        for rid, res in faulted.items():
+            if "sids" in res:
+                np.testing.assert_array_equal(ref[rid]["sids"], res["sids"])
+                np.testing.assert_array_equal(
+                    ref[rid]["scores"], res["scores"])
+        engine.alloc.check()
+
+    run_case()
